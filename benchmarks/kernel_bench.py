@@ -1,0 +1,59 @@
+"""Wall-time microbenchmarks of the fabric-mapped signal ops and kernels
+(jitted JAX on this host's CPU — for harness completeness; TPU numbers
+come from the roofline, not from this box)."""
+
+from __future__ import annotations
+
+import time
+from typing import Callable, List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _bench(fn: Callable, *args, iters: int = 20) -> float:
+    out = fn(*args)
+    jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters * 1e6   # us
+
+
+def rows() -> List[Tuple[str, float, str]]:
+    from repro import signal as sig
+    from repro.core import bitwidth as bw
+    from repro.kernels import bitserial_matmul
+
+    rng = np.random.default_rng(0)
+    out = []
+
+    for n in (256, 1024, 4096):
+        z = jnp.asarray(rng.standard_normal((8, n))
+                        + 1j * rng.standard_normal((8, n)),
+                        dtype=jnp.complex64)
+        f = jax.jit(lambda x: sig.fft(x))
+        us = _bench(f, z)
+        ref = jax.jit(jnp.fft.fft)
+        us_ref = _bench(ref, z)
+        out.append((f"fabric_fft{n}_b8", us, f"vs jnp.fft {us_ref:.0f}us"))
+
+    x = jnp.asarray(rng.standard_normal((8, 4096)), jnp.float32)
+    h = jnp.asarray(rng.standard_normal(80), jnp.float32)
+    out.append(("fabric_fir4096_t80", _bench(jax.jit(sig.fir), x, h), ""))
+    out.append(("fabric_fir_phased8", _bench(
+        jax.jit(lambda a, b: sig.fir_phased(a, b, 8)), x, h), ""))
+
+    xs = jnp.asarray(rng.standard_normal((4, 16384)), jnp.float32)
+    out.append(("stft_16k_f256", _bench(
+        jax.jit(lambda a: sig.stft(a, 256, 128)), xs), ""))
+
+    a = jnp.asarray(rng.integers(-128, 128, (256, 512)), jnp.int32)
+    w = jnp.asarray(rng.integers(-8, 8, (512, 256)), jnp.int32)
+    out.append(("bitserial_mm_8x4_256", _bench(
+        lambda: bitserial_matmul(a, w, 8, 4)), "interpret-mode pallas"))
+    out.append(("plane_matmul_8x4_256", _bench(
+        jax.jit(lambda aa, ww: bw.plane_matmul(aa, ww, 8, 4)), a, w), ""))
+    return out

@@ -1,0 +1,68 @@
+"""Variable-bitwidth serving demo: the SigDLA computing array (paper §IV)
+as an LLM weight-quantization backend.
+
+- quantize a small LM's weights to int8 / int4 (per-channel symmetric),
+- serve batched greedy generations from the engine,
+- show that the bitserial Pallas kernel's integer GEMM reproduces the
+  dequantized matmul bit-for-bit at the integer level.
+
+    PYTHONPATH=src python examples/quantized_serving.py
+"""
+
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def main():
+    from repro.configs import get_config
+    from repro.core import bitwidth as bw
+    from repro.kernels import bitserial_matmul
+    from repro.models.zoo import get_model
+    from repro.serving import ServingEngine, quantize_tree
+    from repro.serving.quantized import quantized_bytes
+
+    cfg = get_config("starcoder2-3b").reduced(
+        n_layers=2, d_model=64, n_heads=4, d_ff=128, vocab=512)
+    bundle = get_model(cfg)
+    params = bundle.init(jax.random.PRNGKey(0))
+    raw_bytes = sum(l.size * l.dtype.itemsize
+                    for l in jax.tree_util.tree_leaves(params))
+
+    prompts = [[5, 6, 7], [100, 101], [7, 8, 9, 10]]
+    outs = {}
+    for bits in (0, 8, 4):
+        eng = ServingEngine(bundle, batch_size=4, quant_bits=bits)
+        eng.load(params)
+        outs[bits] = eng.generate(prompts, max_new=8)
+        if bits:
+            q, s = quantize_tree(params, bits, min_size=1024)
+            print(f"int{bits}: weight bytes "
+                  f"{quantized_bytes(q, s, bits)/1e3:.0f}K"
+                  f" (fp {raw_bytes/1e3:.0f}K), "
+                  f"greedy tokens match fp: "
+                  f"{sum(a == b for a, b in zip(outs[bits], outs[0]))}/3")
+
+    # bitserial kernel == fake-quant reference at the integer level
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.standard_normal((16, 64)), jnp.float32)
+    w = jnp.asarray(rng.standard_normal((64, 32)), jnp.float32)
+    wq, ws = bw.quantize(w, 4, axis=0)
+    xq, xs = bw.quantize(x, 8, axis=-1)
+    int_kernel = bitserial_matmul(xq, wq, a_width=8, w_width=4)
+    int_ref = np.asarray(xq, np.int64) @ np.asarray(wq, np.int64)
+    print("bitserial kernel == integer reference:",
+          bool(np.array_equal(np.asarray(int_kernel), int_ref)))
+    deq = np.asarray(int_kernel, np.float32) * np.asarray(xs) * np.asarray(ws)
+    rel = np.abs(deq - np.asarray(x @ w)).mean() / np.abs(
+        np.asarray(x @ w)).mean()
+    print(f"dequantized int8x int4 GEMM vs fp32: mean rel err {rel:.3%}")
+
+
+if __name__ == "__main__":
+    main()

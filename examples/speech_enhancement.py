@@ -1,0 +1,115 @@
+"""The paper's Fig 9 pipeline, end to end on the unified accelerator path:
+
+    noisy speech -> STFT (fabric FFT) -> CNN mask -> masked spectrum
+                 -> iSTFT (fabric iFFT) -> enhanced speech
+
+Everything — framing, FFT butterflies, the mask CNN, the inverse — runs in
+ONE jit'd XLA program (the TPU analogue of SigDLA keeping the whole
+pipeline on-chip; the "independent DSP-DLA" baseline is modelled by the
+perf benchmark fig10).  The tiny mask CNN is trained for a few steps on
+synthetic noisy/clean pairs and the SNR improvement is reported.
+
+    PYTHONPATH=src python examples/speech_enhancement.py [--steps 60]
+"""
+
+import argparse
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+FRAME, HOP = 256, 128
+
+
+def init_cnn(key, ch=(2, 12, 12, 1)):
+    ks = jax.random.split(key, len(ch) - 1)
+    return [
+        (jax.random.normal(k, (3, 3, ci, co)) * (1.0 / np.sqrt(9 * ci)))
+        for k, ci, co in zip(ks, ch[:-1], ch[1:])
+    ]
+
+
+def cnn_mask(params, feat):
+    """feat: (B, T, F, 2) log-mag + phase-ish features -> mask (B, T, F)."""
+    x = feat
+    for i, w in enumerate(params):
+        x = jax.lax.conv_general_dilated(
+            x, w, (1, 1), "SAME", dimension_numbers=("NHWC", "HWIO",
+                                                     "NHWC"))
+        if i < len(params) - 1:
+            x = jax.nn.gelu(x)
+    return jax.nn.sigmoid(x[..., 0])
+
+
+def pipeline(params, noisy):
+    """Full fabric-mapped enhancement: returns (enhanced, spec, mask)."""
+    from repro import signal as sig
+    spec = sig.stft(noisy, FRAME, HOP)                      # (B, T, 256) cplx
+    mag = jnp.abs(spec)
+    feat = jnp.stack([jnp.log1p(mag), jnp.cos(jnp.angle(spec))], axis=-1)
+    mask = cnn_mask(params, feat)                           # (B, T, 256)
+    enhanced_spec = spec * mask.astype(spec.dtype)
+    out = sig.istft(enhanced_spec, HOP, length=noisy.shape[-1])
+    return out, spec, mask
+
+
+def snr_db(clean, x):
+    num = jnp.sum(clean ** 2, -1)
+    den = jnp.sum((x - clean) ** 2, -1) + 1e-9
+    return 10.0 * jnp.log10(num / den)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=60)
+    ap.add_argument("--batch", type=int, default=4)
+    args = ap.parse_args()
+
+    from repro.data import SignalStream
+
+    stream = SignalStream(length=4096, global_batch=args.batch, seed=0)
+    params = init_cnn(jax.random.PRNGKey(0))
+
+    def loss_fn(p, noisy, clean):
+        out, _, _ = pipeline(p, noisy)
+        edge = FRAME  # OLA edges
+        return jnp.mean((out[:, edge:-edge] - clean[:, edge:-edge]) ** 2)
+
+    @jax.jit
+    def step(p, noisy, clean):
+        l, g = jax.value_and_grad(loss_fn)(p, noisy, clean)
+        return l, [w - 0.05 * gw for w, gw in zip(p, g)]
+
+    run = jax.jit(pipeline)
+    b0 = stream.batch_at(10_000)
+    noisy0 = jnp.asarray(b0["noisy"]); clean0 = jnp.asarray(b0["clean"])
+    out0, _, _ = run(params, noisy0)
+    snr_before_train = float(jnp.mean(snr_db(clean0[:, FRAME:-FRAME],
+                                             out0[:, FRAME:-FRAME])))
+    snr_noisy = float(jnp.mean(snr_db(clean0[:, FRAME:-FRAME],
+                                      noisy0[:, FRAME:-FRAME])))
+
+    for i in range(args.steps):
+        b = stream.batch_at(i)
+        l, params = step(params, jnp.asarray(b["noisy"]),
+                         jnp.asarray(b["clean"]))
+        if i % 20 == 0:
+            print(f"step {i:4d} loss {float(l):.4f}")
+
+    out1, _, mask = run(params, noisy0)
+    snr_after = float(jnp.mean(snr_db(clean0[:, FRAME:-FRAME],
+                                      out1[:, FRAME:-FRAME])))
+    print(f"\ninput SNR          : {snr_noisy:6.2f} dB")
+    print(f"enhanced (untrained): {snr_before_train:6.2f} dB")
+    print(f"enhanced (trained)  : {snr_after:6.2f} dB")
+    print(f"mask mean           : {float(mask.mean()):.3f}")
+    assert snr_after > snr_noisy, "enhancement must beat the noisy input"
+    print("OK: fabric STFT -> CNN -> iSTFT pipeline improves SNR")
+
+
+if __name__ == "__main__":
+    main()

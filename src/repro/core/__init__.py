@@ -1,0 +1,15 @@
+"""SigDLA core: the paper's contribution as composable JAX modules.
+
+- shuffle_ir / shuffle_compiler: the programmable shuffling-fabric ISA
+  (faithful functional + cycle semantics).
+- fabric: compiled shuffle plans and their TPU-side execution.
+- signal_mapping: FFT / FIR / DCT / DWT -> shuffle plans + GEMMs.
+- bitwidth: the variable-bitwidth (4/8/16-bit) computing-array arithmetic.
+- perf_model: cycle/energy/area model reproducing the paper's evaluation.
+"""
+
+from . import bitwidth, fabric, perf_model, shuffle_compiler, shuffle_ir, signal_mapping
+from .fabric import PAD, ShufflePlan, apply_plan
+
+__all__ = ["bitwidth", "fabric", "perf_model", "shuffle_compiler",
+           "shuffle_ir", "signal_mapping", "PAD", "ShufflePlan", "apply_plan"]

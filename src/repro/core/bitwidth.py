@@ -1,0 +1,120 @@
+"""Variable-bitwidth arithmetic: the SigDLA computing array (paper §IV).
+
+The array is built from 4-bit multipliers; 8/16-bit multiplies are
+decomposed recursively into 4-bit plane products recombined with shift-add
+(Fig. 2: shifts 0/4/4/8 for 8x8, up to 24 for 16x16).  We model the operand
+decomposition exactly:
+
+    a = sum_i a_i * 16^i ,  a_i in [0,16) for i < k-1,  top digit signed
+
+so a WxW product is sum_{i,j} a_i * w_j << 4(i+j) — *bit-exact* with the
+int32 product.  `plane_matmul` is the jnp composition used by the Pallas
+kernel oracle (kernels/bitserial_mm/ref.py); the kernel itself performs the
+same per-plane matmuls on the MXU with int8 operands.
+
+Also provides symmetric per-channel quantization used by the quantized
+serving path (serving/engine.py) — the IoT-style 4/8/16-bit menu of the
+paper mapped onto LLM weight quantization.
+"""
+
+from __future__ import annotations
+
+from typing import List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+VALID_WIDTHS = (4, 8, 16)
+
+
+def n_planes(width: int) -> int:
+    if width not in VALID_WIDTHS:
+        raise ValueError(f"width must be one of {VALID_WIDTHS}")
+    return width // 4
+
+
+def split_planes(x: jax.Array, width: int) -> List[jax.Array]:
+    """Decompose signed ``width``-bit integers into base-16 digit planes.
+
+    Lower planes are unsigned in [0, 16); the top plane is the signed
+    arithmetic remainder, so sum_i plane_i * 16^i == x exactly.  Planes are
+    returned as int8 (they feed int8 MXU passes on hardware).
+    """
+    k = n_planes(width)
+    x = x.astype(jnp.int32)
+    planes = []
+    for i in range(k):
+        if i < k - 1:
+            planes.append(((x >> (4 * i)) & 0xF).astype(jnp.int8))
+        else:
+            planes.append((x >> (4 * i)).astype(jnp.int8))  # arithmetic: keeps sign
+    return planes
+
+
+def compose_planes(planes: List[jax.Array]) -> jax.Array:
+    acc = jnp.zeros_like(planes[0], dtype=jnp.int32)
+    for i, p in enumerate(planes):
+        acc = acc + (p.astype(jnp.int32) << (4 * i))
+    return acc
+
+
+def plane_matmul(a: jax.Array, w: jax.Array,
+                 a_width: int, w_width: int) -> jax.Array:
+    """Exact integer matmul via 4-bit plane decomposition (the SigDLA array).
+
+    a: (..., M, K) signed ints of a_width bits; w: (K, N) of w_width bits.
+    Result: int32 (..., M, N), bit-exact with the direct product **in
+    32-bit two's-complement arithmetic** — i.e. equal to the true product
+    mod 2^32, exactly like the array's fixed-width accumulator (NVDLA-class
+    accumulators saturate/wrap too; per-plane partial sums are themselves
+    exact: |4b x 4b| <= 225, so int32 holds them for K up to ~9.5M).
+    Shift schedule is 4*(i+j): 0/4/4/8 for 8x8, max 24 for 16x16 (Fig 2).
+    """
+    a_planes = split_planes(a, a_width)
+    w_planes = split_planes(w, w_width)
+    acc = None
+    for i, ap in enumerate(a_planes):
+        for j, wp in enumerate(w_planes):
+            part = jnp.matmul(ap.astype(jnp.int32), wp.astype(jnp.int32))
+            part = part << (4 * (i + j))
+            acc = part if acc is None else acc + part
+    return acc
+
+
+def macs_per_cycle(a_width: int, w_width: int, n_mult4: int = 128) -> float:
+    """Throughput of the serial array: one WxW MAC consumes
+    (a_width/4)*(w_width/4) four-bit multipliers (paper §IV / Fig 7)."""
+    return n_mult4 / (n_planes(a_width) * n_planes(w_width))
+
+
+# --------------------------------------------------------------------------
+# Quantization helpers (per-channel symmetric)
+# --------------------------------------------------------------------------
+
+def quantize(x: jax.Array, width: int, axis: int = -1
+             ) -> Tuple[jax.Array, jax.Array]:
+    """Symmetric per-channel quantization to signed ``width``-bit ints.
+
+    Returns (q, scale) with x ~= q * scale; q in [-(2^(w-1)-1), 2^(w-1)-1].
+    """
+    qmax = float(2 ** (width - 1) - 1)
+    amax = jnp.max(jnp.abs(x), axis=axis, keepdims=True)
+    scale = jnp.maximum(amax, 1e-8) / qmax
+    q = jnp.clip(jnp.round(x / scale), -qmax, qmax).astype(jnp.int32)
+    return q, scale
+
+
+def dequantize(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale
+
+
+def quantized_matmul(x: jax.Array, wq: jax.Array, w_scale: jax.Array,
+                     a_width: int = 8, w_width: int = 4) -> jax.Array:
+    """Fake-int path used as reference for the bitserial kernel-backed linear:
+    quantize activations per-row, integer matmul via plane decomposition,
+    dequantize with the product of scales."""
+    xq, x_scale = quantize(x, a_width, axis=-1)
+    acc = plane_matmul(xq, wq, a_width, w_width)
+    # x_scale: (..., M, 1); w_scale (per out-channel, quantize axis=0): (1, N)
+    return acc.astype(jnp.float32) * x_scale * w_scale

@@ -1,0 +1,125 @@
+"""The TPU-side execution of SigDLA shuffle plans.
+
+A :class:`ShufflePlan` is the compiled artifact of the programmable shuffling
+fabric: a static gather-index map plus constant padding.  On the ASIC the
+plan is an instruction stream driving 16 nibble-granular shuffle units; on
+TPU the same plan is applied either
+
+  * as a fused XLA gather/select immediately ahead of the consuming matmul
+    (:func:`apply_plan`), or
+  * inside a Pallas kernel in VMEM (kernels/shuffle_gemm), keeping the
+    HBM->VMEM stream regular exactly like the paper keeps the SRAM->array
+    stream lock-step.
+
+Equivalence of this fast path with the instruction-level semantics
+(`shuffle_ir` + `shuffle_compiler`) is a tested invariant (DESIGN.md §7.1).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .shuffle_compiler import PAD, run_plan_via_isa
+
+__all__ = ["ShufflePlan", "PAD", "apply_plan", "apply_plan_np",
+           "pad_plan_to_word", "concat_plans", "identity_plan"]
+
+
+@dataclasses.dataclass(frozen=True)
+class ShufflePlan:
+    """out[i] = in[gather_idx[i]] if gather_idx[i] != PAD else pad_values[i].
+
+    ``width`` is the element bitwidth (4/8/16) used when the plan is lowered
+    to the nibble-granular ISA; the JAX fast path is width-agnostic (element
+    granularity).
+    """
+    gather_idx: np.ndarray   # (n_out,) int32
+    pad_values: np.ndarray   # (n_out,) — same dtype domain as the data
+    width: int = 16
+
+    def __post_init__(self):
+        gi = np.asarray(self.gather_idx, dtype=np.int32)
+        pv = np.asarray(self.pad_values)
+        if gi.shape != pv.shape or gi.ndim != 1:
+            raise ValueError("gather_idx / pad_values must be equal-shape 1-D")
+        object.__setattr__(self, "gather_idx", gi)
+        object.__setattr__(self, "pad_values", pv)
+
+    @property
+    def n_out(self) -> int:
+        return int(self.gather_idx.size)
+
+    def elems_per_word(self) -> int:
+        return 64 // self.width
+
+    # -- composition helpers -------------------------------------------------
+    def then(self, other: "ShufflePlan") -> "ShufflePlan":
+        """Compose: apply self, then other (other indexes self's output)."""
+        gi = np.where(other.gather_idx == PAD, PAD,
+                      self.gather_idx[np.clip(other.gather_idx, 0, None)])
+        pv = np.where(other.gather_idx == PAD, other.pad_values,
+                      self.pad_values[np.clip(other.gather_idx, 0, None)])
+        return ShufflePlan(gi, pv, self.width)
+
+
+def identity_plan(n: int, width: int = 16) -> ShufflePlan:
+    return ShufflePlan(np.arange(n, dtype=np.int32), np.zeros(n, np.int64), width)
+
+
+def concat_plans(*plans: ShufflePlan) -> ShufflePlan:
+    """Concatenate plans that index the same source array."""
+    width = plans[0].width
+    gi = np.concatenate([p.gather_idx for p in plans])
+    pv = np.concatenate([p.pad_values for p in plans])
+    return ShufflePlan(gi, pv, width)
+
+
+def pad_plan_to_word(plan: ShufflePlan) -> ShufflePlan:
+    """Extend a plan with zero-padding so it fills whole 64-bit words (the
+    granularity required by the ISA lowering)."""
+    per_word = plan.elems_per_word()
+    rem = (-plan.n_out) % per_word
+    if rem == 0:
+        return plan
+    gi = np.concatenate([plan.gather_idx, np.full(rem, PAD, np.int32)])
+    pv = np.concatenate([plan.pad_values, np.zeros(rem, plan.pad_values.dtype)])
+    return ShufflePlan(gi, pv, plan.width)
+
+
+# --------------------------------------------------------------------------
+# Execution
+# --------------------------------------------------------------------------
+
+def apply_plan(x: jax.Array, plan: ShufflePlan,
+               pad_dtype: Optional[jnp.dtype] = None) -> jax.Array:
+    """JAX fast path.  Applies the plan along the *last* axis of ``x``;
+    leading axes are batch.  Static plan -> the gather folds into the XLA
+    program (and onto the MXU feed when consumed by a matmul)."""
+    idx = jnp.asarray(np.clip(plan.gather_idx, 0, None))
+    mask = jnp.asarray(plan.gather_idx == PAD)
+    pads = jnp.asarray(plan.pad_values, dtype=pad_dtype or x.dtype)
+    gathered = jnp.take(x, idx, axis=-1)
+    return jnp.where(mask, pads.astype(gathered.dtype), gathered)
+
+
+def apply_plan_np(x: np.ndarray, plan: ShufflePlan) -> np.ndarray:
+    """Pure-numpy element-level oracle (width-agnostic)."""
+    idx = np.clip(plan.gather_idx, 0, None)
+    out = np.take(x, idx, axis=-1)
+    mask = plan.gather_idx == PAD
+    out[..., mask] = plan.pad_values[mask]
+    return out
+
+
+def apply_plan_via_isa(x: np.ndarray, plan: ShufflePlan):
+    """Full nibble-granular ISA execution (compile -> engine).  Integer data
+    only; returns (out, CycleReport).  Used by tests and the perf model."""
+    p = pad_plan_to_word(plan)
+    out, cycles = run_plan_via_isa(np.asarray(x).ravel(), p.gather_idx,
+                                   p.pad_values, p.width)
+    return out[:plan.n_out], cycles

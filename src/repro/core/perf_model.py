@@ -1,0 +1,322 @@
+"""Cycle / energy / area model of SigDLA and the paper's baselines (§VI).
+
+We cannot run Verilog + Design Compiler here; instead this is an analytical
+model with the paper's published constants (Table II) plus
+literature-calibrated baseline constants, used to reproduce the paper's
+*ratios* (Fig 7, Fig 8, Fig 10).  Every constant is annotated with its
+source.  The model is deliberately mechanistic — the Fig 7a "<16x" CNN
+speedups fall out of array under-utilization on Cin<16 layers, and the
+Fig 7b FFT ratio falls out of shuffle-traffic accounting, not curve fitting.
+
+Array micro-architecture (paper §IV): 8 precision-scalable PEs x 16 4-bit
+multipliers.  A (aw x ww) MAC consumes (aw/4)*(ww/4) 4-bit multipliers, so
+each PE processes 16/(pa*pw) input channels per cycle; the 8 PEs cover 8
+output channels.
+
+    layer cycles(compute) = out_positions * K * ceil(Cin * pa*pw / 16)
+                                          * ceil(Cout / 8)
+    layer cycles(dma)     = dram_bytes / (BW / freq)
+    layer cycles          = max(compute, dma, weight_stream) + fixed_overhead
+
+Shuffle passes produce one 64-bit word per cycle (16 units x 4-bit nibbles,
+§V-B), serialized before the consuming tensor op (the fabric writes back to
+the buffer before the array streams, §III).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import List, Optional, Sequence
+
+# --------------------------------------------------------------------------
+# Hardware constants
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class SigDLAHW:
+    freq_hz: float = 100e6          # paper: all platforms at 100 MHz
+    n_pe: int = 8
+    mult4_per_pe: int = 16
+    dram_bw: float = 1600e6         # B/s  [paper Fig 7 setup, ref 36]
+    sram_bytes: int = (128 + 16) * 1024   # Table II
+    area_mm2: float = 5.21          # Table II
+    power_w: float = 0.3025         # Table II (total @1.2V, UMC 55nm)
+    leakage_w: float = 0.00202
+    layer_overhead_cycles: int = 16   # pipeline fill + config stream
+
+    @property
+    def bytes_per_cycle(self) -> float:
+        return self.dram_bw / self.freq_hz
+
+
+@dataclasses.dataclass(frozen=True)
+class NVDLAHW:
+    """small-NVDLA reference point (Table II): 8-bit only, no fabric."""
+    freq_hz: float = 100e6
+    area_mm2: float = 4.45
+    power_w: float = 0.2764
+    leakage_w: float = 0.00172
+
+
+# Baseline platform models.  Cycle coefficients calibrated against public
+# numbers; platform power is *dev-kit* power, which is what the paper
+# measured (MAX78000 EVKit / TMS320F28335 controlCARD):
+#   - ARM Cortex-M4 + CMSIS-DSP on MAX78000: ideal CMSIS q15 cFFT is
+#     ~4 cycles per (N log2 N) radix-op, but the MAX78000 executes from
+#     flash with wait states (effective CPI ~2.5-3x ideal; see Moss et al.
+#     [35] resource characterization), giving ~10 c/radix-op and ~2.9 c/MAC
+#     for q15 FIR.  Kit power ~0.33 W (EVKit, active).
+#   - TMS320F28x: TI C28x FFT library ~3.1 cycles per (N log2 N) radix-op
+#     (32-bit lib incl. bit-reversal); FIR via RPT||MAC ~1.05 cycles/MAC
+#     from zero-wait SRAM.  controlCARD power ~0.71 W (300+ mA @1.9V +IO).
+@dataclasses.dataclass(frozen=True)
+class ARMM4:
+    freq_hz: float = 100e6
+    fft_coeff: float = 10.0
+    fir_cycles_per_mac: float = 2.9
+    dct2_cycles_per_mac: float = 2.9
+    power_w: float = 0.33
+
+
+@dataclasses.dataclass(frozen=True)
+class TMS320:
+    freq_hz: float = 100e6
+    fft_coeff: float = 3.1
+    fir_cycles_per_mac: float = 1.05
+    dct2_cycles_per_mac: float = 1.05
+    power_w: float = 0.71
+
+
+# --------------------------------------------------------------------------
+# Workload descriptors
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class ConvLayer:
+    """Conv (or FC: H=W=K=1) layer on the computing array."""
+    name: str
+    h: int; w: int; k: int; cin: int; cout: int
+
+    @property
+    def macs(self) -> int:
+        return self.h * self.w * self.k * self.k * self.cin * self.cout
+
+    @property
+    def params(self) -> int:
+        return self.k * self.k * self.cin * self.cout
+
+    @property
+    def out_elems(self) -> int:
+        return self.h * self.w * self.cout
+
+
+@dataclasses.dataclass(frozen=True)
+class ShufflePass:
+    """Data movement through the shuffling fabric: one output word / cycle."""
+    name: str
+    elems: int          # elements moved
+    elem_bits: int      # 4 / 8 / 16
+
+    @property
+    def words(self) -> int:
+        return math.ceil(self.elems * self.elem_bits / 64)
+
+
+@dataclasses.dataclass(frozen=True)
+class Workload:
+    name: str
+    layers: List[ConvLayer]
+    shuffles: List[ShufflePass] = dataclasses.field(default_factory=list)
+    dram_in_elems: int = 0       # streamed input (activations / signal)
+    dram_out_elems: int = 0
+
+    @property
+    def macs(self) -> int:
+        return sum(l.macs for l in self.layers)
+
+    @property
+    def params(self) -> int:
+        return sum(l.params for l in self.layers)
+
+
+# --------------------------------------------------------------------------
+# SigDLA cycle model
+# --------------------------------------------------------------------------
+
+def _planes(width: int) -> int:
+    return width // 4
+
+
+def conv_compute_cycles(l: ConvLayer, aw: int, ww: int,
+                        hw: SigDLAHW = SigDLAHW()) -> int:
+    pa, pw = _planes(aw), _planes(ww)
+    ch_per_cycle = hw.mult4_per_pe // (pa * pw)      # input chans / PE / cycle
+    return (l.h * l.w * l.k * l.k
+            * math.ceil(l.cin / ch_per_cycle)
+            * math.ceil(l.cout / hw.n_pe))
+
+
+def sigdla_cycles(w: Workload, aw: int, ww: int,
+                  hw: SigDLAHW = SigDLAHW(),
+                  weights_resident: bool = False) -> dict:
+    """Total cycles = max(compute, dma, shuffle) per phase + overheads.
+
+    The fabric runs ahead of the array on double-buffered SRAM ("streamed
+    to the computing array without breaking the lock-step processing",
+    paper §III), so shuffle traffic overlaps compute and only binds when it
+    exceeds it."""
+    bpc = hw.bytes_per_cycle
+    total_compute = total_dma = 0
+    for l in w.layers:
+        comp = conv_compute_cycles(l, aw, ww, hw)
+        w_bytes = 0 if weights_resident else l.params * ww / 8
+        act_bytes = l.out_elems * aw / 8        # streamed out (worst case)
+        dma = (w_bytes + act_bytes) / bpc
+        total_compute += max(comp, dma) + hw.layer_overhead_cycles
+        total_dma += dma
+    shuffle = sum(s.words for s in w.shuffles)
+    io = (w.dram_in_elems * aw / 8 + w.dram_out_elems * aw / 8) / bpc
+    total = max(total_compute, shuffle) + io
+    return dict(total=int(total), compute=int(total_compute),
+                shuffle=int(shuffle), io=int(io), dma=int(total_dma))
+
+
+def sigdla_time_s(w: Workload, aw: int, ww: int,
+                  hw: SigDLAHW = SigDLAHW(), **kw) -> float:
+    return sigdla_cycles(w, aw, ww, hw, **kw)["total"] / hw.freq_hz
+
+
+def sigdla_energy_j(w: Workload, aw: int, ww: int,
+                    hw: SigDLAHW = SigDLAHW(), **kw) -> float:
+    return sigdla_time_s(w, aw, ww, hw, **kw) * hw.power_w
+
+
+# --------------------------------------------------------------------------
+# Baseline cycle models (FFT / FIR / DCT on DSP-class processors)
+# --------------------------------------------------------------------------
+
+def proc_fft_cycles(n: int, p) -> float:
+    return p.fft_coeff * n * math.log2(n)
+
+
+def proc_fir_cycles(n: int, taps: int, p) -> float:
+    return p.fir_cycles_per_mac * n * taps + 64
+
+
+def proc_dct2_cycles(n: int, p) -> float:
+    return p.dct2_cycles_per_mac * 2 * n ** 3
+
+
+def proc_time_s(cycles: float, p) -> float:
+    return cycles / p.freq_hz
+
+
+def proc_energy_j(cycles: float, p) -> float:
+    return proc_time_s(cycles, p) * p.power_w
+
+
+# --------------------------------------------------------------------------
+# Workload builders (reconstructions; see benchmarks/table1_workloads.py for
+# the Table I cross-check of MACs / params)
+# --------------------------------------------------------------------------
+
+def fft_workload(n: int, width: int, fused_plans: bool = True) -> Workload:
+    """Radix-2 FFT mapped via the fabric: per stage, n/2 butterflies as
+    (nb,4)x(4,4) GEMMs (the array executes the padded 1/0 entries too)."""
+    stages = int(math.log2(n))
+    layers = [ConvLayer(f"bfly_s{s}", h=n // 2, w=1, k=1, cin=4, cout=4)
+              for s in range(stages)]
+    per_stage = 2 * n                         # gather elems (re+im pairs)
+    n_pass = stages + 1 if fused_plans else 2 * stages + 1
+    shuffles = [ShufflePass(f"stage{i}", per_stage, width)
+                for i in range(n_pass)]
+    return Workload(f"fft{n}", layers, shuffles,
+                    dram_in_elems=2 * n, dram_out_elems=2 * n)
+
+
+def fir_workload(n: int, taps: int, width: int, phases: int = 1) -> Workload:
+    """FIR as im2col + GEMM.  ``phases=1`` is the paper's mapping (a single
+    tap kernel -> one PE active).  ``phases=8`` is our beyond-paper mapping:
+    8 shifted tap kernels (structural zeros padded by the DPU) compute 8
+    output positions per array pass, using all 8 PEs (EXPERIMENTS.md
+    §Perf-paper)."""
+    if phases == 1:
+        layers = [ConvLayer("fir", h=n, w=1, k=1, cin=taps, cout=1)]
+        shuffles = [ShufflePass("im2col", n * taps, width)]
+    else:
+        layers = [ConvLayer("fir", h=n // phases, w=1, k=1,
+                            cin=taps + phases, cout=phases)]
+        shuffles = [ShufflePass("im2col", (n // phases) * (taps + phases),
+                                width)]
+    return Workload(f"fir{n}_{taps}", layers, shuffles,
+                    dram_in_elems=n, dram_out_elems=n)
+
+
+def dct2_workload(n: int, width: int) -> Workload:
+    # 2D DCT = two NxN GEMMs; regular — no shuffle traffic (Fig 3c).
+    layers = [ConvLayer("dct_rows", h=n, w=1, k=1, cin=n, cout=n),
+              ConvLayer("dct_cols", h=n, w=1, k=1, cin=n, cout=n)]
+    return Workload(f"dct2_{n}", layers, [],
+                    dram_in_elems=n * n, dram_out_elems=n * n)
+
+
+def tiny_vggnet() -> Workload:
+    """Reconstructed Tiny-VGGNet (32x32x3): ~1.4e8 MACs / ~1.0e6 params,
+    vs Table I's 1.69e8 / 1.15e6 (within reconstruction tolerance)."""
+    L = [
+        ConvLayer("conv1_1", 32, 32, 3, 3, 64),
+        ConvLayer("conv1_2", 32, 32, 3, 64, 64),
+        ConvLayer("conv1_3", 32, 32, 3, 64, 64),
+        ConvLayer("conv2_1", 16, 16, 3, 64, 128),
+        ConvLayer("conv2_2", 16, 16, 3, 128, 128),
+        ConvLayer("conv3_1", 8, 8, 3, 128, 128),
+        ConvLayer("fc1", 1, 1, 1, 2048, 256),
+        ConvLayer("fc2", 1, 1, 1, 256, 10),
+    ]
+    return Workload("tiny_vggnet", L, [], dram_in_elems=32 * 32 * 3,
+                    dram_out_elems=10)
+
+
+def ultranet() -> Workload:
+    """Reconstructed UltraNet (DAC-SDC'20) backbone at 32x32x3:
+    ~5.2e6 MACs / ~0.20e6 params vs Table I's 3.83e6 / 2.07e5."""
+    L = [
+        ConvLayer("conv1", 32, 32, 3, 3, 16),
+        ConvLayer("conv2", 16, 16, 3, 16, 32),
+        ConvLayer("conv3", 8, 8, 3, 32, 64),
+        ConvLayer("conv4", 4, 4, 3, 64, 64),
+        ConvLayer("conv5", 4, 4, 3, 64, 64),
+        ConvLayer("conv6", 4, 4, 3, 64, 64),
+        ConvLayer("conv7", 4, 4, 3, 64, 64),
+    ]
+    return Workload("ultranet", L, [], dram_in_elems=32 * 32 * 3,
+                    dram_out_elems=4 * 4 * 64)
+
+
+def resnet20() -> Workload:
+    """ResNet-20 (CIFAR): 16/32/64 channels x 3 stages x 3 blocks."""
+    L = [ConvLayer("conv1", 32, 32, 3, 3, 16)]
+    spec = [(32, 16, 6), (16, 32, 6), (8, 64, 6)]
+    cin = 16
+    for hw_, c, reps in spec:
+        for r in range(reps):
+            L.append(ConvLayer(f"conv{hw_}_{c}_{r}", hw_, hw_, 3,
+                               cin if r == 0 else c, c))
+            cin = c
+    L.append(ConvLayer("fc", 1, 1, 1, 64, 10))
+    return Workload("resnet20", L, [], dram_in_elems=32 * 32 * 3,
+                    dram_out_elems=10)
+
+
+def speech_enhancement_cnn(frames: int = 125, bins: int = 128) -> Workload:
+    """The Fig 9 CNN (mask estimator over a (frames x bins) spectrogram),
+    reconstructed after [34]: 4 conv layers, 2->16->32->16->1 channels."""
+    L = [
+        ConvLayer("se_conv1", frames, bins, 3, 2, 16),
+        ConvLayer("se_conv2", frames, bins, 3, 16, 32),
+        ConvLayer("se_conv3", frames, bins, 3, 32, 16),
+        ConvLayer("se_conv4", frames, bins, 3, 16, 1),
+    ]
+    return Workload("se_cnn", L, [], dram_in_elems=frames * bins * 2,
+                    dram_out_elems=frames * bins)

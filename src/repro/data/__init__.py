@@ -1,0 +1,3 @@
+from .pipeline import SignalStream, TokenStream, make_batch_iterator
+
+__all__ = ["TokenStream", "SignalStream", "make_batch_iterator"]

@@ -1,0 +1,34 @@
+"""Pallas TPU kernels for SigDLA's compute hot-spots.
+
+Each kernel is the fused "fabric + computing array" step of the paper,
+re-tiled for the TPU memory hierarchy (HBM -> VMEM -> MXU):
+
+- bitserial_mm : variable-bitwidth integer GEMM via 4-bit plane
+                 decomposition + shift-add (paper §IV / Fig 2).
+- shuffle_gemm : programmable gather/pad in VMEM fused with the GEMM
+                 (paper §V: the shuffling fabric feeding the array).
+- fft_stage    : one radix-2 butterfly stage = composed shuffle plan +
+                 per-twiddle-class 4x4 matmuls (paper Fig 3a).
+- fir_conv     : multi-phase FIR (im2col window gather + tap-bank GEMM,
+                 structural zeros = DPU pads; paper Fig 3b + our phased
+                 mapping).
+
+Kernels target TPU (BlockSpec/VMEM tiling, MXU-aligned tiles) and are
+validated on CPU with ``interpret=True`` against the pure-jnp oracles in
+each ``ref.py``.
+"""
+
+from .bitserial_mm.ops import bitserial_matmul
+from .shuffle_gemm.ops import shuffle_gemm
+from .fft_stage.ops import fft_stage
+from .fir_conv.ops import fir_conv
+from .flash_attention.ops import flash_attention
+
+__all__ = ["bitserial_matmul", "shuffle_gemm", "fft_stage", "fir_conv",
+           "flash_attention"]
+
+
+def default_interpret() -> bool:
+    """Pallas interpret mode: True on CPU (this container), False on TPU."""
+    import jax
+    return jax.default_backend() != "tpu"

@@ -1,0 +1,4 @@
+from .ops import bitserial_matmul
+from .ref import ref_bitserial_matmul
+
+__all__ = ["bitserial_matmul", "ref_bitserial_matmul"]

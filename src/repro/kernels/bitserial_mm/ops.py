@@ -1,0 +1,52 @@
+"""jit'd public wrapper for the bitserial GEMM kernel: plane-splits the
+integer operands, pads to MXU-aligned blocks, runs the kernel, un-pads."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from ...core import bitwidth as bw
+from .kernel import bitserial_matmul_planes
+
+
+def _pad_to(x: jax.Array, axis: int, mult: int) -> jax.Array:
+    rem = (-x.shape[axis]) % mult
+    if rem == 0:
+        return x
+    pads = [(0, 0)] * x.ndim
+    pads[axis] = (0, rem)
+    return jnp.pad(x, pads)
+
+
+@functools.partial(jax.jit, static_argnames=("a_width", "w_width", "bm",
+                                             "bn", "bk", "interpret"))
+def bitserial_matmul(a: jax.Array, w: jax.Array,
+                     a_width: int = 8, w_width: int = 8,
+                     bm: int = 128, bn: int = 128, bk: int = 128,
+                     interpret: bool = True) -> jax.Array:
+    """Exact integer matmul a @ w on the variable-bitwidth array.
+
+    a: (..., M, K) ints of ``a_width`` bits; w: (K, N) of ``w_width`` bits.
+    Returns int32 (..., M, N) == (a.astype(int32) @ w) exactly.
+    """
+    batch = a.shape[:-2]
+    m, k = a.shape[-2:]
+    n = w.shape[-1]
+    a2 = a.reshape(-1, k) if batch else a.reshape(m, k)
+    a2 = a2.reshape(-1, k)
+
+    a_planes = jnp.stack(bw.split_planes(a2, a_width))     # (pa, M*, K)
+    w_planes = jnp.stack(bw.split_planes(w, w_width))      # (pw, K, N)
+
+    bm_ = min(bm, max(8, a2.shape[0]))
+    bn_ = min(bn, max(8, n))
+    bk_ = min(bk, max(8, k))
+    ap = _pad_to(_pad_to(a_planes, 1, bm_), 2, bk_)
+    wp = _pad_to(_pad_to(w_planes, 1, bk_), 2, bn_)
+    out = bitserial_matmul_planes(ap, wp, bm=bm_, bn=bn_, bk=bk_,
+                                  interpret=interpret)
+    out = out[: a2.shape[0], :n]
+    return out.reshape(*batch, m, n) if batch else out

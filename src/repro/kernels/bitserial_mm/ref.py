@@ -1,0 +1,16 @@
+"""Pure oracle: the bitserial kernel must equal the direct integer GEMM
+bit-exactly in 32-bit two's-complement arithmetic (wraparound above 2^31,
+like the hardware's fixed-width accumulator — DESIGN.md §7.3)."""
+
+import jax
+import numpy as np
+
+
+def _wrap32(x: np.ndarray) -> np.ndarray:
+    return ((x + 2 ** 31) % 2 ** 32 - 2 ** 31).astype(np.int32)
+
+
+def ref_bitserial_matmul(a: jax.Array, w: jax.Array) -> np.ndarray:
+    """int64 product wrapped to int32 (mod 2^32, two's complement)."""
+    prod = np.matmul(np.asarray(a, np.int64), np.asarray(w, np.int64))
+    return _wrap32(prod)

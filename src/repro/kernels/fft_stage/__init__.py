@@ -1,0 +1,4 @@
+from .ops import fft_stage, fft_pallas
+from .ref import ref_fft_stage
+
+__all__ = ["fft_stage", "fft_pallas", "ref_fft_stage"]

@@ -1,0 +1,55 @@
+"""One radix-2 DIT FFT stage as a fused fabric+array Pallas kernel.
+
+Per stage (paper Fig 3a): gather butterfly pairs grouped by twiddle class
+(the composed shuffle plan), then batched (nb, 4) x (4, 4) real matmuls
+against the twiddle tensor.  The 1/0 entries of the butterfly matrices are
+the constants the DPU pads on the ASIC; here they live in the stationary
+twiddle operand.
+
+Input/output are interleaved-real vectors of length 2n; output is in the
+(class j, block b, component o) layout the *next* stage's composed gather
+consumes directly — scatter never materializes (beyond-paper plan fusion).
+
+Grid = (B,): one program per batch element; a length-2n signal block plus
+(half,4,4) twiddles fit comfortably in VMEM for n <= 64k.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(x_ref, idx_ref, tw_ref, o_ref, *, half: int, nb: int):
+    x = x_ref[0]                                     # (2n,)
+    idx = idx_ref[...]                               # (2n,) int32
+    rows = jnp.take(x, idx, axis=0).reshape(half, nb, 4)
+    tw = tw_ref[...]                                 # (half, 4, 4)
+    # out[j, b, o] = sum_i tw[j, o, i] * rows[j, b, i]
+    y = jax.lax.dot_general(
+        rows, tw, (((2,), (2,)), ((0,), (0,))),
+        preferred_element_type=rows.dtype)           # (half, nb, 4)
+    o_ref[0] = y.reshape(-1)
+
+
+@functools.partial(jax.jit, static_argnames=("half", "nb", "interpret"))
+def fft_stage_pallas(x: jax.Array, idx: jax.Array, tw: jax.Array,
+                     half: int, nb: int, interpret: bool = True
+                     ) -> jax.Array:
+    """x: (B, 2n) interleaved real; idx: (2n,); tw: (half, 4, 4)."""
+    b, n2 = x.shape
+    return pl.pallas_call(
+        functools.partial(_kernel, half=half, nb=nb),
+        grid=(b,),
+        in_specs=[
+            pl.BlockSpec((1, n2), lambda bb: (bb, 0)),
+            pl.BlockSpec((n2,), lambda bb: (0,)),
+            pl.BlockSpec(tw.shape, lambda bb: (0, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, n2), lambda bb: (bb, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, n2), x.dtype),
+        interpret=interpret,
+    )(x, idx, tw)

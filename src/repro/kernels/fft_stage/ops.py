@@ -1,0 +1,48 @@
+"""Public wrappers: single fused FFT stage, and the full FFT pipeline
+driven stage-by-stage through the Pallas kernel."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ...core import signal_mapping as sm
+from .kernel import fft_stage_pallas
+
+
+def fft_stage(x: jax.Array, stage: sm.FFTStagePlan,
+              interpret: bool = True) -> jax.Array:
+    """Apply one fused (gather + butterfly-GEMM) stage.
+
+    x: (..., 2n) interleaved real in the layout the stage's gather expects.
+    Output is in flat (j, b, o) layout (the next stage's composed input).
+    """
+    batch = x.shape[:-1]
+    xb = x.reshape(-1, x.shape[-1])
+    idx = jnp.asarray(np.clip(stage.gather.gather_idx, 0, None))
+    tw = jnp.asarray(stage.twiddle, dtype=x.dtype)
+    y = fft_stage_pallas(xb, idx, tw, stage.half, stage.nb,
+                         interpret=interpret)
+    return y.reshape(*batch, -1)
+
+
+@functools.lru_cache(maxsize=32)
+def _plan(n: int) -> sm.FFTPlan:
+    return sm.make_fft_plan(n, fuse_adjacent=True)
+
+
+def fft_pallas(x: jax.Array, interpret: bool = True) -> jax.Array:
+    """Full complex FFT along the last axis, every stage through the fused
+    kernel.  x complex (..., n) -> complex (..., n)."""
+    from ...core.fabric import apply_plan
+    n = x.shape[-1]
+    plan = _plan(n)
+    xr = sm.complex_to_interleaved(x)
+    for st in plan.stages:
+        xr = fft_stage(xr, st, interpret=interpret)
+        if st.scatter.n_out:               # final stage: back to natural order
+            xr = apply_plan(xr, st.scatter)
+    return sm.interleaved_to_complex(xr)

@@ -1,0 +1,20 @@
+"""Pure-jnp oracles for the fused FFT stage kernel."""
+
+import jax
+import jax.numpy as jnp
+
+from ...core import signal_mapping as sm
+from ...core.fabric import apply_plan
+
+
+def ref_fft_stage(x: jax.Array, stage: sm.FFTStagePlan) -> jax.Array:
+    rows = apply_plan(x, stage.gather)
+    rows = rows.reshape(*rows.shape[:-1], stage.half, stage.nb, 4)
+    tw = jnp.asarray(stage.twiddle, dtype=rows.dtype)
+    y = jnp.einsum("...jbi,joi->...jbo", rows, tw)
+    return y.reshape(*y.shape[:-3], -1)
+
+
+def ref_fft(x: jax.Array) -> jax.Array:
+    """End-to-end oracle: jnp.fft.fft."""
+    return jnp.fft.fft(x)

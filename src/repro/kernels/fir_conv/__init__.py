@@ -1,0 +1,4 @@
+from .ops import fir_conv
+from .ref import ref_fir
+
+__all__ = ["fir_conv", "ref_fir"]

@@ -1,0 +1,50 @@
+"""Multi-phase FIR kernel: strided window gather (fabric) + tap-bank GEMM.
+
+Implements the phased mapping (perf_model.fir_workload(phases=P)): one
+window of length L = taps+P-1 produces P output samples through a (L, P)
+kernel bank whose structural zeros are DPU pad constants.  On TPU the
+windows for a whole row-block are gathered in VMEM and hit the MXU as a
+single (br, L) x (L, P) matmul.
+
+Grid = (B, M/bm) over batch and window blocks.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(x_ref, idx_ref, w_ref, o_ref):
+    x = x_ref[0]                             # (n,)
+    idx = idx_ref[...]                       # (bm, L) int32, PAD -> -1
+    safe = jnp.maximum(idx, 0)
+    win = jnp.take(x, safe.reshape(-1), axis=0).reshape(idx.shape)
+    win = jnp.where(idx < 0, jnp.zeros((), win.dtype), win)
+    y = jax.lax.dot_general(win, w_ref[...], (((1,), (0,)), ((), ())),
+                            preferred_element_type=win.dtype)
+    o_ref[0] = y.reshape(-1)                 # (bm * P,)
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "interpret"))
+def fir_conv_pallas(x: jax.Array, idx: jax.Array, wbank: jax.Array,
+                    bm: int = 128, interpret: bool = True) -> jax.Array:
+    """x: (B, n); idx: (M, L); wbank: (L, P) -> (B, M*P)."""
+    b, n = x.shape
+    m, L = idx.shape
+    p = wbank.shape[-1]
+    return pl.pallas_call(
+        _kernel,
+        grid=(b, m // bm),
+        in_specs=[
+            pl.BlockSpec((1, n), lambda bb, mm: (bb, 0)),
+            pl.BlockSpec((bm, L), lambda bb, mm: (mm, 0)),
+            pl.BlockSpec((L, p), lambda bb, mm: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bm * p), lambda bb, mm: (bb, mm)),
+        out_shape=jax.ShapeDtypeStruct((b, m * p), x.dtype),
+        interpret=interpret,
+    )(x, idx, wbank)

@@ -1,0 +1,41 @@
+"""Public FIR wrapper over the Pallas kernel (phased fabric mapping)."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ...core import signal_mapping as sm
+from .kernel import fir_conv_pallas
+
+
+@functools.lru_cache(maxsize=32)
+def _plan(n: int, taps: int, phases: int) -> sm.FIRPhasePlan:
+    return sm.make_fir_phase_plan(n, taps, phases)
+
+
+def fir_conv(x: jax.Array, h: jax.Array, phases: int = 8,
+             bm: int = 128, interpret: bool = True) -> jax.Array:
+    """Causal FIR along the last axis via the fused Pallas kernel.
+
+    x: (..., n); h: (taps,) -> (..., n), equal to convolve(x, h)[..., :n].
+    """
+    n = x.shape[-1]
+    taps = h.shape[-1]
+    plan = _plan(n, taps, phases)
+    m = n // phases
+    idx = np.asarray(plan.window.gather_idx, np.int32).reshape(m, plan.win_len)
+    wbank = jnp.asarray(sm.fir_phase_weights(np.asarray(h), phases),
+                        dtype=x.dtype)
+    batch = x.shape[:-1]
+    xb = x.reshape(-1, n)
+    bm_ = min(bm, m)
+    rem = (-m) % bm_
+    if rem:
+        idx = np.pad(idx, ((0, rem), (0, 0)), constant_values=-1)
+    y = fir_conv_pallas(xb, jnp.asarray(idx), wbank, bm=bm_,
+                        interpret=interpret)
+    return y[:, : n].reshape(*batch, n)

@@ -1,0 +1,12 @@
+"""Pure-jnp FIR oracle (direct causal convolution)."""
+
+import jax
+import jax.numpy as jnp
+
+
+def ref_fir(x: jax.Array, h: jax.Array) -> jax.Array:
+    n = x.shape[-1]
+    taps = h.shape[-1]
+    xp = jnp.pad(x, [(0, 0)] * (x.ndim - 1) + [(taps - 1, 0)])
+    win = jnp.stack([xp[..., i:i + n] for i in range(taps)], axis=-1)
+    return jnp.einsum("...nt,t->...n", win, h[::-1].astype(x.dtype))

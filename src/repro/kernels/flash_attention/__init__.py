@@ -1,0 +1,4 @@
+from .ops import flash_attention
+from .ref import ref_attention
+
+__all__ = ["flash_attention", "ref_attention"]

@@ -1,0 +1,121 @@
+"""Fused flash-attention Pallas kernel (forward).
+
+This is the lever EXPERIMENTS.md §Roofline identifies for every train
+cell: the pure-XLA chunked attention streams (q_chunk x kv_chunk) f32
+probability tiles through HBM, while this kernel keeps the running
+(max, denom, accumulator) in VMEM scratch across the kv grid dimension —
+probabilities never leave VMEM.
+
+Layout: q (BH, Sq, hd); k/v (BKV, Skv, hd) with BH = BKV * group (GQA:
+query head h reads kv head h // group via the BlockSpec index maps — no
+materialized KV expansion).  Grid = (BH, Sq/bq, Skv/bk), kv innermost;
+scratch persists across the innermost dimension (TPU sequential grid
+semantics; interpret mode preserves this).  Supports causal masking,
+sliding windows and logit softcaps.  f32 accumulation; output in the
+query dtype.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+            bq: int, bk: int, n_kv: int, causal: bool, window: int,
+            softcap: float, scale: float, skv: int):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0].astype(jnp.float32) * scale        # (bq, hd)
+    k = k_ref[0].astype(jnp.float32)                # (bk, hd)
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32)
+    if softcap and softcap > 0.0:
+        s = softcap * jnp.tanh(s / softcap)
+
+    q_pos = qi * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+    k_pos = ki * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+    mask = k_pos < skv                               # padded kv tail
+    if causal:
+        mask &= k_pos <= q_pos
+    if window and window > 0:
+        mask &= k_pos > q_pos - window
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, s.max(axis=-1))
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.exp(s - m_new[:, None])                 # stays in VMEM
+    l_ref[...] = l_ref[...] * alpha + p.sum(axis=-1)
+    v = v_ref[0].astype(jnp.float32)
+    acc_ref[...] = (acc_ref[...] * alpha[:, None]
+                    + jax.lax.dot_general(
+                        p, v, (((1,), (0,)), ((), ())),
+                        preferred_element_type=jnp.float32))
+    m_ref[...] = m_new
+
+    @pl.when(ki == n_kv - 1)
+    def _finalize():
+        o_ref[0] = (acc_ref[...]
+                    / jnp.maximum(l_ref[...], 1e-30)[:, None]
+                    ).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("group", "bq", "bk", "causal",
+                                             "window", "softcap",
+                                             "interpret"))
+def flash_attention_bhsd(q: jax.Array, k: jax.Array, v: jax.Array,
+                         group: int = 1, bq: int = 128, bk: int = 128,
+                         causal: bool = True, window: int = 0,
+                         softcap: float = 0.0,
+                         interpret: bool = True) -> jax.Array:
+    """q: (BH, Sq, hd); k/v: (BKV, Skv, hd), BH == BKV * group."""
+    bh, sq, hd = q.shape
+    bkv, skv, _ = k.shape
+    assert bh == bkv * group
+    scale = 1.0 / np.sqrt(hd)
+
+    qpad, kpad = (-sq) % bq, (-skv) % bk
+    if qpad:
+        q = jnp.pad(q, ((0, 0), (0, qpad), (0, 0)))
+    if kpad:
+        k = jnp.pad(k, ((0, 0), (0, kpad), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, kpad), (0, 0)))
+    nq, nk = q.shape[1] // bq, k.shape[1] // bk
+
+    out = pl.pallas_call(
+        functools.partial(_kernel, bq=bq, bk=bk, n_kv=nk, causal=causal,
+                          window=window, softcap=softcap, scale=scale,
+                          skv=skv),
+        grid=(bh, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, bq, hd), lambda h, qi, ki: (h, qi, 0)),
+            pl.BlockSpec((1, bk, hd),
+                         lambda h, qi, ki, group=group: (h // group, ki, 0)),
+            pl.BlockSpec((1, bk, hd),
+                         lambda h, qi, ki, group=group: (h // group, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, hd), lambda h, qi, ki: (h, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, q.shape[1], hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq,), jnp.float32),       # running max
+            pltpu.VMEM((bq,), jnp.float32),       # running denom
+            pltpu.VMEM((bq, hd), jnp.float32),    # accumulator
+        ],
+        interpret=interpret,
+    )(q, k, v)
+    return out[:, :sq]

@@ -1,0 +1,33 @@
+"""Public wrapper: (B, S, H, hd) / (B, S, KV, hd) GQA attention through
+the fused Pallas flash kernel."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import flash_attention_bhsd
+
+
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True, window: int = 0,
+                    softcap: float = 0.0, bq: int = 128, bk: int = 128,
+                    interpret: bool = True) -> jax.Array:
+    """q: (B, Sq, H, hd); k/v: (B, Skv, KV, hd) -> (B, Sq, H, hd).
+
+    GQA is handled inside the kernel via BlockSpec index maps (query head
+    h reads kv head h // (H/KV)); KV tensors are never expanded."""
+    b, sq, h, hd = q.shape
+    _, skv, kv, _ = k.shape
+    group = h // kv
+    # (B, S, H, hd) -> (B*H, S, hd): flat query row b*H + head maps to kv
+    # row (b*H + head) // group == b*KV + head // group since H = KV*group.
+    qr = q.transpose(0, 2, 1, 3).reshape(b * h, sq, hd)
+    kr = k.transpose(0, 2, 1, 3).reshape(b * kv, skv, hd)
+    vr = v.transpose(0, 2, 1, 3).reshape(b * kv, skv, hd)
+    out = flash_attention_bhsd(qr, kr, vr, group=group,
+                               bq=min(bq, max(sq, 8)),
+                               bk=min(bk, max(skv, 8)),
+                               causal=causal, window=window,
+                               softcap=softcap, interpret=interpret)
+    return out.reshape(b, h, sq, hd).transpose(0, 2, 1, 3)

@@ -1,0 +1,8 @@
+"""Oracle: the framework's direct (materialized-scores) attention."""
+
+from ...models.layers import direct_attention
+
+
+def ref_attention(q, k, v, *, causal=True, window=0, softcap=0.0):
+    return direct_attention(q, k, v, causal=causal, window=window,
+                            softcap=softcap)

@@ -1,0 +1,4 @@
+from .ops import shuffle_gemm
+from .ref import ref_shuffle_gemm
+
+__all__ = ["shuffle_gemm", "ref_shuffle_gemm"]

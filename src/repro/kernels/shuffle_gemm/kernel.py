@@ -1,0 +1,59 @@
+"""Fused shuffling-fabric + GEMM kernel (paper §V).
+
+The ASIC inserts the fabric between SRAM and the MAC array; the TPU
+analogue is performing the gather + constant-padding *in VMEM*, on the
+block already staged for the MXU, so HBM sees only sequential reads:
+
+    out[b, r, :] = (x[b, idx[r, :]] | pad) @ w           for each row block
+
+``idx`` rows are the compiled ShufflePlan (PAD = -1 entries take
+``pad_vals``).  The source vector block is held fully in VMEM (signals are
+KB-scale; the paper's on-chip buffer holds them whole too).
+
+Grid = (B, R/br): batch x row-blocks.  idx/pad/w blocks are broadcast
+across batch.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(x_ref, idx_ref, pad_ref, w_ref, o_ref):
+    x = x_ref[0]                       # (n_in,)
+    idx = idx_ref[...]                 # (br, t) int32, PAD -> -1
+    safe = jnp.maximum(idx, 0)
+    g = jnp.take(x, safe.reshape(-1), axis=0).reshape(idx.shape)
+    g = jnp.where(idx < 0, pad_ref[...].astype(g.dtype), g)
+    o_ref[0] = jax.lax.dot_general(
+        g, w_ref[...], (((1,), (0,)), ((), ())),
+        preferred_element_type=o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("br", "interpret"))
+def shuffle_gemm_blocks(x: jax.Array, idx: jax.Array, pad_vals: jax.Array,
+                        w: jax.Array, br: int = 256,
+                        interpret: bool = True) -> jax.Array:
+    """x: (B, n_in); idx/pad_vals: (R, t); w: (t, n_out) -> (B, R, n_out).
+    R must be a multiple of ``br`` (ops.py pads)."""
+    b, n_in = x.shape
+    r, t = idx.shape
+    n_out = w.shape[-1]
+    grid = (b, r // br)
+    return pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, n_in), lambda bb, rr: (bb, 0)),
+            pl.BlockSpec((br, t), lambda bb, rr: (rr, 0)),
+            pl.BlockSpec((br, t), lambda bb, rr: (rr, 0)),
+            pl.BlockSpec((t, n_out), lambda bb, rr: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, br, n_out), lambda bb, rr: (bb, rr, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, r, n_out), x.dtype),
+        interpret=interpret,
+    )(x, idx, pad_vals, w)

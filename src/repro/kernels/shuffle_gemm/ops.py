@@ -1,0 +1,37 @@
+"""Public wrapper: run a compiled ShufflePlan + GEMM through the fused
+Pallas kernel.  Accepts the same ShufflePlan objects as core.fabric."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ...core.fabric import ShufflePlan
+from .kernel import shuffle_gemm_blocks
+
+
+def shuffle_gemm(x: jax.Array, plan: ShufflePlan, w: jax.Array,
+                 rows: int, br: int = 256,
+                 interpret: bool = True) -> jax.Array:
+    """out = reshape(apply_plan(x), (rows, t)) @ w, fused in one kernel.
+
+    x: (..., n_in); plan.n_out == rows * t; w: (t, n_out).
+    Returns (..., rows, n_out).
+    """
+    t = plan.n_out // rows
+    idx = np.asarray(plan.gather_idx, np.int32).reshape(rows, t)
+    pads = np.asarray(plan.pad_values).reshape(rows, t)
+
+    batch = x.shape[:-1]
+    xb = x.reshape(-1, x.shape[-1])
+    br_ = min(br, rows)
+    rem = (-rows) % br_
+    if rem:
+        idx = np.pad(idx, ((0, rem), (0, 0)), constant_values=0)
+        pads = np.pad(pads, ((0, rem), (0, 0)))
+    out = shuffle_gemm_blocks(xb, jnp.asarray(idx),
+                              jnp.asarray(pads, dtype=x.dtype), w,
+                              br=br_, interpret=interpret)
+    out = out[:, :rows]
+    return out.reshape(*batch, rows, w.shape[-1])

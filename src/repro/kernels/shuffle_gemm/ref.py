@@ -1,0 +1,13 @@
+"""Pure-jnp oracle: unfused apply_plan + matmul."""
+
+import jax
+import jax.numpy as jnp
+
+from ...core.fabric import ShufflePlan, apply_plan
+
+
+def ref_shuffle_gemm(x: jax.Array, plan: ShufflePlan, w: jax.Array,
+                     rows: int) -> jax.Array:
+    s = apply_plan(x, plan)
+    s = s.reshape(*x.shape[:-1], rows, plan.n_out // rows)
+    return jnp.matmul(s, w.astype(s.dtype))

@@ -1,0 +1,198 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell with
+ShapeDtypeStruct inputs (zero allocation) and record memory / cost /
+collective analyses for EXPERIMENTS.md §Dry-run and §Roofline.
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch starcoder2-3b \
+        --shape train_4k [--multi-pod] [--out artifacts/dryrun]
+
+The XLA_FLAGS line above MUST precede every other import (jax locks the
+device count at first init); smoke tests / benches never import this
+module, so they keep seeing 1 device."""
+
+import argparse
+import json
+import re
+import time
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from ..configs import SHAPES, cell_applicable, get_config
+from ..models import sharding as SH
+from ..models.zoo import get_model, input_specs
+from ..optim.adamw import adamw_init
+from . import hlo_analysis
+from .mesh import make_production_mesh
+from .train import make_train_step
+
+_DT_BYTES = {"pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2,
+             "f16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
+             "f64": 8, "c64": 8, "c128": 16}
+
+_COLL_OPS = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+             "collective-permute")
+
+_TYPE_RE = re.compile(r"(pred|s8|u8|s16|u16|bf16|f16|s32|u32|f32|s64|u64|"
+                      r"f64|c64|c128)\[([0-9,]*)\]")
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """Sum result-tensor bytes of every collective op in the optimized HLO
+    (operands are %names, so all shaped types on the line are results)."""
+    out = {op: 0 for op in _COLL_OPS}
+    out["count"] = 0
+    for line in hlo_text.splitlines():
+        for op in _COLL_OPS:
+            tok = f" {op}("
+            if tok in line or f" {op}-start(" in line:
+                head = line.split(tok)[0] if tok in line else \
+                    line.split(f" {op}-start(")[0]
+                nbytes = 0
+                for m in _TYPE_RE.finditer(head):
+                    dt, dims = m.group(1), m.group(2)
+                    n = 1
+                    for d in dims.split(","):
+                        if d:
+                            n *= int(d)
+                    nbytes += n * _DT_BYTES[dt]
+                out[op] += nbytes
+                out["count"] += 1
+                break
+    return out
+
+
+def _shardings(tree_specs, mesh):
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s), tree_specs,
+        is_leaf=lambda x: isinstance(x, P))
+
+
+def lower_cell(arch: str, shape_name: str, multi_pod: bool,
+               donate: bool = True) -> Dict[str, Any]:
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    axes = SH.mesh_axes_of(mesh)
+    SH.set_activation_mesh(mesh)       # §Perf iter 4: pin act sharding
+    bundle = get_model(cfg)
+
+    params_shape = jax.eval_shape(bundle.init, jax.random.PRNGKey(0))
+    pspecs = SH.param_specs(params_shape, axes, cfg.fsdp)
+    p_shard = _shardings(pspecs, mesh)
+    batch_shape = input_specs(cfg, shape)
+    b_shard = _shardings(
+        {k: SH.batch_spec(tuple(v.shape), axes) for k, v in
+         batch_shape.items()}, mesh)
+
+    t0 = time.time()
+    if shape.kind == "train":
+        opt_shape = jax.eval_shape(adamw_init, params_shape)
+        mspecs = jax.tree_util.tree_map_with_path(
+            lambda path, leaf: SH.zero1_spec(
+                SH.param_spec(SH._leaf_name(path), leaf.shape, axes,
+                              cfg.fsdp), leaf.shape, axes),
+            params_shape)
+        o_shard = type(opt_shape)(
+            step=NamedSharding(mesh, P()),
+            m=_shardings(mspecs, mesh), v=_shardings(mspecs, mesh))
+        step_fn = make_train_step(bundle)
+        jitted = jax.jit(step_fn,
+                         in_shardings=(p_shard, o_shard, b_shard),
+                         out_shardings=(p_shard, o_shard, None),
+                         donate_argnums=(0, 1) if donate else ())
+        lowered = jitted.lower(params_shape, opt_shape, batch_shape)
+    elif shape.kind == "prefill":
+        def prefill_fn(p, b):
+            return bundle.prefill(p, b, max_len=shape.seq_len)
+        jitted = jax.jit(prefill_fn, in_shardings=(p_shard, b_shard))
+        lowered = jitted.lower(params_shape, batch_shape)
+    else:  # decode
+        cache_shape = jax.eval_shape(
+            lambda: bundle.init_cache(shape.global_batch, shape.seq_len))
+        cspecs = SH.cache_specs(cache_shape, axes, shape.global_batch)
+        c_shard = _shardings(cspecs, mesh)
+        jitted = jax.jit(bundle.decode_step,
+                         in_shardings=(p_shard, c_shard, b_shard),
+                         out_shardings=(None, c_shard),
+                         donate_argnums=(1,) if donate else ())
+        lowered = jitted.lower(params_shape, cache_shape, batch_shape)
+
+    t_lower = time.time() - t0
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    text = compiled.as_text()
+    coll = collective_bytes(text)
+    loop_aware = hlo_analysis.analyze(text).to_dict()
+
+    n_dev = mesh.devices.size
+    record = {
+        "arch": arch, "shape": shape_name,
+        "mesh": "x".join(map(str, mesh.devices.shape)),
+        "n_devices": int(n_dev),
+        "kind": shape.kind,
+        "microbatch": cfg.microbatch if shape.kind == "train" else 1,
+        "lower_s": round(t_lower, 1), "compile_s": round(t_compile, 1),
+        "memory": {
+            "argument_bytes": int(mem.argument_size_in_bytes),
+            "output_bytes": int(mem.output_size_in_bytes),
+            "temp_bytes": int(mem.temp_size_in_bytes),
+            "code_bytes": int(mem.generated_code_size_in_bytes),
+        },
+        "cost": {
+            # XLA's analysis counts while bodies once (trip-count blind)
+            "flops_per_device_naive": float(cost.get("flops", -1.0)),
+            "bytes_per_device_naive": float(cost.get("bytes accessed",
+                                                     -1.0)),
+        },
+        # loop-aware per-device costs (launch/hlo_analysis.py)
+        "loop_aware": loop_aware,
+        "collectives_naive": coll,
+    }
+    record["_hlo_text"] = text          # stripped before JSON write
+    return record
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True, choices=sorted(SHAPES))
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--out", default="artifacts/dryrun")
+    args = ap.parse_args()
+
+    if not cell_applicable(args.arch, args.shape):
+        print(f"SKIP {args.arch} x {args.shape} (documented inapplicable)")
+        return
+
+    rec = lower_cell(args.arch, args.shape, args.multi_pod)
+    os.makedirs(args.out, exist_ok=True)
+    tag = f"{args.arch}__{args.shape}__{rec['mesh']}"
+    text = rec.pop("_hlo_text", None)
+    if text is not None:
+        try:
+            import zstandard
+            hdir = os.path.join(args.out, "hlo")
+            os.makedirs(hdir, exist_ok=True)
+            with open(os.path.join(hdir, tag + ".hlo.zst"), "wb") as f:
+                f.write(zstandard.ZstdCompressor(level=6).compress(
+                    text.encode()))
+        except ImportError:
+            pass
+    path = os.path.join(args.out, tag + ".json")
+    with open(path, "w") as f:
+        json.dump(rec, f, indent=2)
+    print(json.dumps(rec, indent=2))
+    print(f"wrote {path}")
+
+
+if __name__ == "__main__":
+    main()

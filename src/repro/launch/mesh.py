@@ -1,0 +1,21 @@
+"""Production mesh factory.
+
+A function (not a module constant) so importing never touches jax device
+state.  Single pod: 16x16 = 256 chips (data, model).  Multi-pod: 2 pods x
+256 = 512 chips with the leading "pod" axis (DP across pods by default;
+runtime/pipeline.py can pipeline over it instead)."""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_test_mesh(shape=(2, 2), axes=("data", "model")):
+    """Small mesh for subprocess tests (forced host device count)."""
+    return jax.make_mesh(shape, axes)

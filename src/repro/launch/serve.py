@@ -1,0 +1,60 @@
+"""Serving launcher: batched generation through the ServingEngine.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch gemma2-2b \
+        --reduced --requests 6 --max-new 16 [--quant-bits 8]
+
+Full configs are meant for the TPU pod (the decode_32k / long_500k cells
+of the dry-run prove they lower+compile); --reduced serves the same
+architecture family at CPU scale.
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="gemma2-2b")
+    ap.add_argument("--reduced", action="store_true", default=True)
+    ap.add_argument("--requests", type=int, default=6)
+    ap.add_argument("--batch-size", type=int, default=4)
+    ap.add_argument("--max-new", type=int, default=16)
+    ap.add_argument("--quant-bits", type=int, default=0)
+    ap.add_argument("--temperature", type=float, default=0.0)
+    args = ap.parse_args()
+
+    from ..configs import get_config
+    from ..models.zoo import get_model
+    from ..serving import ServingEngine
+    from ..serving.engine import Request
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    bundle = get_model(cfg)
+    params = bundle.init(jax.random.PRNGKey(0))
+    eng = ServingEngine(bundle, batch_size=args.batch_size,
+                        temperature=args.temperature,
+                        quant_bits=args.quant_bits)
+    eng.load(params)
+
+    reqs = [Request(rid=i, prompt=[(7 * i + j) % cfg.vocab
+                                   for j in range(3 + i % 4)],
+                    max_new=args.max_new)
+            for i in range(args.requests)]
+    t0 = time.time()
+    results = eng.serve(reqs)
+    dt = time.time() - t0
+    toks = sum(len(v) for v in results.values())
+    for rid in sorted(results):
+        print(f"req {rid}: {results[rid]}")
+    print(f"\n{toks} tokens in {dt:.1f}s "
+          f"({toks / dt:.1f} tok/s, quant={args.quant_bits or 'fp'})")
+
+
+if __name__ == "__main__":
+    main()

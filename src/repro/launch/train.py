@@ -1,0 +1,116 @@
+"""Train-step factory: value_and_grad + microbatch gradient accumulation +
+AdamW, with sharding-aware construction used by both the dry-run and the
+real training loop (runtime/fault_tolerance.py drives it)."""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig
+from ..models.zoo import ModelBundle
+from ..optim.adamw import AdamWState, adamw_init, adamw_update, cosine_schedule
+
+
+def make_train_step(bundle: ModelBundle,
+                    lr_fn: Callable = cosine_schedule(3e-4, 100, 10000),
+                    ) -> Callable:
+    cfg = bundle.cfg
+
+    def loss_for(p, b):
+        loss, (nll, aux) = bundle.loss_fn(p, b)
+        return loss, (nll, aux)
+
+    def train_step(params, opt_state: AdamWState, batch):
+        k = cfg.microbatch
+        if k > 1:
+            # STRIDED microbatch split: microbatch m = rows {m, m+k, ...}.
+            # A contiguous split would place each microbatch on only
+            # (data/k) shards and blow up per-device activation memory;
+            # the strided split keeps every microbatch sharded over the
+            # full data axis (see EXPERIMENTS.md §Perf, iteration 0).
+            mbatch = jax.tree_util.tree_map(
+                lambda x: jnp.swapaxes(
+                    x.reshape((x.shape[0] // k, k) + x.shape[1:]), 0, 1),
+                batch)
+            # accumulate in param dtype for fsdp giants (memory), f32 else
+            acc_dt = (lambda p: p.dtype) if cfg.fsdp else \
+                (lambda p: jnp.float32)
+
+            def acc(carry, mb):
+                gacc, lsum = carry
+                (l, _), g = jax.value_and_grad(loss_for, has_aux=True)(
+                    params, mb)
+                gacc = jax.tree_util.tree_map(
+                    lambda a, gg: a + gg.astype(a.dtype), gacc, g)
+                return (gacc, lsum + l), None
+
+            g0 = jax.tree_util.tree_map(
+                lambda p: jnp.zeros(p.shape, acc_dt(p)), params)
+            (gsum, lsum), _ = jax.lax.scan(acc, (g0, 0.0), mbatch)
+            grads = jax.tree_util.tree_map(lambda g: g / k, gsum)
+            loss = lsum / k
+        else:
+            (loss, _), grads = jax.value_and_grad(loss_for, has_aux=True)(
+                params, batch)
+
+        lr = lr_fn(opt_state.step)
+        new_params, new_opt, gnorm = adamw_update(grads, opt_state, params,
+                                                  lr)
+        metrics = {"loss": loss, "grad_norm": gnorm, "lr": lr}
+        return new_params, new_opt, metrics
+
+    return train_step
+
+
+def init_train_state(bundle: ModelBundle, rng) -> Tuple[Any, AdamWState]:
+    params = bundle.init(rng)
+    return params, adamw_init(params)
+
+
+def main():
+    """Generic local training launcher (reduced configs at CPU scale; the
+    full configs train on the pod — the dry-run proves they compile).
+
+        PYTHONPATH=src python -m repro.launch.train --arch xlstm-350m \
+            --steps 50 --seq 128 --batch 8
+    """
+    import argparse
+
+    import numpy as np
+
+    from ..checkpoint import Checkpointer
+    from ..configs import get_config
+    from ..data import TokenStream, make_batch_iterator
+    from ..models.zoo import get_model
+    from ..runtime import TrainLoop
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="starcoder2-3b")
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_train_ckpt")
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch).reduced()
+    bundle = get_model(cfg)
+    params, opt = init_train_state(bundle, jax.random.PRNGKey(0))
+    stream = TokenStream(vocab=cfg.vocab, seq_len=args.seq,
+                         global_batch=args.batch, seed=0)
+    step = jax.jit(make_train_step(bundle), donate_argnums=(0, 1))
+    loop = TrainLoop(
+        step_fn=lambda p, o, b: step(p, o, b),
+        batch_iter_fn=lambda s: make_batch_iterator(stream, start_step=s),
+        ckpt=Checkpointer(args.ckpt_dir), ckpt_every=25)
+    out = loop.run(params, opt, n_steps=args.steps)
+    hist = out["history"]
+    print(f"loss {hist[0]:.3f} -> {np.mean(hist[-5:]):.3f} "
+          f"over {len(hist)} steps")
+
+
+if __name__ == "__main__":
+    main()

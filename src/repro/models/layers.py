@@ -1,0 +1,298 @@
+"""Shared model layers: norms, RoPE, attention (direct + memory-safe
+chunked/flash), MLP variants.  Pure-pytree parameters (no framework), all
+functions jit/pjit-friendly and batched.
+
+Conventions:
+- linear weights are (d_in, d_out), no biases (documented per-arch deltas
+  in DESIGN.md); params are plain dicts with stable key names that the
+  sharding policy (models/sharding.py) pattern-matches.
+- attention tensors: q (B, Sq, H, hd); k/v (B, Skv, KV, hd); GQA via
+  head-group reshape.
+- computations run in the param dtype (bf16 for the big configs) with
+  float32 softmax/normalizer internals.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# --------------------------------------------------------------------------
+# Init helpers
+# --------------------------------------------------------------------------
+
+def dense_init(key, d_in: int, d_out: int, dtype, scale: float = 1.0):
+    std = scale / np.sqrt(d_in)
+    return (jax.random.normal(key, (d_in, d_out), jnp.float32) * std
+            ).astype(dtype)
+
+
+def embed_init(key, vocab: int, d: int, dtype):
+    return (jax.random.normal(key, (vocab, d), jnp.float32) * 0.02
+            ).astype(dtype)
+
+
+# --------------------------------------------------------------------------
+# Norms
+# --------------------------------------------------------------------------
+
+def rms_norm(x: jax.Array, w: jax.Array, eps: float = 1e-6) -> jax.Array:
+    # (§Perf iteration 6, REFUTED+reverted: an einsum-based variant that
+    # avoids materializing x in f32 was hypothesized to remove the f32
+    # copy stored next to the bf16 scan-saved carry; measured zero temp
+    # change on grok/whisper — the duplicate is not the norm's upcast.)
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    y = x32 * jax.lax.rsqrt(var + eps)
+    return (y * (1.0 + w.astype(jnp.float32))).astype(x.dtype)
+
+
+def layer_norm(x: jax.Array, w: jax.Array, b: jax.Array,
+               eps: float = 1e-5) -> jax.Array:
+    x32 = x.astype(jnp.float32)
+    mu = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.var(x32, axis=-1, keepdims=True)
+    y = (x32 - mu) * jax.lax.rsqrt(var + eps)
+    return (y * w.astype(jnp.float32) + b.astype(jnp.float32)).astype(x.dtype)
+
+
+def group_norm(x: jax.Array, w: jax.Array, n_groups: int,
+               eps: float = 1e-6) -> jax.Array:
+    """Per-head norm used by xLSTM cells: x (..., H, hd) normalized per head."""
+    x32 = x.astype(jnp.float32)
+    mu = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.var(x32, axis=-1, keepdims=True)
+    y = (x32 - mu) * jax.lax.rsqrt(var + eps)
+    return (y * w.astype(jnp.float32)).astype(x.dtype)
+
+
+# --------------------------------------------------------------------------
+# RoPE (with partial-dim fraction, chatglm-style 2d = fraction 0.5)
+# --------------------------------------------------------------------------
+
+def apply_rope(x: jax.Array, positions: jax.Array, fraction: float = 1.0,
+               theta: float = 10000.0) -> jax.Array:
+    """Rotary embedding.  x: (B, S, H, hd); positions: (S,) or (B, S).
+
+    ``fraction`` < 1 rotates only the first fraction*hd dims (chatglm's
+    2d-RoPE is fraction=0.5)."""
+    hd = x.shape[-1]
+    rot = int(hd * fraction) // 2 * 2
+    freqs = theta ** (-jnp.arange(0, rot, 2, dtype=jnp.float32) / rot)
+    ang = positions[..., None].astype(jnp.float32) * freqs   # (..., S, rot/2)
+    if ang.ndim == 2:                                        # (S, r2)
+        ang = ang[None]                                      # (1, S, r2)
+    cos = jnp.cos(ang)[:, :, None, :]                        # (B|1, S, 1, r2)
+    sin = jnp.sin(ang)[:, :, None, :]
+    x_rot, x_pass = x[..., :rot].astype(jnp.float32), x[..., rot:]
+    x1, x2 = x_rot[..., 0::2], x_rot[..., 1::2]
+    o1 = x1 * cos - x2 * sin
+    o2 = x2 * cos + x1 * sin
+    out = jnp.stack([o1, o2], axis=-1).reshape(x_rot.shape).astype(x.dtype)
+    return jnp.concatenate([out, x_pass], axis=-1)
+
+
+# --------------------------------------------------------------------------
+# Attention
+# --------------------------------------------------------------------------
+
+def _softcap(x: jax.Array, cap: float) -> jax.Array:
+    if cap and cap > 0.0:
+        return cap * jnp.tanh(x / cap)
+    return x
+
+
+NEG_INF = -1e30
+
+
+def direct_attention(q, k, v, *, causal: bool, window: int = 0,
+                     softcap: float = 0.0, q_offset=0,
+                     kv_len: Optional[jax.Array] = None) -> jax.Array:
+    """Materializes (Sq, Skv) scores — for short sequences and decode.
+
+    q: (B, Sq, H, hd); k/v: (B, Skv, KV, hd).  ``q_offset`` is the absolute
+    position of q[0] (decode: current position).  ``kv_len`` masks a
+    partially-filled cache.
+    """
+    b, sq, h, hd = q.shape
+    skv, kv = k.shape[1], k.shape[2]
+    g = h // kv
+    qg = q.reshape(b, sq, kv, g, hd).astype(jnp.float32)
+    kf = k.astype(jnp.float32)
+    scores = jnp.einsum("bqkgd,bskd->bkgqs", qg, kf) / np.sqrt(hd)
+    scores = _softcap(scores, softcap)
+    qi = jnp.arange(sq)[:, None] + q_offset
+    ki = jnp.arange(skv)[None, :]
+    mask = jnp.ones((sq, skv), bool)
+    if causal:
+        mask &= ki <= qi
+    if window and window > 0:
+        mask &= ki > qi - window
+    if kv_len is not None:
+        mask &= ki < (kv_len[:, None, None] if jnp.ndim(kv_len) else kv_len)
+    scores = jnp.where(mask, scores, NEG_INF)
+    p = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgqs,bskd->bqkgd", p, v.astype(jnp.float32))
+    return out.reshape(b, sq, h, hd).astype(q.dtype)
+
+
+def chunked_attention(q, k, v, *, causal: bool, window: int = 0,
+                      softcap: float = 0.0, q_chunk: int = 2048,
+                      kv_chunk: int = 1024) -> jax.Array:
+    """Flash-style attention in pure XLA: lax.map over q chunks, lax.scan
+    over kv chunks with running (max, denom, acc).  Never materializes more
+    than (q_chunk x kv_chunk) scores per head group — the memory-safe path
+    for the 32k prefill shapes.
+
+    §Perf iterations (EXPERIMENTS.md): (i) the whole function is wrapped
+    in jax.checkpoint by :func:`attention`, otherwise scan-AD stacks every
+    per-chunk probability tensor for the backward pass (full S^2 scores in
+    HBM — exactly what flash attention exists to avoid); (ii) probabilities
+    are cast to the value dtype before the PV matmul (halves the dominant
+    HBM stream; running max/denominator stay f32)."""
+    b, sq, h, hd = q.shape
+    skv, kv = k.shape[1], k.shape[2]
+    g = h // kv
+    scale = 1.0 / np.sqrt(hd)
+
+    qpad = (-sq) % q_chunk
+    kpad = (-skv) % kv_chunk
+    qp = jnp.pad(q, ((0, 0), (0, qpad), (0, 0), (0, 0)))
+    kp = jnp.pad(k, ((0, 0), (0, kpad), (0, 0), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, kpad), (0, 0), (0, 0)))
+    nq, nk = qp.shape[1] // q_chunk, kp.shape[1] // kv_chunk
+
+    qc = qp.reshape(b, nq, q_chunk, kv, g, hd).transpose(1, 0, 2, 3, 4, 5)
+    kc = kp.reshape(b, nk, kv_chunk, kv, hd)
+    vc = vp.reshape(b, nk, kv_chunk, kv, hd)
+
+    def q_block(args):
+        qi, qb = args                      # qb: (B, cq, KV, G, hd)
+        qb32 = qb.astype(jnp.float32) * scale
+        q_pos = qi * q_chunk + jnp.arange(q_chunk)
+
+        def kv_step(carry, kv_idx):
+            m, l, acc = carry
+            kb = kc[:, kv_idx].astype(jnp.float32)     # (B, ck, KV, hd)
+            vb = vc[:, kv_idx]                          # stays bf16
+            s = jnp.einsum("bqkgd,bskd->bkgqs", qb32, kb)
+            s = _softcap(s, softcap)
+            k_pos = kv_idx * kv_chunk + jnp.arange(kv_chunk)
+            msk = jnp.ones((q_chunk, kv_chunk), bool)
+            if causal:
+                msk &= k_pos[None, :] <= q_pos[:, None]
+            if window and window > 0:
+                msk &= k_pos[None, :] > q_pos[:, None] - window
+            msk &= (k_pos < skv)[None, :]
+            s = jnp.where(msk, s, NEG_INF)
+            m_new = jnp.maximum(m, s.max(axis=-1))
+            alpha = jnp.exp(m - m_new)
+            p = jnp.exp(s - m_new[..., None])
+            l_new = l * alpha + p.sum(axis=-1)
+            # (bf16-p variant REFUTED: casting p to bf16 for the PV matmul
+            # consistently RAISED measured HBM traffic ~10% — the convert
+            # materializes an extra copy at this XLA level; kept f32.)
+            pv = jnp.einsum("bkgqs,bskd->bkgqd", p, vb.astype(jnp.float32))
+            acc_new = acc * alpha[..., None] + pv
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((b, kv, g, q_chunk), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((b, kv, g, q_chunk), jnp.float32)
+        a0 = jnp.zeros((b, kv, g, q_chunk, hd), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(kv_step, (m0, l0, a0), jnp.arange(nk))
+        out = acc / jnp.maximum(l, 1e-30)[..., None]
+        return out.transpose(0, 3, 1, 2, 4)           # (B, cq, KV, G, hd)
+
+    outs = jax.lax.map(q_block, (jnp.arange(nq), qc))  # (nq, B, cq, KV, G, hd)
+    out = outs.transpose(1, 0, 2, 3, 4, 5).reshape(b, nq * q_chunk, h, hd)
+    return out[:, :sq].astype(q.dtype)
+
+
+def attention(q, k, v, *, causal: bool = True, window: int = 0,
+              softcap: float = 0.0, q_offset=0,
+              kv_len: Optional[jax.Array] = None,
+              chunked_threshold: int = 4096,
+              remat: bool = False) -> jax.Array:
+    """Dispatch: chunked flash for long full-length attention, direct
+    otherwise (short sequences, decode steps, partially-filled caches).
+
+    ``remat=True`` recomputes chunk probabilities in the backward pass
+    (flash-bwd semantics).  Measured in §Perf iteration 1b/2a: *under the
+    per-layer remat already in place* the nested checkpoint re-recomputes
+    the whole attention and RAISES HBM traffic (refuted hypothesis, kept
+    as an option for unremat'd stacks); bf16 probabilities are kept (pure
+    win on the PV stream)."""
+    sq, skv = q.shape[1], k.shape[1]
+    if (sq == skv and sq >= chunked_threshold and kv_len is None
+            and not isinstance(q_offset, jax.Array) and q_offset == 0):
+        fn = functools.partial(chunked_attention, causal=causal,
+                               window=window, softcap=softcap)
+        if remat:
+            fn = jax.checkpoint(fn, prevent_cse=False)
+        return fn(q, k, v)
+    return direct_attention(q, k, v, causal=causal, window=window,
+                            softcap=softcap, q_offset=q_offset, kv_len=kv_len)
+
+
+# --------------------------------------------------------------------------
+# MLP variants
+# --------------------------------------------------------------------------
+
+def init_mlp(key, d: int, f: int, kind: str, dtype) -> dict:
+    ks = jax.random.split(key, 3)
+    if kind in ("swiglu", "geglu"):
+        return {"w_gate": dense_init(ks[0], d, f, dtype),
+                "w_up": dense_init(ks[1], d, f, dtype),
+                "w_down": dense_init(ks[2], f, d, dtype)}
+    return {"w_up": dense_init(ks[0], d, f, dtype),
+            "w_down": dense_init(ks[1], f, d, dtype)}
+
+
+def mlp_forward(params: dict, x: jax.Array, kind: str) -> jax.Array:
+    if kind == "swiglu":
+        h = jax.nn.silu(x @ params["w_gate"]) * (x @ params["w_up"])
+    elif kind == "geglu":
+        h = jax.nn.gelu(x @ params["w_gate"], approximate=True) \
+            * (x @ params["w_up"])
+    elif kind == "gelu":
+        h = jax.nn.gelu(x @ params["w_up"], approximate=True)
+    elif kind == "relu2":
+        h = jnp.square(jax.nn.relu(x @ params["w_up"]))
+    else:
+        raise ValueError(f"unknown mlp kind {kind}")
+    return h @ params["w_down"]
+
+
+# --------------------------------------------------------------------------
+# Causal depthwise conv (recurrentgemma / xlstm front conv)
+# --------------------------------------------------------------------------
+
+def init_causal_conv(key, width: int, channels: int, dtype) -> dict:
+    return {"conv_w": (jax.random.normal(key, (width, channels), jnp.float32)
+                       * (1.0 / np.sqrt(width))).astype(dtype)}
+
+
+def causal_conv(params: dict, x: jax.Array) -> jax.Array:
+    """Depthwise causal conv along time: x (B, S, C)."""
+    w = params["conv_w"]
+    width = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (width - 1, 0), (0, 0)))
+    out = jnp.zeros_like(x)
+    for i in range(width):
+        out = out + xp[:, i:i + x.shape[1]] * w[i]
+    return out
+
+
+def causal_conv_step(params: dict, x_t: jax.Array,
+                     conv_state: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Single decode step.  conv_state: (B, width-1, C) trailing inputs."""
+    w = params["conv_w"]
+    width = w.shape[0]
+    window = jnp.concatenate([conv_state, x_t[:, None]], axis=1)
+    out = jnp.einsum("bwc,wc->bc", window, w)
+    return out, window[:, 1:]

@@ -1,0 +1,147 @@
+"""Mixture-of-Experts layer: top-k routing with capacity, scatter-based
+dispatch (no (tokens, E, C) one-hot einsum — the dispatch is a batched
+scatter/gather, which XLA shards over the data axis without communication;
+expert weights are TP-sharded over d_ff by default, EP-shardable over E
+when divisible — see EXPERIMENTS.md §Perf for the EP-vs-TP study).
+
+Shapes: x (B, S, D) -> buffer (B, E, C, D) with per-sequence capacity
+C = ceil(top_k * S / E * capacity_factor); overflow tokens drop (standard
+GShard behaviour).  Aux load-balance loss returned for the trainer.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .layers import dense_init
+
+
+def init_moe(key, d: int, f: int, n_experts: int, n_shared: int,
+             shared_ff: int, dtype) -> dict:
+    ks = jax.random.split(key, 8)
+    scale = 1.0 / math.sqrt(d)
+    p = {
+        "router": dense_init(ks[0], d, n_experts, jnp.float32),
+        "experts_gate": (jax.random.normal(ks[1], (n_experts, d, f),
+                                           jnp.float32) * scale).astype(dtype),
+        "experts_up": (jax.random.normal(ks[2], (n_experts, d, f),
+                                         jnp.float32) * scale).astype(dtype),
+        "experts_down": (jax.random.normal(ks[3], (n_experts, f, d),
+                                           jnp.float32)
+                         / math.sqrt(f)).astype(dtype),
+    }
+    if n_shared > 0:
+        p["shared_gate"] = dense_init(ks[4], d, shared_ff, dtype)
+        p["shared_up"] = dense_init(ks[5], d, shared_ff, dtype)
+        p["shared_down"] = dense_init(ks[6], shared_ff, d, dtype)
+        p["shared_route"] = dense_init(ks[7], d, 1, dtype)
+    return p
+
+
+def capacity(seq: int, n_experts: int, top_k: int,
+             capacity_factor: float) -> int:
+    c = int(math.ceil(top_k * seq / n_experts * capacity_factor))
+    return max(8, min(c, seq * top_k))
+
+
+def moe_forward_dense(params: dict, x: jax.Array, *, n_experts: int,
+                      top_k: int) -> Tuple[jax.Array, jax.Array]:
+    """Decode-path MoE: compute every expert densely, combine with top-k
+    gates (§Perf iteration, qwen2-moe x decode_32k).
+
+    At S=1 the capacity machinery (floor C=8) runs 60 experts x 8 slots
+    per token — 120x waste — and its scatter/gather lowers to collective-
+    heavy code.  For single-token steps every expert's weights must be
+    read from HBM anyway (batch 128 x top-4 touches all 60 experts w.h.p.)
+    so the dense form costs the same memory-term and removes the dispatch
+    entirely."""
+    logits = (x.astype(jnp.float32) @ params["router"])
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, expert_idx = jax.lax.top_k(probs, top_k)
+    gate_vals = gate_vals / jnp.maximum(
+        gate_vals.sum(-1, keepdims=True), 1e-9)
+    gates = jnp.zeros_like(probs).at[
+        jnp.arange(x.shape[0])[:, None, None],
+        jnp.arange(x.shape[1])[None, :, None],
+        expert_idx].set(gate_vals)                       # (B,S,E)
+    hg = jnp.einsum("bsd,edf->bsef", x, params["experts_gate"])
+    hu = jnp.einsum("bsd,edf->bsef", x, params["experts_up"])
+    hf = jax.nn.silu(hg) * hu
+    out = jnp.einsum("bsef,efd,bse->bsd", hf, params["experts_down"],
+                     gates.astype(hf.dtype))
+    if "shared_gate" in params:
+        sh = jax.nn.silu(x @ params["shared_gate"]) * (x @ params["shared_up"])
+        sh = sh @ params["shared_down"]
+        out = out + sh * jax.nn.sigmoid(x @ params["shared_route"]
+                                        ).astype(out.dtype)
+    return out.astype(x.dtype), jnp.zeros((), jnp.float32)
+
+
+def moe_forward(params: dict, x: jax.Array, *, n_experts: int, top_k: int,
+                capacity_factor: float = 1.25
+                ) -> Tuple[jax.Array, jax.Array]:
+    """x: (B, S, D) -> (out (B, S, D), aux_loss scalar)."""
+    b, s, d = x.shape
+    if s <= 4:                       # decode steps: dense path (see above)
+        return moe_forward_dense(params, x, n_experts=n_experts,
+                                 top_k=top_k)
+    e, k = n_experts, top_k
+    c = capacity(s, e, k, capacity_factor)
+
+    logits = (x.astype(jnp.float32) @ params["router"])          # (B,S,E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, expert_idx = jax.lax.top_k(probs, k)              # (B,S,k)
+    gate_vals = gate_vals / jnp.maximum(
+        gate_vals.sum(-1, keepdims=True), 1e-9)
+
+    # Load-balance aux loss (Switch): E * sum_e f_e * P_e
+    me = probs.mean(axis=(0, 1))                                  # (E,)
+    ce = jax.nn.one_hot(expert_idx, e).sum(axis=2).mean(axis=(0, 1)) / k
+    aux = e * jnp.sum(me * ce)
+
+    # Position of each (token, slot) within its expert, per sequence:
+    # cumsum of one-hot over the flattened (S*k) routing decisions.
+    oh = jax.nn.one_hot(expert_idx.reshape(b, s * k), e,
+                        dtype=jnp.int32)                          # (B,S*k,E)
+    pos_all = jnp.cumsum(oh, axis=1) - 1                          # (B,S*k,E)
+    pos = jnp.take_along_axis(
+        pos_all, expert_idx.reshape(b, s * k, 1), axis=-1
+    ).reshape(b, s, k)                                            # (B,S,k)
+    keep = pos < c
+
+    # Scatter tokens into the (B, E*C, D) expert buffer, one top-k slot at
+    # a time (k is 2-4; avoids materializing (B, S*k, D)).
+    buf = jnp.zeros((b, e * c, d), x.dtype)
+    bidx = jnp.arange(b)[:, None]
+    for slot in range(k):
+        idx = expert_idx[:, :, slot] * c + jnp.minimum(pos[:, :, slot], c - 1)
+        xk = jnp.where(keep[:, :, slot, None], x, 0).astype(x.dtype)
+        buf = buf.at[bidx, idx].add(xk)
+
+    # Expert FFN (SwiGLU) over slots: (B, E, C, D) x (E, D, F)
+    h = buf.reshape(b, e, c, d)
+    hg = jnp.einsum("becd,edf->becf", h, params["experts_gate"])
+    hu = jnp.einsum("becd,edf->becf", h, params["experts_up"])
+    hf = jax.nn.silu(hg) * hu
+    out_buf = jnp.einsum("becf,efd->becd", hf, params["experts_down"])
+    out_buf = out_buf.reshape(b, e * c, d)
+
+    # Combine: gather each token's slot back, weighted by its gate.
+    out = jnp.zeros_like(x)
+    for slot in range(k):
+        idx = expert_idx[:, :, slot] * c + jnp.minimum(pos[:, :, slot], c - 1)
+        got = jnp.take_along_axis(out_buf, idx[..., None], axis=1)
+        w = (gate_vals[:, :, slot] * keep[:, :, slot])[..., None]
+        out = out + got * w.astype(out.dtype)
+
+    # Shared experts (qwen2-moe): dense SwiGLU branch with sigmoid gate.
+    if "shared_gate" in params:
+        sh = jax.nn.silu(x @ params["shared_gate"]) * (x @ params["shared_up"])
+        sh = sh @ params["shared_down"]
+        sgate = jax.nn.sigmoid(x @ params["shared_route"])
+        out = out + sh * sgate.astype(out.dtype)
+    return out, aux

@@ -1,0 +1,107 @@
+"""RG-LRU recurrent block (Griffin / RecurrentGemma [arXiv:2402.19427]).
+
+Block: x -> {linear -> causal-conv4 -> RG-LRU} gated by {linear -> GeLU},
+projected back to d_model.  The RG-LRU diagonal linear recurrence
+
+    r_t = sigmoid(W_a x_t);  i_t = sigmoid(W_x x_t)
+    a_t = exp(c * softplus(Lambda) * (-r_t))          (per-channel decay)
+    h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+
+is evaluated with ``jax.lax.associative_scan`` (log-depth — the TPU-native
+replacement for the paper's sequential GPU kernel; see DESIGN.md §2) for
+train/prefill and a single fused step for decode.
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .layers import causal_conv, causal_conv_step, dense_init, init_causal_conv
+
+_C = 8.0  # Griffin's fixed scalar
+
+
+def init_rglru_block(key, d: int, rnn_width: int, conv_width: int,
+                     dtype) -> dict:
+    ks = jax.random.split(key, 7)
+    p = {
+        "rg_in": dense_init(ks[0], d, rnn_width, dtype),
+        "rg_gate_in": dense_init(ks[1], d, rnn_width, dtype),
+        "rg_wa": dense_init(ks[2], rnn_width, rnn_width, dtype),
+        "rg_wx": dense_init(ks[3], rnn_width, rnn_width, dtype),
+        # Lambda init so a^c in [0.9, 0.999] (Griffin appendix)
+        "rg_lambda": jnp.asarray(
+            jax.random.uniform(ks[4], (rnn_width,), jnp.float32,
+                               minval=2.0, maxval=6.0)),
+        "rg_out": dense_init(ks[5], rnn_width, d, dtype),
+    }
+    p.update(init_causal_conv(ks[6], conv_width, rnn_width, dtype))
+    return p
+
+
+def _gates(params, u):
+    r = jax.nn.sigmoid((u @ params["rg_wa"]).astype(jnp.float32))
+    i = jax.nn.sigmoid((u @ params["rg_wx"]).astype(jnp.float32))
+    log_a = -_C * jax.nn.softplus(params["rg_lambda"]) * r     # (B,S,R) f32
+    a = jnp.exp(log_a)
+    gated_x = i * u.astype(jnp.float32)
+    mult = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12))
+    return a, mult * gated_x
+
+
+def rglru_scan(params: dict, u: jax.Array) -> jax.Array:
+    """Full-sequence RG-LRU via associative scan.  u: (B, S, R)."""
+    a, b = _gates(params, u)
+
+    def combine(l, r):
+        return l[0] * r[0], r[0] * l[1] + r[1]
+
+    _, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+    return h.astype(u.dtype)
+
+
+def rglru_step(params: dict, u_t: jax.Array,
+               h_prev: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Decode: u_t (B, R), h_prev (B, R) f32 -> (out, h_new)."""
+    a, b = _gates(params, u_t[:, None])
+    h = a[:, 0] * h_prev + b[:, 0]
+    return h.astype(u_t.dtype), h
+
+
+def rglru_block(params: dict, x: jax.Array) -> jax.Array:
+    """Full recurrent block, train/prefill path.  x: (B, S, D)."""
+    u = x @ params["rg_in"]
+    gate = jax.nn.gelu(x @ params["rg_gate_in"], approximate=True)
+    u = causal_conv({"conv_w": params["conv_w"]}, u)
+    h = rglru_scan(params, u)
+    return (h * gate) @ params["rg_out"]
+
+
+def rglru_block_prefill(params: dict, x: jax.Array):
+    """Like rglru_block but also returns (h_last, conv_state) for decode."""
+    u = x @ params["rg_in"]
+    gate = jax.nn.gelu(x @ params["rg_gate_in"], approximate=True)
+    uc = causal_conv({"conv_w": params["conv_w"]}, u)
+    h = rglru_scan(params, uc)
+    out = (h * gate) @ params["rg_out"]
+    width = params["conv_w"].shape[0]
+    conv_state = u[:, -(width - 1):]                  # (B, w-1, R)
+    a, b = _gates(params, uc)                          # recompute last state
+    h_last = h[:, -1].astype(jnp.float32)
+    return out, (h_last, conv_state)
+
+
+def rglru_block_step(params: dict, x_t: jax.Array, state
+                     ) -> Tuple[jax.Array, tuple]:
+    """Decode step.  x_t: (B, D); state = (h (B,R) f32, conv (B,w-1,R))."""
+    h_prev, conv_state = state
+    u_t = x_t @ params["rg_in"]
+    gate = jax.nn.gelu(x_t @ params["rg_gate_in"], approximate=True)
+    uc_t, conv_state = causal_conv_step({"conv_w": params["conv_w"]},
+                                        u_t, conv_state)
+    h_t, h_new = rglru_step(params, uc_t, h_prev)
+    out = (h_t * gate) @ params["rg_out"]
+    return out, (h_new, conv_state)

@@ -1,0 +1,208 @@
+"""Sharding policy: parameter / activation / cache PartitionSpecs.
+
+Param specs are derived from leaf names (the init functions use stable
+naming conventions) + shapes; any axis assignment that does not divide the
+dimension is dropped to replication, so one rule table serves every arch
+and both meshes.  ``fsdp=True`` (grok-1, internvl2) additionally shards a
+replicated dimension over the data axis (ZeRO-3-style: XLA inserts
+per-layer all-gathers).  ``zero1_spec`` adds data-sharding for optimizer
+moments (ZeRO-1) for non-fsdp archs.
+"""
+
+from __future__ import annotations
+
+import re
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+# (regex on leaf key, (rule for each rank)) — rules are tuples of axis
+# roles: "tp" = model axis, "dp" = fsdp candidate, None = replicated.
+_RULES = [
+    (r"^embed$",            ("tp", "dp")),
+    (r"^head$",             ("dp", "tp")),
+    (r"^(wq|wk|wv|xwq|xwk|xwv)$", ("dp", "tp")),
+    (r"^(wo|xwo)$",         ("tp", "dp")),
+    (r"^(w_gate|w_up)$",    ("dp", "tp")),
+    (r"^w_down$",           ("tp", "dp")),
+    (r"^router$",           (None, None)),
+    (r"^experts_(gate|up)$", (None, "dp", "tp")),
+    (r"^experts_down$",     (None, "tp", "dp")),
+    (r"^shared_(gate|up)$", ("dp", "tp")),
+    (r"^shared_down$",      ("tp", "dp")),
+    (r"^shared_route$",     (None, None)),
+    (r"^(rg_in|rg_gate_in)$", ("dp", "tp")),
+    (r"^(rg_wa|rg_wx)$",    (None, "tp")),
+    (r"^rg_lambda$",        ("tp",)),
+    (r"^rg_out$",           ("tp", "dp")),
+    (r"^conv_w$",           (None, "tp")),
+    (r"^(m_up_x|m_up_z|m_wq|m_wk|m_wv)$", ("dp", "tp")),
+    (r"^(m_wi|m_wf)$",      (None, None)),
+    (r"^m_down$",           ("tp", "dp")),
+    (r"^m_gn$",             ("tp",)),
+    (r"^s_w[zifo]$",        ("dp", "tp")),
+    (r"^s_r[zifo]$",        (None, None, None)),
+    (r"^s_gn$",             (None,)),
+    (r"^(s_up_gate|s_up)$", ("dp", "tp")),
+    (r"^s_down$",           ("tp", "dp")),
+    (r"^norm",              (None,)),
+]
+
+
+def _axis_fits(dim: int, size: int) -> bool:
+    return size > 1 and dim % size == 0
+
+
+def _leaf_name(path) -> str:
+    for entry in reversed(path):
+        if isinstance(entry, jax.tree_util.DictKey):
+            return str(entry.key)
+    return ""
+
+
+def param_spec(name: str, shape: Tuple[int, ...], mesh_axes: Dict[str, int],
+               fsdp: bool) -> P:
+    """Resolve the PartitionSpec for one parameter leaf."""
+    tp = mesh_axes.get("model", 1)
+    dp = mesh_axes.get("data", 1)
+    for pat, roles in _RULES:
+        if re.match(pat, name):
+            # rank mismatch (stacked scan leading dim): prepend None
+            roles_ = roles
+            extra = len(shape) - len(roles)
+            if extra > 0:
+                roles_ = (None,) * extra + tuple(roles)
+            elif extra < 0:
+                return P()
+            out = []
+            for dim, role in zip(shape, roles_):
+                if role == "tp" and _axis_fits(dim, tp):
+                    out.append("model")
+                elif role == "dp" and fsdp and _axis_fits(dim, dp):
+                    out.append("data")
+                else:
+                    out.append(None)
+            return P(*out)
+    return P()  # unknown -> replicate
+
+
+def param_specs(params, mesh_axes: Dict[str, int], fsdp: bool):
+    """Spec pytree matching ``params`` (works on shapes or arrays)."""
+    def f(path, leaf):
+        shape = leaf.shape
+        return param_spec(_leaf_name(path), tuple(shape), mesh_axes, fsdp)
+    return jax.tree_util.tree_map_with_path(f, params)
+
+
+def zero1_spec(spec: P, shape: Tuple[int, ...],
+               mesh_axes: Dict[str, int]) -> P:
+    """Add data-axis sharding to one replicated dim (optimizer moments).
+    No-op when the param spec already consumes the data axis (fsdp)."""
+    dp = mesh_axes.get("data", 1)
+    parts = list(spec) + [None] * (len(shape) - len(spec))
+    used = {a for p in parts if p is not None
+            for a in ((p,) if isinstance(p, str) else tuple(p))}
+    if "data" in used:
+        return P(*parts)
+    for i, (dim, cur) in enumerate(zip(shape, parts)):
+        if cur is None and _axis_fits(dim, dp):
+            parts[i] = "data"
+            break
+    return P(*parts)
+
+
+def batch_axes(mesh_axes: Dict[str, int]) -> Tuple[str, ...]:
+    """Axes the global batch is sharded over."""
+    return tuple(a for a in ("pod", "data") if a in mesh_axes)
+
+
+def batch_spec(shape: Tuple[int, ...], mesh_axes: Dict[str, int],
+               batch_dim: int = 0) -> P:
+    """Shard the batch dim over (pod, data) when divisible; degrade to the
+    largest divisible prefix of those axes; replicate a batch of 1 (the
+    long_500k decode cell — data axis idle by design, DESIGN.md §5)."""
+    parts: list = [None] * len(shape)
+    axes = list(batch_axes(mesh_axes))
+    while axes:
+        total = int(np.prod([mesh_axes[a] for a in axes]))
+        if shape[batch_dim] % total == 0 and total > 1:
+            parts[batch_dim] = tuple(axes) if len(axes) > 1 else axes[0]
+            break
+        axes = axes[1:]
+    return P(*parts)
+
+
+def cache_specs(cache, mesh_axes: Dict[str, int], batch: int):
+    """KV caches / states: shard batch over data axes when divisible, AND
+    the kv-head dim (dim -2 of rank>=4 attention caches) over model when
+    divisible — §Perf iteration 2b: an unsharded-head 32k cache is the
+    decode temp-memory bottleneck (qwen2-moe: 103 GB -> GBs).  Falls back
+    to sharding the trailing feature dim when neither applies."""
+    dp_axes = batch_axes(mesh_axes)
+    dp = int(np.prod([mesh_axes[a] for a in dp_axes])) if dp_axes else 1
+    tp = mesh_axes.get("model", 1)
+
+    def f(path, leaf):
+        shape = leaf.shape
+        if not shape:
+            return P()
+        parts: list = [None] * len(shape)
+        batch_i = None
+        for i, d in enumerate(shape):
+            if d == batch and _axis_fits(d, dp):
+                parts[i] = dp_axes if len(dp_axes) > 1 else dp_axes[0]
+                batch_i = i
+                break
+        model_done = False
+        if len(shape) >= 4 and len(shape) - 2 != batch_i \
+                and _axis_fits(shape[-2], tp):
+            parts[-2] = "model"
+            model_done = True
+        elif len(shape) >= 4 and _axis_fits(shape[-1], tp):
+            # kv-heads don't divide the model axis (GQA): shard head_dim
+            # instead — attention QK/PV become sharded contractions with
+            # partial-sum all-reduces, trading a small collective for a
+            # tp-fold cache (gemma2/internvl/minitron/grok decode cells
+            # all exceeded HBM with replicated-head caches; §Perf iter 7).
+            parts[-1] = "model"
+            model_done = True
+        if batch_i is None and not model_done and _axis_fits(shape[-1], tp):
+            parts[-1] = "model"
+        return P(*parts)
+
+    return jax.tree_util.tree_map_with_path(f, cache)
+
+
+def mesh_axes_of(mesh) -> Dict[str, int]:
+    return dict(zip(mesh.axis_names, mesh.devices.shape))
+
+
+# --------------------------------------------------------------------------
+# Activation sharding constraints (§Perf iteration 4: with fsdp params the
+# SPMD partitioner may REPLICATE activations over the data axis instead of
+# all-gathering params — 16x activation memory on grok-1.  The launcher
+# registers the mesh; models pin their residual streams explicitly.)
+# --------------------------------------------------------------------------
+
+_ACT_MESH = None
+
+
+def set_activation_mesh(mesh) -> None:
+    global _ACT_MESH
+    _ACT_MESH = mesh
+
+
+def shard_activations(x, batch_dim: int = 0):
+    """Constrain (B, S, D)-style activations to batch-over-(pod, data).
+    No-op when no mesh is registered or the batch doesn't divide."""
+    if _ACT_MESH is None:
+        return x
+    from jax.sharding import NamedSharding
+    axes = mesh_axes_of(_ACT_MESH)
+    spec = batch_spec(tuple(x.shape), axes, batch_dim)
+    if all(p is None for p in spec):
+        return x
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(_ACT_MESH, spec))

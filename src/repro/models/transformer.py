@@ -1,0 +1,412 @@
+"""Decoder-LM assembly: pattern-grouped blocks under lax.scan, embedding,
+head, loss; train / prefill / decode paths with pytree caches.
+
+Layer stacks are scanned over *pattern groups* (e.g. gemma2's
+(local, global) pair, recurrentgemma's (rec, rec, global) triple) so a
+64-layer model lowers to one traced group body — essential for HLO size and
+compile time at 512 simulated devices.  Heterogeneous tails (e.g.
+recurrentgemma's trailing 2 rec layers) run unscanned.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs.base import ArchConfig
+from . import layers as L
+from . import moe as MOE
+from . import rglru as RG
+from . import sharding
+from . import xlstm as XL
+
+
+def _dtype(cfg: ArchConfig):
+    return jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+
+
+# --------------------------------------------------------------------------
+# Per-block init
+# --------------------------------------------------------------------------
+
+def init_block(key, ltype: str, cfg: ArchConfig) -> Dict[str, Any]:
+    dt = _dtype(cfg)
+    d = cfg.d_model
+    ks = jax.random.split(key, 8)
+    p: Dict[str, Any] = {"norm_in": jnp.zeros((d,), jnp.float32)}
+
+    if ltype in ("global", "local"):
+        p.update({
+            "wq": L.dense_init(ks[0], d, cfg.q_dim, dt),
+            "wk": L.dense_init(ks[1], d, cfg.kv_dim, dt),
+            "wv": L.dense_init(ks[2], d, cfg.kv_dim, dt),
+            "wo": L.dense_init(ks[3], cfg.q_dim, d, dt),
+        })
+    elif ltype == "rec":
+        p.update(RG.init_rglru_block(ks[0], d, cfg.rnn_width or d,
+                                     cfg.conv_width, dt))
+    elif ltype == "m":
+        p.update(XL.init_mlstm_block(ks[0], d, cfg.n_heads, dt,
+                                     cfg.mlstm_proj_factor, cfg.conv_width))
+    elif ltype == "s":
+        p.update(XL.init_slstm_block(ks[0], d, cfg.n_heads, dt))
+    else:
+        raise ValueError(f"unknown layer type {ltype}")
+
+    if cfg.post_norm and ltype in ("global", "local", "rec"):
+        p["norm_post"] = jnp.zeros((d,), jnp.float32)
+
+    # MLP slot (xlstm blocks carry their own projections -> none)
+    if ltype in ("global", "local", "rec") and cfg.mlp_kind != "none":
+        p["norm_mlp"] = jnp.zeros((d,), jnp.float32)
+        if cfg.n_experts > 0:
+            p["moe"] = MOE.init_moe(ks[4], d, cfg.d_ff, cfg.n_experts,
+                                    cfg.n_shared_experts, cfg.shared_ff, dt)
+        else:
+            p["mlp"] = L.init_mlp(ks[4], d, cfg.d_ff, cfg.mlp_kind, dt)
+        if cfg.post_norm:
+            p["norm_mlp_post"] = jnp.zeros((d,), jnp.float32)
+    return p
+
+
+# --------------------------------------------------------------------------
+# Caches
+# --------------------------------------------------------------------------
+
+def init_block_cache(ltype: str, cfg: ArchConfig, batch: int,
+                     max_len: int) -> Dict[str, Any]:
+    dt = _dtype(cfg)
+    d = cfg.d_model
+    if ltype == "global":
+        shape = (batch, max_len, cfg.n_kv_heads, cfg.head_dim)
+        return {"k": jnp.zeros(shape, dt), "v": jnp.zeros(shape, dt)}
+    if ltype == "local":
+        w = min(cfg.window, max_len)
+        shape = (batch, w, cfg.n_kv_heads, cfg.head_dim)
+        return {"k": jnp.zeros(shape, dt), "v": jnp.zeros(shape, dt)}
+    if ltype == "rec":
+        r = cfg.rnn_width or d
+        return {"h": jnp.zeros((batch, r), jnp.float32),
+                "conv": jnp.zeros((batch, cfg.conv_width - 1, r), dt)}
+    if ltype == "m":
+        di = cfg.mlstm_proj_factor * d
+        hd = di // cfg.n_heads
+        return {"C": jnp.zeros((batch, cfg.n_heads, hd, hd), jnp.float32),
+                "n": jnp.zeros((batch, cfg.n_heads, hd), jnp.float32),
+                "m": jnp.full((batch, cfg.n_heads), -1e30, jnp.float32),
+                "conv": jnp.zeros((batch, cfg.conv_width - 1, di), dt)}
+    if ltype == "s":
+        hd = d // cfg.n_heads
+        z = jnp.zeros((batch, cfg.n_heads, hd), jnp.float32)
+        return {"c": z, "n": z, "m": z - 1e30,
+                "h": jnp.zeros((batch, cfg.n_heads, hd), dt)}
+    raise ValueError(ltype)
+
+
+# --------------------------------------------------------------------------
+# Per-block forward
+# --------------------------------------------------------------------------
+
+def _attn_block(p, x, ltype, cfg: ArchConfig, mode, positions, pos, cache):
+    b, s, d = x.shape
+    h = L.rms_norm(x, p["norm_in"])
+    q = (h @ p["wq"]).reshape(b, s, cfg.n_heads, cfg.head_dim)
+    k = (h @ p["wk"]).reshape(b, s, cfg.n_kv_heads, cfg.head_dim)
+    v = (h @ p["wv"]).reshape(b, s, cfg.n_kv_heads, cfg.head_dim)
+    if cfg.use_rope:
+        q = L.apply_rope(q, positions, cfg.rope_fraction, cfg.rope_theta)
+        k = L.apply_rope(k, positions, cfg.rope_fraction, cfg.rope_theta)
+    window = cfg.window if ltype == "local" else 0
+    new_cache = cache
+
+    if mode == "decode":
+        if ltype == "local":
+            wlen = cache["k"].shape[1]
+            slot = pos % wlen
+            ck = jax.lax.dynamic_update_slice(cache["k"], k,
+                                              (0, slot, 0, 0))
+            cv = jax.lax.dynamic_update_slice(cache["v"], v,
+                                              (0, slot, 0, 0))
+            kv_len = jnp.minimum(pos + 1, wlen)
+            out = L.direct_attention(q, ck, cv, causal=False, window=0,
+                                     softcap=cfg.attn_softcap,
+                                     kv_len=kv_len)
+        else:
+            ck = jax.lax.dynamic_update_slice(cache["k"], k, (0, pos, 0, 0))
+            cv = jax.lax.dynamic_update_slice(cache["v"], v, (0, pos, 0, 0))
+            out = L.direct_attention(q, ck, cv, causal=False, window=0,
+                                     softcap=cfg.attn_softcap,
+                                     kv_len=pos + 1)
+        new_cache = {"k": ck, "v": cv}
+    else:
+        out = L.attention(q, k, v, causal=True, window=window,
+                          softcap=cfg.attn_softcap)
+        if mode == "prefill":
+            if ltype == "local" and s >= cache["k"].shape[1]:
+                # keep the last `w` keys in ring order: key at position p
+                # lives in slot p % w  ->  roll the tail by s % w.
+                w = cache["k"].shape[1]
+                new_cache = {
+                    "k": jnp.roll(k[:, -w:], shift=s % w, axis=1),
+                    "v": jnp.roll(v[:, -w:], shift=s % w, axis=1)}
+            else:
+                new_cache = {
+                    "k": jax.lax.dynamic_update_slice(cache["k"], k,
+                                                      (0, 0, 0, 0)),
+                    "v": jax.lax.dynamic_update_slice(cache["v"], v,
+                                                      (0, 0, 0, 0))}
+
+    out = out.reshape(b, s, cfg.q_dim) @ p["wo"]
+    if cfg.post_norm:
+        out = L.rms_norm(out, p["norm_post"])
+    return x + out, new_cache
+
+
+def _rec_block(p, x, cfg, mode, cache):
+    h = L.rms_norm(x, p["norm_in"])
+    if mode == "train":
+        out = RG.rglru_block(p, h)
+        new_cache = cache
+    elif mode == "prefill":
+        out, (hl, cs) = RG.rglru_block_prefill(p, h)
+        new_cache = {"h": hl, "conv": cs}
+    else:
+        out, (hl, cs) = RG.rglru_block_step(
+            p, h[:, 0], (cache["h"], cache["conv"]))
+        out = out[:, None]
+        new_cache = {"h": hl, "conv": cs}
+    if cfg.post_norm:
+        out = L.rms_norm(out, p["norm_post"])
+    return x + out, new_cache
+
+
+def _mlstm_blk(p, x, cfg, mode, cache):
+    h = L.rms_norm(x, p["norm_in"])
+    if mode == "decode":
+        state = ((cache["C"], cache["n"], cache["m"]), cache["conv"])
+        out, (cell, conv) = XL.mlstm_block(p, h, cfg.n_heads, "decode", state)
+        new_cache = {"C": cell[0], "n": cell[1], "m": cell[2], "conv": conv}
+    elif mode == "prefill":
+        out, (cell, conv) = XL.mlstm_block(p, h, cfg.n_heads, "prefill")
+        new_cache = {"C": cell[0], "n": cell[1], "m": cell[2], "conv": conv}
+    else:
+        out, _ = XL.mlstm_block(p, h, cfg.n_heads, "train")
+        new_cache = cache
+    return x + out, new_cache
+
+
+def _slstm_blk(p, x, cfg, mode, cache):
+    h = L.rms_norm(x, p["norm_in"])
+    state = None
+    if mode == "decode":
+        state = (cache["c"], cache["n"], cache["m"], cache["h"])
+    out, carry = XL.slstm_block(p, h, cfg.n_heads, mode, state)
+    new_cache = cache
+    if mode in ("decode", "prefill"):
+        new_cache = {"c": carry[0], "n": carry[1], "m": carry[2],
+                     "h": carry[3]}
+    return x + out, new_cache
+
+
+def _mlp_slot(p, x, cfg: ArchConfig):
+    if "norm_mlp" not in p:
+        return x, 0.0
+    h = L.rms_norm(x, p["norm_mlp"])
+    if "moe" in p:
+        out, aux = MOE.moe_forward(p["moe"], h, n_experts=cfg.n_experts,
+                                   top_k=cfg.top_k,
+                                   capacity_factor=cfg.capacity_factor)
+    else:
+        out, aux = L.mlp_forward(p["mlp"], h, cfg.mlp_kind), 0.0
+    if cfg.post_norm:
+        out = L.rms_norm(out, p["norm_mlp_post"])
+    return x + out, aux
+
+
+def block_apply(ltype: str, p, x, cfg: ArchConfig, mode: str,
+                positions, pos, cache):
+    if ltype in ("global", "local"):
+        x, nc = _attn_block(p, x, ltype, cfg, mode, positions, pos, cache)
+    elif ltype == "rec":
+        x, nc = _rec_block(p, x, cfg, mode, cache)
+    elif ltype == "m":
+        x, nc = _mlstm_blk(p, x, cfg, mode, cache)
+    elif ltype == "s":
+        x, nc = _slstm_blk(p, x, cfg, mode, cache)
+    else:
+        raise ValueError(ltype)
+    x, aux = _mlp_slot(p, x, cfg)
+    return x, nc, aux
+
+
+# --------------------------------------------------------------------------
+# Full model
+# --------------------------------------------------------------------------
+
+def init_params(key, cfg: ArchConfig) -> Dict[str, Any]:
+    dt = _dtype(cfg)
+    keys = jax.random.split(key, 4 + len(cfg.tail))
+    g = cfg.n_groups()
+
+    def init_group(k):
+        pks = jax.random.split(k, len(cfg.pattern))
+        return {f"b{i}": init_block(pks[i], lt, cfg)
+                for i, lt in enumerate(cfg.pattern)}
+
+    gkeys = jax.random.split(keys[0], g)
+    stacked = jax.vmap(init_group)(gkeys)
+
+    params = {
+        "embed": L.embed_init(keys[1], cfg.padded_vocab, cfg.d_model, dt),
+        "head": L.dense_init(keys[2], cfg.d_model, cfg.padded_vocab, dt),
+        "norm_f": jnp.zeros((cfg.d_model,), jnp.float32),
+        "blocks": stacked,
+    }
+    for i, lt in enumerate(cfg.tail):
+        params[f"tail{i}"] = init_block(keys[4 + i], lt, cfg)
+    return params
+
+
+def init_cache(cfg: ArchConfig, batch: int, max_len: int) -> Dict[str, Any]:
+    g = cfg.n_groups()
+
+    def one_group(_):
+        return {f"b{i}": init_block_cache(lt, cfg, batch, max_len)
+                for i, lt in enumerate(cfg.pattern)}
+
+    stacked = jax.tree_util.tree_map(
+        lambda x: jnp.broadcast_to(x, (g,) + x.shape), one_group(None))
+    cache = {"blocks": stacked, "pos": jnp.zeros((), jnp.int32)}
+    for i, lt in enumerate(cfg.tail):
+        cache[f"tail{i}"] = init_block_cache(lt, cfg, batch, max_len)
+    return cache
+
+
+def _embed_in(params, batch: Dict[str, jax.Array], cfg: ArchConfig):
+    if cfg.input_kind == "embeds":
+        x = batch["embeds"].astype(_dtype(cfg))
+    else:
+        x = jnp.take(params["embed"], batch["tokens"], axis=0)
+    if cfg.scale_embed:
+        x = x * np.sqrt(cfg.d_model).astype(np.float32)
+    return x.astype(_dtype(cfg))
+
+
+def _head_out(params, x, cfg: ArchConfig):
+    x = L.rms_norm(x, params["norm_f"])
+    logits = (x @ params["head"]).astype(jnp.float32)
+    if cfg.logit_softcap:
+        logits = cfg.logit_softcap * jnp.tanh(logits / cfg.logit_softcap)
+    return logits
+
+
+def _stack_apply(params, x, cfg: ArchConfig, mode: str, positions, pos,
+                 cache):
+    """Scan the pattern groups; run the tail unscanned.  In train mode no
+    cache is threaded (``cache`` may be None) — avoids materializing
+    stacked dummy states as scan outputs."""
+    train = mode == "train"
+
+    def body(carry, xs):
+        xx, aux = carry
+        # §Perf iteration 3a (REFUTED, reverted): an optimization_barrier
+        # here was hypothesized to stop XLA storing an extra f32 copy of
+        # the scan-saved carry; measured +10% temp on starcoder2-3b
+        # (11.4 -> 12.6 GB) — the earlier apparent win was a stale-
+        # baseline confound (microbatch 2 vs 4).  See EXPERIMENTS.md.
+        # §Perf iteration 4: pin the residual stream's batch sharding —
+        # with fsdp params the partitioner otherwise replicates
+        # activations across the data axis (grok-1: memory term 619->203 s,
+        # useful FLOPs 0.42->0.60).  Gated on fsdp: for TP-only archs the
+        # constraint only inserts copies (starcoder: +10% temp, refuted).
+        if cfg.fsdp:
+            xx = sharding.shard_activations(xx)
+        gp, gc = xs if not train else (xs, None)
+        ncs = {}
+        for i, lt in enumerate(cfg.pattern):
+            c_i = None if train else gc[f"b{i}"]
+            xx, nc, a = block_apply(lt, gp[f"b{i}"], xx, cfg, mode,
+                                    positions, pos, c_i)
+            ncs[f"b{i}"] = nc
+            aux = aux + a
+        return (xx, aux), (None if train else ncs)
+
+    if cfg.remat and train:
+        # prevent_cse=False is the documented fast path under lax.scan
+        body = jax.checkpoint(body, prevent_cse=False)
+
+    xs = params["blocks"] if train else (params["blocks"], cache["blocks"])
+    if cfg.scan_layers:
+        (x, aux), new_blocks = jax.lax.scan(body, (x, 0.0), xs)
+    else:
+        # unrolled path (roofline probes: exact cost_analysis, no
+        # while-loop trip-count blind spot)
+        g = cfg.n_groups()
+        carry, ys = (x, 0.0), []
+        for gi in range(g):
+            xs_i = jax.tree_util.tree_map(lambda t: t[gi], xs)
+            carry, y = body(carry, xs_i)
+            ys.append(y)
+        (x, aux) = carry
+        new_blocks = None if train else jax.tree_util.tree_map(
+            lambda *ls: jnp.stack(ls), *ys)
+
+    new_cache = None if train else {"blocks": new_blocks}
+    for i, lt in enumerate(cfg.tail):
+        c_i = None if train else cache[f"tail{i}"]
+        x, nc, a = block_apply(lt, params[f"tail{i}"], x, cfg, mode,
+                               positions, pos, c_i)
+        if not train:
+            new_cache[f"tail{i}"] = nc
+        aux = aux + a
+    return x, aux, new_cache
+
+
+def forward_train(params, batch, cfg: ArchConfig):
+    """Full causal forward -> (logits, aux_loss)."""
+    x = _embed_in(params, batch, cfg)
+    s = x.shape[1]
+    positions = jnp.arange(s)
+    x, aux, _ = _stack_apply(params, x, cfg, "train", positions, 0, None)
+    return _head_out(params, x, cfg), aux
+
+
+def loss_fn(params, batch, cfg: ArchConfig):
+    logits, aux = forward_train(params, batch, cfg)
+    if cfg.input_kind == "embeds":
+        labels = batch["labels"]
+        lg, lb = logits, labels
+    else:
+        lg, lb = logits[:, :-1], batch["tokens"][:, 1:]
+    logp = jax.nn.log_softmax(lg, axis=-1)
+    nll = -jnp.take_along_axis(logp, lb[..., None], axis=-1)[..., 0]
+    loss = nll.mean()
+    return loss + 0.01 * aux, (loss, aux)
+
+
+def prefill(params, batch, cfg: ArchConfig, max_len: Optional[int] = None):
+    """Run the prompt, return (last-token logits, cache)."""
+    x = _embed_in(params, batch, cfg)
+    b, s = x.shape[0], x.shape[1]
+    cache = init_cache(cfg, b, max_len or s)
+    positions = jnp.arange(s)
+    x, _, new_cache = _stack_apply(params, x, cfg, "prefill", positions, 0,
+                                   cache)
+    new_cache["pos"] = jnp.asarray(s, jnp.int32)
+    return _head_out(params, x[:, -1:], cfg), new_cache
+
+
+def decode_step(params, cache, batch_t, cfg: ArchConfig):
+    """One token: batch_t {'tokens': (B, 1)} or {'embeds': (B, 1, D)}."""
+    x = _embed_in(params, batch_t, cfg)
+    pos = cache["pos"]
+    b = x.shape[0]
+    positions = jnp.full((b, 1), pos, jnp.int32)
+    x, _, new_cache = _stack_apply(params, x, cfg, "decode", positions, pos,
+                                   cache)
+    new_cache["pos"] = pos + 1
+    return _head_out(params, x, cfg), new_cache

@@ -1,0 +1,292 @@
+"""xLSTM blocks (sLSTM + mLSTM) [arXiv:2405.04517], TPU-adapted.
+
+mLSTM (matrix-memory, exponentially gated) is evaluated in three exactly
+equivalent forms, all stabilizer-correct:
+
+- quadratic  : full (S, S) decay-masked attention-like form (oracle/tests)
+- chunkwise  : intra-chunk quadratic + inter-chunk (C, n, m) state carried
+               by lax.scan — the MXU-friendly production path for long
+               sequences (the TPU analogue of the paper's fused CUDA kernel)
+- step       : recurrent decode update
+
+sLSTM (scalar memory with memory mixing via per-head recurrent weights) is
+inherently sequential -> lax.scan; its state is O(d), which is what makes
+the xlstm-350m `long_500k` decode cell trivial (no KV cache at all).
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .layers import (causal_conv, causal_conv_step, dense_init, group_norm,
+                     init_causal_conv)
+
+
+# --------------------------------------------------------------------------
+# mLSTM cell
+# --------------------------------------------------------------------------
+
+def _logsig(x):
+    return jax.nn.log_sigmoid(x)
+
+
+def mlstm_quadratic(q, k, v, i_gate, f_gate) -> jax.Array:
+    """Oracle form.  q/k/v: (B, S, H, hd); i/f gates: (B, S, H) pre-act.
+    O(S^2) memory — tests and short sequences only."""
+    b, s, h, hd = q.shape
+    q = q.astype(jnp.float32) / math.sqrt(hd)
+    k, v = k.astype(jnp.float32), v.astype(jnp.float32)
+    logf = _logsig(f_gate.astype(jnp.float32))           # (B,S,H)
+    bcum = jnp.cumsum(logf, axis=1)                      # inclusive
+    i32 = i_gate.astype(jnp.float32)
+    # log_D[t, s] = bcum_t - bcum_s + i_s  (s <= t)
+    logD = (bcum[:, :, None] - bcum[:, None, :]
+            + i32[:, None, :, :])                        # (B,T,S,H)
+    tri = jnp.tril(jnp.ones((s, s), bool))
+    logD = jnp.where(tri[None, :, :, None], logD, -jnp.inf)
+    m = jnp.max(logD, axis=2)                            # (B,T,H)
+    D = jnp.exp(logD - m[:, :, None])
+    scores = jnp.einsum("bthd,bshd->btsh", q, k) * D
+    norm = jnp.maximum(jnp.abs(scores.sum(axis=2)), jnp.exp(-m))  # (B,T,H)
+    out = jnp.einsum("btsh,bshd->bthd", scores, v) / norm[..., None]
+    return out
+
+
+def mlstm_chunkwise(q, k, v, i_gate, f_gate, chunk: int = 256,
+                    return_state: bool = False):
+    """Chunk-parallel mLSTM, exactly equal to the quadratic form.
+
+    Padding uses f=+20 (logsigmoid ~ 0: no decay) and i=-1e30 (no write),
+    so padded steps are no-ops and the final carry is the exact state after
+    the real tokens (used as the prefill -> decode handoff)."""
+    b, s, h, hd = q.shape
+    pad = (-s) % chunk
+    if pad:
+        z3 = lambda t: jnp.pad(t, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        q, k, v = z3(q), z3(k), z3(v)
+        i_gate = jnp.concatenate(
+            [i_gate, jnp.full((b, pad, h), -1e30, i_gate.dtype)], axis=1)
+        f_gate = jnp.concatenate(
+            [f_gate, jnp.full((b, pad, h), 20.0, f_gate.dtype)], axis=1)
+    sp = q.shape[1]
+    nc = sp // chunk
+    L = chunk
+
+    qc = q.reshape(b, nc, L, h, hd).astype(jnp.float32) / math.sqrt(hd)
+    kc = k.reshape(b, nc, L, h, hd).astype(jnp.float32)
+    vc = v.reshape(b, nc, L, h, hd).astype(jnp.float32)
+    ic = i_gate.reshape(b, nc, L, h).astype(jnp.float32)
+    fc = _logsig(f_gate.reshape(b, nc, L, h).astype(jnp.float32))
+
+    tri = jnp.tril(jnp.ones((L, L), bool))
+
+    def chunk_step(carry, xs):
+        C, n, m_run = carry                 # (B,H,hd,hd), (B,H,hd), (B,H)
+        qb, kb, vb, ib, fb = xs             # (B,L,H,*) slices
+        bcum = jnp.cumsum(fb, axis=1)       # (B,L,H) inclusive in-chunk
+        logD = (bcum[:, :, None] - bcum[:, None, :] + ib[:, None, :, :])
+        logD = jnp.where(tri[None, :, :, None], logD, -jnp.inf)
+        m_intra = jnp.max(logD, axis=2)                       # (B,L,H)
+        m_inter = bcum + m_run[:, None, :]                    # (B,L,H)
+        m_t = jnp.maximum(m_intra, m_inter)
+        D = jnp.exp(logD - m_t[:, :, None])
+        scores = jnp.einsum("blhd,bshd->blsh", qb, kb) * D
+        w_state = jnp.exp(m_inter - m_t)                      # (B,L,H)
+        num = (jnp.einsum("blsh,bshd->blhd", scores, vb)
+               + w_state[..., None] * jnp.einsum("blhd,bhde->blhe", qb, C))
+        # normalizer vector: n_t = sum_s D[t,s] k_s (+ carried state), so
+        # that denom = |q . n_t| matches the quadratic sum_s scores[t,s].
+        nvec = (jnp.einsum("blsh,bshd->blhd", D, kb)
+                + w_state[..., None] * n[:, None])
+        denom = jnp.maximum(jnp.abs(jnp.einsum("blhd,blhd->blh", nvec, qb)),
+                            jnp.exp(-m_t))
+        out = num / denom[..., None]
+
+        # state update to end of chunk
+        bL = bcum[:, -1]                                      # (B,H)
+        m_next = jnp.maximum(bL + m_run,
+                             jnp.max(bL[:, None] - bcum + ib, axis=1))
+        w_old = jnp.exp(bL + m_run - m_next)                  # (B,H)
+        w_new = jnp.exp(bL[:, None] - bcum + ib - m_next[:, None])  # (B,L,H)
+        C_next = (w_old[..., None, None] * C
+                  + jnp.einsum("blh,blhd,blhe->bhde", w_new, kb, vb))
+        n_next = (w_old[..., None] * n
+                  + jnp.einsum("blh,blhd->bhd", w_new, kb))
+        return (C_next, n_next, m_next), out
+
+    C0 = jnp.zeros((b, h, hd, hd), jnp.float32)
+    n0 = jnp.zeros((b, h, hd), jnp.float32)
+    m0 = jnp.full((b, h), -1e30, jnp.float32)
+    xs = (qc.transpose(1, 0, 2, 3, 4), kc.transpose(1, 0, 2, 3, 4),
+          vc.transpose(1, 0, 2, 3, 4), ic.transpose(1, 0, 2, 3),
+          fc.transpose(1, 0, 2, 3))
+    final_state, outs = jax.lax.scan(chunk_step, (C0, n0, m0), xs)
+    out = outs.transpose(1, 0, 2, 3, 4).reshape(b, sp, h, hd)
+    if return_state:
+        return out[:, :s], final_state
+    return out[:, :s]
+
+
+def mlstm_step(q_t, k_t, v_t, i_t, f_t, state):
+    """Decode.  q/k/v_t: (B, H, hd); i/f_t: (B, H); state=(C, n, m)."""
+    C, n, m = state
+    hd = q_t.shape[-1]
+    q32 = q_t.astype(jnp.float32) / math.sqrt(hd)
+    k32, v32 = k_t.astype(jnp.float32), v_t.astype(jnp.float32)
+    logf = _logsig(f_t.astype(jnp.float32))
+    i32 = i_t.astype(jnp.float32)
+    m_new = jnp.maximum(logf + m, i32)
+    fp = jnp.exp(logf + m - m_new)[..., None]
+    ip = jnp.exp(i32 - m_new)[..., None]
+    C = fp[..., None] * C + ip[..., None] * k32[..., None] * v32[..., None, :]
+    n = fp * n + ip * k32
+    denom = jnp.maximum(jnp.abs(jnp.einsum("bhd,bhd->bh", n, q32)),
+                        jnp.exp(-m_new))
+    out = jnp.einsum("bhd,bhde->bhe", q32, C) / denom[..., None]
+    return out, (C, n, m_new)
+
+
+# --------------------------------------------------------------------------
+# sLSTM cell
+# --------------------------------------------------------------------------
+
+def slstm_scan(params: dict, x: jax.Array, h0=None) -> jax.Array:
+    """x: (B, S, D) pre-projected inputs.  Returns h: (B, S, D).
+    Memory mixing: per-head recurrent weights R_* (H, hd, hd)."""
+    b, s, d = x.shape
+    H, hd = params["s_rz"].shape[0], params["s_rz"].shape[1]
+
+    wz = (x @ params["s_wz"]).reshape(b, s, H, hd)
+    wi = (x @ params["s_wi"]).reshape(b, s, H, hd)
+    wf = (x @ params["s_wf"]).reshape(b, s, H, hd)
+    wo = (x @ params["s_wo"]).reshape(b, s, H, hd)
+
+    def step(carry, xs):
+        c, n, m, h = carry
+        z_in, i_in, f_in, o_in = xs
+        rz = jnp.einsum("bhd,hde->bhe", h, params["s_rz"])
+        ri = jnp.einsum("bhd,hde->bhe", h, params["s_ri"])
+        rf = jnp.einsum("bhd,hde->bhe", h, params["s_rf"])
+        ro = jnp.einsum("bhd,hde->bhe", h, params["s_ro"])
+        zt = jnp.tanh((z_in + rz).astype(jnp.float32))
+        it = (i_in + ri).astype(jnp.float32)
+        ft = _logsig((f_in + rf).astype(jnp.float32))
+        ot = jax.nn.sigmoid((o_in + ro).astype(jnp.float32))
+        m_new = jnp.maximum(ft + m, it)
+        ip = jnp.exp(it - m_new)
+        fp = jnp.exp(ft + m - m_new)
+        c_new = fp * c + ip * zt
+        n_new = fp * n + ip
+        h_new = ot * (c_new / jnp.maximum(n_new, 1e-6))
+        return (c_new, n_new, m_new, h_new.astype(x.dtype)), h_new
+
+    z0 = jnp.zeros((b, H, hd), jnp.float32)
+    m0 = jnp.full((b, H, hd), -1e30, jnp.float32)
+    carry0 = (z0, z0, m0, jnp.zeros((b, H, hd), x.dtype)) \
+        if h0 is None else h0
+    xs = (wz.transpose(1, 0, 2, 3), wi.transpose(1, 0, 2, 3),
+          wf.transpose(1, 0, 2, 3), wo.transpose(1, 0, 2, 3))
+    carry, hs = jax.lax.scan(step, carry0, xs)
+    return hs.transpose(1, 0, 2, 3).reshape(b, s, d).astype(x.dtype), carry
+
+
+# --------------------------------------------------------------------------
+# Blocks
+# --------------------------------------------------------------------------
+
+def init_mlstm_block(key, d: int, n_heads: int, dtype,
+                     proj_factor: int = 2, conv_width: int = 4) -> dict:
+    di = proj_factor * d
+    ks = jax.random.split(key, 9)
+    p = {
+        "m_up_x": dense_init(ks[0], d, di, dtype),
+        "m_up_z": dense_init(ks[1], d, di, dtype),
+        "m_wq": dense_init(ks[2], di, di, dtype),
+        "m_wk": dense_init(ks[3], di, di, dtype),
+        "m_wv": dense_init(ks[4], di, di, dtype),
+        "m_wi": dense_init(ks[5], di, n_heads, jnp.float32),
+        "m_wf": dense_init(ks[6], di, n_heads, jnp.float32),
+        "m_down": dense_init(ks[7], di, d, dtype),
+        "m_gn": jnp.zeros((di,), jnp.float32) + 1.0,
+    }
+    p.update(init_causal_conv(ks[8], conv_width, di, dtype))
+    return p
+
+
+def mlstm_block(params: dict, x: jax.Array, n_heads: int,
+                mode: str = "train", state=None, chunk: int = 256):
+    """x: (B, S, D) (S=1 for decode with mode='decode')."""
+    b, s, d = x.shape
+    xm = x @ params["m_up_x"]
+    z = x @ params["m_up_z"]
+    di = xm.shape[-1]
+    hd = di // n_heads
+
+    if mode == "decode":
+        xc, conv_state = causal_conv_step(
+            {"conv_w": params["conv_w"]}, xm[:, 0], state[1])
+        xc = jax.nn.silu(xc)
+        q = (xc @ params["m_wq"]).reshape(b, n_heads, hd)
+        k = (xc @ params["m_wk"]).reshape(b, n_heads, hd)
+        v = (xm[:, 0] @ params["m_wv"]).reshape(b, n_heads, hd)
+        ig = xc @ params["m_wi"]
+        fg = xc @ params["m_wf"]
+        h, cell_state = mlstm_step(q, k, v, ig, fg, state[0])
+        h = h[:, None]                                    # (B,1,H,hd)
+        new_state = (cell_state, conv_state)
+    else:
+        xc = jax.nn.silu(causal_conv({"conv_w": params["conv_w"]}, xm))
+        q = (xc @ params["m_wq"]).reshape(b, s, n_heads, hd)
+        k = (xc @ params["m_wk"]).reshape(b, s, n_heads, hd)
+        v = (xm @ params["m_wv"]).reshape(b, s, n_heads, hd)
+        ig = xc @ params["m_wi"]
+        fg = xc @ params["m_wf"]
+        if mode == "prefill":
+            h, cell_state = mlstm_chunkwise(q, k, v, ig, fg, chunk=chunk,
+                                            return_state=True)
+            width = params["conv_w"].shape[0]
+            new_state = (cell_state, xm[:, -(width - 1):])
+        else:
+            h = mlstm_chunkwise(q, k, v, ig, fg, chunk=chunk)
+            new_state = None
+    h = group_norm(h.astype(x.dtype), jnp.asarray(1.0), n_heads)
+    h = (h * params["m_gn"].reshape(n_heads, hd)).astype(x.dtype)
+    h = h.reshape(b, -1, di)
+    out = (h * jax.nn.silu(z[:, : h.shape[1]])) @ params["m_down"]
+    return out, new_state
+
+
+def init_slstm_block(key, d: int, n_heads: int, dtype) -> dict:
+    hd = d // n_heads
+    ks = jax.random.split(key, 12)
+    f = (4 * d // 3 + 63) // 64 * 64
+    rinit = lambda kk: (jax.random.normal(kk, (n_heads, hd, hd), jnp.float32)
+                        / math.sqrt(hd)).astype(jnp.float32)
+    return {
+        "s_wz": dense_init(ks[0], d, d, dtype),
+        "s_wi": dense_init(ks[1], d, d, dtype),
+        "s_wf": dense_init(ks[2], d, d, dtype),
+        "s_wo": dense_init(ks[3], d, d, dtype),
+        "s_rz": rinit(ks[4]), "s_ri": rinit(ks[5]),
+        "s_rf": rinit(ks[6]), "s_ro": rinit(ks[7]),
+        "s_gn": jnp.ones((d,), jnp.float32),
+        "s_up_gate": dense_init(ks[8], d, f, dtype),
+        "s_up": dense_init(ks[9], d, f, dtype),
+        "s_down": dense_init(ks[10], f, d, dtype),
+    }
+
+
+def slstm_block(params: dict, x: jax.Array, n_heads: int,
+                mode: str = "train", state=None):
+    b, s, d = x.shape
+    h, carry = slstm_scan(params, x, h0=state)
+    h = group_norm(h.reshape(b, s, n_heads, d // n_heads),
+                   jnp.asarray(1.0), n_heads).reshape(b, s, d)
+    h = h * params["s_gn"]
+    ff = (jax.nn.gelu(h @ params["s_up_gate"], approximate=True)
+          * (h @ params["s_up"])) @ params["s_down"]
+    return ff.astype(x.dtype), carry

@@ -1,0 +1,105 @@
+"""Model zoo: one uniform bundle API over decoder-LMs and the enc-dec.
+
+    bundle = get_model(cfg)
+    params = bundle.init(rng)
+    loss, _ = bundle.loss_fn(params, batch)
+    logits, cache = bundle.prefill(params, batch)
+    logits, cache = bundle.decode_step(params, cache, batch_t)
+
+plus input_specs() (ShapeDtypeStruct stand-ins for every input of every
+(shape x mode) cell — the dry-run's contract) and sharding-spec helpers.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig, ShapeConfig
+from . import sharding, transformer, whisper
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelBundle:
+    cfg: ArchConfig
+    init: Callable
+    loss_fn: Callable
+    forward: Callable
+    prefill: Callable
+    decode_step: Callable
+    init_cache: Callable
+
+
+def get_model(cfg: ArchConfig) -> ModelBundle:
+    if cfg.input_kind == "encdec":
+        return ModelBundle(
+            cfg=cfg,
+            init=lambda key: whisper.init_params(key, cfg),
+            loss_fn=lambda p, b: whisper.loss_fn(p, b, cfg),
+            forward=lambda p, b: whisper.forward_train(p, b, cfg),
+            prefill=lambda p, b, **kw: whisper.prefill(p, b, cfg, **kw),
+            decode_step=lambda p, c, bt: whisper.decode_step(p, c, bt, cfg),
+            init_cache=lambda batch, max_len, **kw: whisper.init_cache(
+                cfg, batch, max_len, **kw),
+        )
+    return ModelBundle(
+        cfg=cfg,
+        init=lambda key: transformer.init_params(key, cfg),
+        loss_fn=lambda p, b: transformer.loss_fn(p, b, cfg),
+        forward=lambda p, b: transformer.forward_train(p, b, cfg),
+        prefill=lambda p, b, **kw: transformer.prefill(p, b, cfg, **kw),
+        decode_step=lambda p, c, bt: transformer.decode_step(p, c, bt, cfg),
+        init_cache=lambda batch, max_len: transformer.init_cache(
+            cfg, batch, max_len),
+    )
+
+
+# --------------------------------------------------------------------------
+# input_specs: ShapeDtypeStruct stand-ins (no allocation) per (arch, shape)
+# --------------------------------------------------------------------------
+
+def input_specs(cfg: ArchConfig, shape: ShapeConfig,
+                mode: Optional[str] = None) -> Dict[str, Any]:
+    """Inputs for the given cell.  mode defaults to shape.kind.
+
+    train  : full batch {tokens|embeds(+labels)} (+ decoder tokens, encdec)
+    prefill: same tensors, serving batch
+    decode : single-token batch (the cache comes separately)
+    """
+    mode = mode or shape.kind
+    b, s = shape.global_batch, shape.seq_len
+    f32, i32 = jnp.bfloat16, jnp.int32
+
+    def tok(bb, ss):
+        return jax.ShapeDtypeStruct((bb, ss), i32)
+
+    def emb(bb, ss):
+        return jax.ShapeDtypeStruct((bb, ss, cfg.d_model), f32)
+
+    if mode == "decode":
+        if cfg.input_kind == "embeds":
+            return {"embeds": emb(b, 1), "labels": tok(b, 1)}
+        return {"tokens": tok(b, 1)}
+    if cfg.input_kind == "embeds":
+        return {"embeds": emb(b, s), "labels": tok(b, s)}
+    if cfg.input_kind == "encdec":
+        if mode == "train":
+            return {"embeds": emb(b, s), "tokens": tok(b, s)}
+        return {"embeds": emb(b, cfg.enc_seq), "tokens": tok(b, s)}
+    return {"tokens": tok(b, s)}
+
+
+def cache_specs_for(cfg: ArchConfig, shape: ShapeConfig) -> Any:
+    """Abstract cache (ShapeDtypeStructs) for decode cells."""
+    bundle = get_model(cfg)
+    return jax.eval_shape(
+        lambda: bundle.init_cache(shape.global_batch, shape.seq_len))
+
+
+def batch_pspec(specs: Dict[str, Any], mesh) -> Dict[str, Any]:
+    axes = sharding.mesh_axes_of(mesh)
+    return {k: sharding.batch_spec(tuple(v.shape), axes) for k, v in
+            specs.items()}

@@ -1,0 +1,7 @@
+from .adamw import adamw_init, adamw_update, cosine_schedule
+from .compression import (compress_int8, decompress_int8,
+                          ef_compress_update, ef_init)
+
+__all__ = ["adamw_init", "adamw_update", "cosine_schedule",
+           "compress_int8", "decompress_int8", "ef_compress_update",
+           "ef_init"]

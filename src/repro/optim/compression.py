@@ -1,0 +1,65 @@
+"""Int8 gradient compression with error feedback (1-bit-Adam-family trick)
+for the DP all-reduce at 1000+ node scale, where gradient bytes dominate
+the inter-pod collective term.
+
+``ef_compress_update`` quantizes (grad + residual) per-tensor to int8,
+keeps the quantization error as the next step's residual, and returns the
+int8 payload + scale.  ``allreduce_compressed`` is the shard_map collective
+(int8 -> int32 psum -> dequant) used across the "pod" axis; inside a pod
+the native bf16 all-reduce stays (the ICI is fast; compression targets the
+slower inter-pod DCN hop).  Convergence property is unit-tested
+(tests/test_optim.py)."""
+
+from __future__ import annotations
+
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def compress_int8(x: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    amax = jnp.max(jnp.abs(x.astype(jnp.float32)))
+    scale = jnp.maximum(amax, 1e-12) / 127.0
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale), -127, 127
+                 ).astype(jnp.int8)
+    return q, scale
+
+
+def decompress_int8(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale
+
+
+def ef_init(params) -> Any:
+    return jax.tree_util.tree_map(
+        lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+def ef_compress_update(grads, residuals):
+    """Returns ((q, scale) tree, new_residuals)."""
+    def one(g, r):
+        target = g.astype(jnp.float32) + r
+        q, s = compress_int8(target)
+        err = target - decompress_int8(q, s)
+        return (q, s), err
+    flat_g, tdef = jax.tree_util.tree_flatten(grads)
+    flat_r = tdef.flatten_up_to(residuals)
+    pairs = [one(g, r) for g, r in zip(flat_g, flat_r)]
+    payload = tdef.unflatten([p[0] for p in pairs])
+    new_res = tdef.unflatten([p[1] for p in pairs])
+    return payload, new_res
+
+
+def allreduce_compressed(q: jax.Array, scale: jax.Array,
+                         axis_name: str) -> jax.Array:
+    """Inside shard_map: mean-reduce int8 payloads over ``axis_name``.
+
+    Participants quantized under their own scales, so each re-normalizes
+    its levels to the shared (max) scale before the integer psum; int8 ->
+    int32 psum avoids overflow up to ~16M participants."""
+    smax = jax.lax.pmax(scale, axis_name)
+    q_norm = jnp.round(q.astype(jnp.float32) * (scale / smax)
+                       ).astype(jnp.int32)
+    total = jax.lax.psum(q_norm, axis_name)
+    n = jax.lax.psum(jnp.ones((), jnp.int32), axis_name)
+    return total.astype(jnp.float32) * smax / n.astype(jnp.float32)

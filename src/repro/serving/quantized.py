@@ -1,0 +1,64 @@
+"""Weight quantization for serving — the SigDLA variable-bitwidth menu
+(4/8/16-bit) applied to LLM weights.
+
+``quantize_tree`` stores every >=2-D weight as (int levels, per-output-
+channel scale); on TPU the quantized matmuls execute on the bitserial
+Pallas kernel (kernels/bitserial_mm — the computing array of paper §IV);
+``dequantize_tree`` is the storage-only mode (int weights in HBM, bf16
+compute after dequant).  examples/quantized_serving.py demonstrates the
+full int path end-to-end and its equality with the fake-quant reference.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..core import bitwidth as bw
+
+
+def quantize_tree(params: Any, bits: int = 8,
+                  min_size: int = 1 << 12) -> Tuple[Any, Any]:
+    """Returns (q_tree, scale_tree); small/1-D leaves pass through
+    (scale=None)."""
+    def q(leaf):
+        if leaf.ndim < 2 or leaf.size < min_size or \
+                not jnp.issubdtype(leaf.dtype, jnp.floating):
+            return leaf, None
+        qv, scale = bw.quantize(leaf.astype(jnp.float32), bits, axis=-2)
+        store = jnp.int8 if bits <= 8 else jnp.int16
+        return qv.astype(store), scale
+
+    flat, treedef = jax.tree_util.tree_flatten(params)
+    pairs = [q(l) for l in flat]
+    qt = jax.tree_util.tree_unflatten(treedef, [p[0] for p in pairs])
+    st = jax.tree_util.tree_unflatten(treedef, [p[1] for p in pairs])
+    return qt, st
+
+
+def dequantize_tree(q_tree: Any, scale_tree: Any,
+                    dtype=jnp.bfloat16) -> Any:
+    def dq(q, s):
+        if s is None:
+            return q
+        return (q.astype(jnp.float32) * s).astype(dtype)
+    return jax.tree_util.tree_map(
+        dq, q_tree, scale_tree,
+        is_leaf=lambda x: x is None or hasattr(x, "shape"))
+
+
+def quantized_bytes(q_tree: Any, scale_tree: Any, bits: int = 8) -> int:
+    """Logical storage: quantized leaves at ``bits`` per element (int4
+    levels pack two per byte on the wire/HBM), pass-through leaves at
+    native width."""
+    total = 0
+    for q, s in zip(jax.tree_util.tree_leaves(q_tree),
+                    jax.tree_util.tree_leaves(scale_tree,
+                                              is_leaf=lambda x: x is None)):
+        if s is None:
+            total += q.size * q.dtype.itemsize
+        else:
+            total += (q.size * bits + 7) // 8 + s.size * s.dtype.itemsize
+    return total

@@ -1,0 +1,73 @@
+"""User-facing signal-processing API, executed through the SigDLA fabric.
+
+Plans are built once per shape and cached; every function is jit-friendly
+and batches over leading axes.  These are the operations the paper deploys
+on the DLA (FFT / FIR / DCT / DWT) plus the STFT frontend used by the
+speech-enhancement pipeline (Fig 9).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core import signal_mapping as _sm
+from ..core.signal_mapping import (complex_to_interleaved,
+                                   interleaved_to_complex,
+                                   dct_via_array as dct,
+                                   dct2_via_array as dct2)
+from .spectrogram import stft, istft, magnitude_spectrogram
+
+__all__ = ["fft", "ifft", "fir", "fir_phased", "dct", "dct2", "dwt",
+           "stft", "istft", "magnitude_spectrogram",
+           "complex_to_interleaved", "interleaved_to_complex"]
+
+
+@functools.lru_cache(maxsize=64)
+def _fft_plan(n: int, fused: bool = True) -> _sm.FFTPlan:
+    return _sm.make_fft_plan(n, fuse_adjacent=fused)
+
+
+@functools.lru_cache(maxsize=64)
+def _fir_plan(n: int, taps: int) -> _sm.FIRPlan:
+    return _sm.make_fir_plan(n, taps)
+
+
+@functools.lru_cache(maxsize=64)
+def _fir_phase_plan(n: int, taps: int, phases: int) -> _sm.FIRPhasePlan:
+    return _sm.make_fir_phase_plan(n, taps, phases)
+
+
+@functools.lru_cache(maxsize=64)
+def _dwt_plan(n: int, wavelet: str) -> _sm.DWTPlan:
+    return _sm.make_dwt_plan(n, wavelet)
+
+
+def fft(x: jax.Array, fused: bool = True) -> jax.Array:
+    """Complex FFT along the last axis via the shuffle-fabric mapping."""
+    n = x.shape[-1] if jnp.iscomplexobj(x) else x.shape[-1] // 2
+    return _sm.fft_via_fabric(x, _fft_plan(n, fused))
+
+
+def ifft(x: jax.Array, fused: bool = True) -> jax.Array:
+    n = x.shape[-1] if jnp.iscomplexobj(x) else x.shape[-1] // 2
+    return _sm.ifft_via_fabric(x, _fft_plan(n, fused))
+
+
+def fir(x: jax.Array, h: jax.Array) -> jax.Array:
+    """Causal FIR filter (paper Fig 3b mapping: 1 tap-kernel)."""
+    return _sm.fir_via_fabric(x, h, _fir_plan(x.shape[-1], h.shape[-1]))
+
+
+def fir_phased(x: jax.Array, h: jax.Array, phases: int = 8) -> jax.Array:
+    """Beyond-paper FIR mapping using all 8 PEs (see perf_model)."""
+    plan = _fir_phase_plan(x.shape[-1], h.shape[-1], phases)
+    return _sm.fir_via_fabric_phased(x, h, plan)
+
+
+def dwt(x: jax.Array, wavelet: str = "haar"):
+    """Single-level DWT -> (approx, detail)."""
+    return _sm.dwt_via_fabric(x, _dwt_plan(x.shape[-1], wavelet), wavelet)

@@ -1,0 +1,9 @@
+import os
+import sys
+
+# Tests see 1 CPU device (the dry-run sets its own 512-device env in its
+# own process).  Distributed tests spawn subprocesses with their own
+# XLA_FLAGS.
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))

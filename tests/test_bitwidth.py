@@ -1,0 +1,67 @@
+"""Variable-bitwidth array arithmetic: exactness of the 4-bit plane
+decomposition (DESIGN.md invariant 3)."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import bitwidth as bw
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(0, 2 ** 31),
+       st.sampled_from([4, 8, 16]), st.sampled_from([4, 8, 16]))
+def test_plane_matmul_exact(seed, aw, ww):
+    rng = np.random.default_rng(seed)
+    m, k, n = rng.integers(1, 24, size=3)
+    a = rng.integers(-2 ** (aw - 1), 2 ** (aw - 1), size=(m, k))
+    w = rng.integers(-2 ** (ww - 1), 2 ** (ww - 1), size=(k, n))
+    got = np.asarray(bw.plane_matmul(jnp.asarray(a), jnp.asarray(w), aw, ww))
+    prod = a.astype(np.int64) @ w.astype(np.int64)
+    wrap = ((prod + 2 ** 31) % 2 ** 32 - 2 ** 31).astype(np.int32)
+    np.testing.assert_array_equal(got, wrap)
+
+
+@pytest.mark.parametrize("width", [4, 8, 16])
+def test_split_compose_roundtrip(width):
+    lim = 2 ** (width - 1)
+    x = jnp.arange(-lim, lim, max(1, lim // 128))
+    planes = bw.split_planes(x, width)
+    assert len(planes) == width // 4
+    np.testing.assert_array_equal(np.asarray(bw.compose_planes(planes)),
+                                  np.asarray(x))
+
+
+def test_shift_schedule_matches_paper():
+    """8x8: shifts {0,4,4,8}; 16x16 max shift 24 (paper Fig 2)."""
+    shifts8 = sorted(4 * (i + j) for i in range(2) for j in range(2))
+    assert shifts8 == [0, 4, 4, 8]
+    assert max(4 * (i + j) for i in range(4) for j in range(4)) == 24
+
+
+def test_macs_per_cycle():
+    assert bw.macs_per_cycle(4, 4) == 128
+    assert bw.macs_per_cycle(8, 8) == 32
+    assert bw.macs_per_cycle(16, 16) == 8
+    assert bw.macs_per_cycle(8, 4) == 64
+
+
+def test_quantize_error_bound():
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.standard_normal((64, 32)).astype(np.float32))
+    for width in (4, 8, 16):
+        q, s = bw.quantize(x, width, axis=-1)
+        err = np.abs(np.asarray(bw.dequantize(q, s)) - np.asarray(x))
+        step = np.asarray(s)
+        assert (err <= 0.5 * step + 1e-6).all()
+
+
+def test_quantized_matmul_close():
+    rng = np.random.default_rng(1)
+    x = jnp.asarray(rng.standard_normal((8, 64)).astype(np.float32))
+    w = jnp.asarray(rng.standard_normal((64, 16)).astype(np.float32))
+    wq, ws = bw.quantize(w, 8, axis=0)
+    got = np.asarray(bw.quantized_matmul(x, wq, ws, a_width=8, w_width=8))
+    rel = np.abs(got - np.asarray(x @ w)) / (np.abs(np.asarray(x @ w)) + 1.0)
+    assert rel.mean() < 0.02

@@ -1,0 +1,41 @@
+"""Launcher CLI smoke tests: train and serve entry points end-to-end on
+reduced configs (subprocess, 1 device)."""
+
+import os
+import subprocess
+import sys
+
+ROOT = os.path.join(os.path.dirname(__file__), "..")
+
+
+def run_cli(args, timeout=560):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(ROOT, "src")
+    out = subprocess.run([sys.executable, "-m"] + args,
+                         capture_output=True, text=True, timeout=timeout,
+                         env=env, cwd=ROOT)
+    assert out.returncode == 0, (out.stdout[-2000:], out.stderr[-2000:])
+    return out.stdout
+
+
+def test_train_cli(tmp_path):
+    out = run_cli(["repro.launch.train", "--arch", "xlstm-350m",
+                   "--steps", "6", "--seq", "32", "--batch", "4",
+                   "--ckpt-dir", str(tmp_path)])
+    assert "loss" in out
+    # checkpoint written at step 25? no — steps 6 < 25: none expected; the
+    # loop must still report a decreasing-ish finite loss line
+    assert "->" in out
+
+
+def test_serve_cli():
+    out = run_cli(["repro.launch.serve", "--arch", "starcoder2-3b",
+                   "--requests", "3", "--max-new", "4"])
+    assert "tok/s" in out and "req 0:" in out
+
+
+def test_serve_cli_quantized():
+    out = run_cli(["repro.launch.serve", "--arch", "gemma2-2b",
+                   "--requests", "2", "--max-new", "3",
+                   "--quant-bits", "8"])
+    assert "quant=8" in out

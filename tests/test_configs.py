@@ -1,0 +1,98 @@
+"""Assigned-architecture configs must match the assignment sheet exactly,
+and input_specs must produce the right cell shapes."""
+
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import (LONG_CONTEXT_ARCHS, SHAPES, cell_applicable,
+                           get_config, list_configs)
+from repro.models.zoo import input_specs
+
+ASSIGNED = {
+    # name: (L, d_model, H, kv, d_ff, vocab)
+    "internvl2-26b": (48, 6144, 48, 8, 16384, 92553),
+    "starcoder2-3b": (30, 3072, 24, 2, 12288, 49152),
+    "chatglm3-6b": (28, 4096, 32, 2, 13696, 65024),
+    "gemma2-2b": (26, 2304, 8, 4, 9216, 256000),
+    "minitron-8b": (32, 4096, 32, 8, 16384, 256000),
+    "xlstm-350m": (24, 1024, 4, 4, 0, 50304),
+    "whisper-small": (12, 768, 12, 12, 3072, 51865),
+    "recurrentgemma-2b": (26, 2560, 10, 1, 7680, 256000),
+    "qwen2-moe-a2.7b": (24, 2048, 16, 16, 1408, 151936),
+    "grok-1-314b": (64, 6144, 48, 8, 32768, 131072),
+}
+
+
+def test_registry_complete():
+    assert sorted(list_configs()) == sorted(ASSIGNED)
+
+
+@pytest.mark.parametrize("name", sorted(ASSIGNED))
+def test_assigned_numbers(name):
+    cfg = get_config(name)
+    L, d, h, kv, ff, v = ASSIGNED[name]
+    assert cfg.n_layers == L and cfg.d_model == d
+    assert cfg.n_heads == h and cfg.n_kv_heads == kv
+    assert cfg.d_ff == ff and cfg.vocab == v
+    assert len(cfg.layer_types) == cfg.n_layers
+    cfg.validate()
+
+
+def test_moe_configs():
+    q = get_config("qwen2-moe-a2.7b")
+    assert q.n_experts == 60 and q.top_k == 4 and q.shared_ff == 5632
+    g = get_config("grok-1-314b")
+    assert g.n_experts == 8 and g.top_k == 2 and g.fsdp
+
+
+def test_family_tags():
+    fams = {n: get_config(n).family for n in list_configs()}
+    assert fams["xlstm-350m"] == "ssm"
+    assert fams["recurrentgemma-2b"] == "hybrid"
+    assert fams["whisper-small"] == "audio"
+    assert fams["internvl2-26b"] == "vlm"
+    assert fams["grok-1-314b"] == "moe"
+
+
+def test_long_context_applicability():
+    for arch in list_configs():
+        assert cell_applicable(arch, "train_4k")
+        expect = arch in LONG_CONTEXT_ARCHS
+        assert cell_applicable(arch, "long_500k") == expect
+    # grid size: 10 archs x 4 shapes - 8 skips = 32 applicable cells
+    n = sum(cell_applicable(a, s) for a in list_configs() for s in SHAPES)
+    assert n == 32
+
+
+@pytest.mark.parametrize("name", sorted(ASSIGNED))
+@pytest.mark.parametrize("shape", sorted(SHAPES))
+def test_input_specs_shapes(name, shape):
+    cfg = get_config(name)
+    sh = SHAPES[shape]
+    specs = input_specs(cfg, sh)
+    if sh.kind == "decode":
+        lead = (sh.global_batch, 1)
+    else:
+        lead = (sh.global_batch, sh.seq_len)
+    if cfg.input_kind == "tokens":
+        assert specs["tokens"].shape == lead
+    elif cfg.input_kind == "embeds":
+        key = "embeds"
+        assert specs[key].shape[:2] == lead
+        assert specs[key].shape[2] == cfg.d_model
+    else:  # encdec
+        assert specs["tokens"].shape == lead
+        if sh.kind == "decode":
+            # cross-KV is in the cache; no encoder input per step
+            assert "embeds" not in specs
+        else:
+            enc_len = sh.seq_len if sh.kind == "train" else cfg.enc_seq
+            assert specs["embeds"].shape == (sh.global_batch, enc_len,
+                                             cfg.d_model)
+
+
+def test_reduced_configs_valid():
+    for name in list_configs():
+        r = get_config(name).reduced()
+        r.validate()
+        assert r.dtype == "float32" and not r.fsdp

@@ -1,0 +1,58 @@
+"""ShufflePlan fast path, composition and ISA equivalence."""
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.fabric import (PAD, ShufflePlan, apply_plan, apply_plan_np,
+                               concat_plans, identity_plan,
+                               pad_plan_to_word)
+
+
+def _rand_plan(rng, n_out, n_in, width=16, pad_frac=0.2):
+    gi = rng.integers(0, n_in, size=n_out).astype(np.int32)
+    gi[rng.random(n_out) < pad_frac] = PAD
+    pv = rng.integers(-100, 100, size=n_out)
+    return ShufflePlan(gi, pv, width)
+
+
+def test_identity():
+    x = np.arange(10.0)
+    p = identity_plan(10)
+    np.testing.assert_array_equal(apply_plan_np(x, p), x)
+
+
+def test_jax_matches_numpy_batched():
+    rng = np.random.default_rng(0)
+    plan = _rand_plan(rng, 37, 23)
+    x = rng.standard_normal((4, 5, 23)).astype(np.float32)
+    ref = apply_plan_np(x.copy(), plan)
+    got = np.asarray(apply_plan(jnp.asarray(x), plan))
+    np.testing.assert_allclose(got, ref)
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.integers(0, 2 ** 31))
+def test_composition_property(seed):
+    """plan_a.then(plan_b) == apply b after a."""
+    rng = np.random.default_rng(seed)
+    n0, n1, n2 = 17, 29, 13
+    a = _rand_plan(rng, n1, n0)
+    b = _rand_plan(rng, n2, n1)
+    x = rng.standard_normal(n0)
+    two_step = apply_plan_np(apply_plan_np(x.copy(), a), b)
+    fused = apply_plan_np(x.copy(), a.then(b))
+    np.testing.assert_allclose(fused, two_step)
+
+
+def test_concat_and_pad_to_word():
+    rng = np.random.default_rng(1)
+    a = _rand_plan(rng, 5, 8, width=8)
+    b = _rand_plan(rng, 6, 8, width=8)
+    c = concat_plans(a, b)
+    assert c.n_out == 11
+    p = pad_plan_to_word(c)
+    assert p.n_out % p.elems_per_word() == 0
+    x = rng.integers(-100, 100, size=8)
+    np.testing.assert_array_equal(apply_plan_np(x, p)[:11],
+                                  apply_plan_np(x, c))

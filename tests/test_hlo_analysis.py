@@ -1,0 +1,86 @@
+"""Loop-aware HLO analyzer: exactness on known-FLOP programs (subprocess
+with a small forced device count for the sharded cases)."""
+
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+ROOT = os.path.join(os.path.dirname(__file__), "..")
+
+
+def run_sub(code, devices=8):
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
+    env["PYTHONPATH"] = os.path.join(ROOT, "src")
+    out = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
+                         capture_output=True, text=True, timeout=600,
+                         env=env, cwd=ROOT)
+    assert out.returncode == 0, out.stderr[-3000:]
+    return json.loads(out.stdout.strip().splitlines()[-1])
+
+
+def test_matmul_scan_grad_remat_flops_exact():
+    r = run_sub("""
+        import jax, jax.numpy as jnp, json
+        from repro.launch.hlo_analysis import analyze
+        W = jax.ShapeDtypeStruct((7, 256, 256), jnp.float32)
+        A = jax.ShapeDtypeStruct((64, 256), jnp.float32)
+
+        def scan_fn(a, ws):
+            def body(x, w):
+                return jnp.tanh(x @ w), None
+            return jax.lax.scan(body, a, ws)[0]
+
+        def remat_fn(a, ws):
+            @jax.checkpoint
+            def body(x, w):
+                return jnp.tanh(x @ w), None
+            return jnp.sum(jax.lax.scan(body, a, ws)[0])
+
+        unit = 2 * 64 * 256 * 256
+        out = {}
+        out["scan"] = analyze(jax.jit(scan_fn).lower(A, W).compile()
+                              .as_text()).flops / (7 * unit)
+        out["grad"] = analyze(jax.jit(jax.grad(
+            lambda a, w: jnp.sum(scan_fn(a, w)), argnums=1))
+            .lower(A, W).compile().as_text()).flops / (3 * 7 * unit)
+        out["remat"] = analyze(jax.jit(jax.grad(remat_fn, argnums=1))
+                               .lower(A, W).compile().as_text()).flops \
+            / (4 * 7 * unit)
+        print(json.dumps(out))
+    """)
+    for k, v in r.items():
+        assert abs(v - 1.0) < 1e-6, (k, v)
+
+
+def test_collective_bytes_sharded_matmul():
+    r = run_sub("""
+        import jax, jax.numpy as jnp, json
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        from repro.launch.hlo_analysis import analyze
+        mesh = jax.make_mesh((8,), ("model",))
+        A = jax.ShapeDtypeStruct((256, 512), jnp.float32)
+        B = jax.ShapeDtypeStruct((512, 128), jnp.float32)
+        c = jax.jit(lambda a, b: a @ b,
+                    in_shardings=(NamedSharding(mesh, P(None, "model")),
+                                  NamedSharding(mesh, P("model", None)))
+                    ).lower(A, B).compile()
+        s = analyze(c.as_text())
+        print(json.dumps({"ar": s.collective_bytes["all-reduce"]}))
+    """)
+    assert r["ar"] == 256 * 128 * 4
+
+
+def test_hbm_traffic_model_sane():
+    r = run_sub("""
+        import jax, jax.numpy as jnp, json
+        from repro.launch.hlo_analysis import analyze
+        A = jax.ShapeDtypeStruct((256, 512), jnp.float32)
+        B = jax.ShapeDtypeStruct((512, 128), jnp.float32)
+        c = jax.jit(lambda a, b: a @ b).lower(A, B).compile()
+        print(json.dumps({"b": analyze(c.as_text()).hbm_bytes}))
+    """, devices=1)
+    exact = (256 * 512 + 512 * 128 + 256 * 128) * 4
+    assert abs(r["b"] - exact) / exact < 0.05

@@ -1,0 +1,85 @@
+"""Pallas kernel sweeps (interpret mode) vs pure-jnp oracles."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import signal_mapping as sm
+from repro.kernels import bitserial_matmul, fft_stage, fir_conv, shuffle_gemm
+from repro.kernels.bitserial_mm.ref import ref_bitserial_matmul
+from repro.kernels.fft_stage.ops import fft_pallas
+from repro.kernels.fft_stage.ref import ref_fft_stage
+from repro.kernels.fir_conv.ref import ref_fir
+from repro.kernels.shuffle_gemm.ref import ref_shuffle_gemm
+
+
+@pytest.mark.parametrize("aw,ww", [(4, 4), (8, 4), (8, 8), (16, 8),
+                                   (16, 16), (4, 16)])
+@pytest.mark.parametrize("shape", [(3, 5, 2), (37, 53, 19), (128, 128, 8)])
+def test_bitserial_exact(aw, ww, shape):
+    m, k, n = shape
+    rng = np.random.default_rng(aw * 100 + ww + m)
+    a = jnp.asarray(rng.integers(-2 ** (aw - 1), 2 ** (aw - 1), (m, k)),
+                    jnp.int32)
+    w = jnp.asarray(rng.integers(-2 ** (ww - 1), 2 ** (ww - 1), (k, n)),
+                    jnp.int32)
+    got = bitserial_matmul(a, w, aw, ww)
+    np.testing.assert_array_equal(np.asarray(got), ref_bitserial_matmul(a, w))
+
+
+def test_bitserial_batched():
+    rng = np.random.default_rng(0)
+    a = jnp.asarray(rng.integers(-8, 8, (2, 3, 10, 12)), jnp.int32)
+    w = jnp.asarray(rng.integers(-8, 8, (12, 7)), jnp.int32)
+    got = bitserial_matmul(a, w, 4, 4)
+    np.testing.assert_array_equal(np.asarray(got),
+                                  np.asarray(a.astype(jnp.int32) @ w))
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("n,t,feat", [(64, 5, 1), (96, 7, 4), (256, 16, 8)])
+def test_shuffle_gemm_sweep(dtype, n, t, feat):
+    rng = np.random.default_rng(n + t)
+    plan = sm.make_fir_plan(n, t)
+    x = jnp.asarray(rng.standard_normal((2, n)), dtype)
+    w = jnp.asarray(rng.standard_normal((t, feat)), dtype)
+    got = shuffle_gemm(x, plan.im2col, w, rows=n)
+    ref = ref_shuffle_gemm(x, plan.im2col, w, rows=n)
+    tol = 1e-5 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(ref, np.float32),
+                               rtol=tol, atol=tol)
+
+
+@pytest.mark.parametrize("n", [8, 64, 512])
+def test_fft_stage_kernel_per_stage(n):
+    rng = np.random.default_rng(n)
+    plan = sm.make_fft_plan(n, fuse_adjacent=True)
+    x = jnp.asarray(rng.standard_normal((3, 2 * n)), jnp.float32)
+    for st in plan.stages[:3]:
+        got = fft_stage(x, st)
+        ref = ref_fft_stage(x, st)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                                   rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("n", [16, 128, 1024])
+def test_fft_pallas_end_to_end(n):
+    rng = np.random.default_rng(n)
+    z = (rng.standard_normal((2, n))
+         + 1j * rng.standard_normal((2, n))).astype(np.complex64)
+    got = np.asarray(fft_pallas(jnp.asarray(z)))
+    np.testing.assert_allclose(got, np.fft.fft(z, axis=-1),
+                               rtol=2e-3, atol=2e-3)
+
+
+@pytest.mark.parametrize("taps,phases", [(5, 2), (21, 8), (80, 8), (33, 16)])
+@pytest.mark.parametrize("dtype", [jnp.float32])
+def test_fir_conv_sweep(taps, phases, dtype):
+    rng = np.random.default_rng(taps)
+    x = jnp.asarray(rng.standard_normal((3, 256)), dtype)
+    h = jnp.asarray(rng.standard_normal(taps), dtype)
+    got = fir_conv(x, h, phases=phases)
+    ref = ref_fir(x, h)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                               rtol=1e-4, atol=1e-4)

@@ -1,0 +1,76 @@
+"""§Paper-claims gates: the perf model must land near the paper's numbers
+(reproduction bands, not exact — baseline library constants are
+literature-calibrated; see benchmarks/paper_claims.py)."""
+
+import math
+import sys
+import os
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+import pytest
+
+from benchmarks import paper_claims as pc
+
+
+def _by_name(rows):
+    return {r[0]: r for r in rows}
+
+
+def test_table1_within_2x():
+    for name, ours, paper, _ in pc.table1_workloads():
+        assert 0.5 <= ours / paper <= 2.0, (name, ours, paper)
+
+
+def test_fig7a_cnn_bitwidth_close():
+    for name, ours, paper, _ in pc.fig7a_cnn_bitwidth():
+        assert abs(ours - paper) / paper < 0.10, (name, ours, paper)
+
+
+def test_fig7b_dsp_bitwidth_close():
+    for name, ours, paper, _ in pc.fig7b_dsp_bitwidth():
+        assert abs(ours - paper) / paper < 0.12, (name, ours, paper)
+
+
+def test_fig8_averages_close():
+    rows = _by_name(pc.fig8_signal_processing())
+    for key, tol in [("fig8/speedup_vs_arm_avg", 0.25),
+                     ("fig8/energy_vs_arm_avg", 0.25),
+                     ("fig8/speedup_vs_tms_avg", 0.15),
+                     ("fig8/energy_vs_tms_avg", 0.15)]:
+        _, ours, paper, _ = rows[key]
+        assert abs(ours - paper) / paper < tol, (key, ours, paper)
+
+
+def test_fig10_fusion_direction_and_band():
+    """Direction + bounded magnitude.  Our model reproduces the paper's
+    qualitative claim (fused SigDLA beats independent DSP-DLA on both
+    axes) but predicts LARGER gains (2.2x/2.7x vs 1.52x/2.15x): the paper
+    does not publish its [34] CNN dimensions or the baseline's SRAM
+    behaviour, so the CNN:FFT balance is a reconstruction — see
+    EXPERIMENTS.md §Paper-claims discussion."""
+    rows = _by_name(pc.fig10_fusion())
+    _, sp, paper_sp, _ = rows["fig10/speedup_vs_dsp_dla"]
+    _, en, paper_en, _ = rows["fig10/energy_vs_dsp_dla"]
+    assert 1.2 < sp < 3.0, (sp, paper_sp)
+    assert 1.5 < en < 4.0, (en, paper_en)
+
+
+def test_beyond_paper_fir_wins():
+    for name, ours, _, _ in pc.beyond_paper_fir():
+        assert ours > 3.0, (name, ours)
+
+
+def test_table2_constants():
+    rows = _by_name(pc.table2_overhead())
+    assert abs(rows["table2/area_overhead"][1] - 5.21 / 4.45) < 1e-9
+
+
+def test_paper_workload_registry():
+    from repro.configs.sigdla_paper import get_workload, list_workloads
+    assert "fft1024" in list_workloads()
+    wl = get_workload("tiny_vggnet")
+    assert wl.macs > 1e8
+    import pytest
+    with pytest.raises(KeyError):
+        get_workload("nope")

@@ -1,0 +1,70 @@
+"""Roofline methodology cross-checks.
+
+1. The analytic param-count formula (MODEL_FLOPS input) must match the
+   real parameter tree for every assigned architecture.
+2. The loop-aware analyzer must agree with an unrolled compile of the
+   same model (scan trip counts handled == no scan at all).
+"""
+
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import numpy as np
+import pytest
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+from benchmarks.roofline import param_counts
+from repro.configs import get_config, list_configs
+
+
+@pytest.mark.parametrize("arch", list_configs())
+def test_param_count_formula_matches_init(arch):
+    cfg = get_config(arch)
+    params = jax.eval_shape(
+        lambda: __import__("repro.models.zoo", fromlist=["get_model"]
+                           ).get_model(cfg).init(jax.random.PRNGKey(0)))
+    real = sum(int(np.prod(l.shape))
+               for l in jax.tree_util.tree_leaves(params))
+    formula = param_counts(cfg)["total"]
+    assert abs(formula - real) / real < 0.02, (arch, formula, real)
+
+
+def test_scanned_equals_unrolled_analysis():
+    """flops(scan-layers) ≈ flops(unrolled) for the same reduced model —
+    the core guarantee of the loop-aware analyzer."""
+    root = os.path.join(os.path.dirname(__file__), "..")
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+    env["PYTHONPATH"] = os.path.join(root, "src")
+    code = """
+        import jax, jax.numpy as jnp, json, dataclasses
+        from repro.configs import get_config
+        from repro.models.zoo import get_model
+        from repro.launch.hlo_analysis import analyze
+
+        base = get_config("starcoder2-3b").reduced(
+            n_layers=6, d_model=64, n_heads=4, d_ff=128, vocab=256)
+        out = {}
+        for scan in (True, False):
+            cfg = dataclasses.replace(base, scan_layers=scan)
+            bundle = get_model(cfg)
+            params = jax.eval_shape(bundle.init, jax.random.PRNGKey(0))
+            batch = {"tokens": jax.ShapeDtypeStruct((4, 32), jnp.int32)}
+            def loss(p, b):
+                return bundle.loss_fn(p, b)[0]
+            c = jax.jit(jax.grad(loss)).lower(params, batch).compile()
+            out["scan" if scan else "unrolled"] = analyze(c.as_text()).flops
+        print(json.dumps(out))
+    """
+    r = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
+                       capture_output=True, text=True, timeout=600,
+                       env=env, cwd=root)
+    assert r.returncode == 0, r.stderr[-3000:]
+    vals = json.loads(r.stdout.strip().splitlines()[-1])
+    ratio = vals["scan"] / vals["unrolled"]
+    assert 0.9 < ratio < 1.15, vals

@@ -1,0 +1,52 @@
+"""Train-step factory: microbatched gradient accumulation must equal the
+single-shot step, and losses must decrease over a short run."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.launch.train import init_train_state, make_train_step
+from repro.models.zoo import get_model
+
+
+def _setup(microbatch):
+    cfg = get_config("starcoder2-3b").reduced(
+        n_layers=2, d_model=32, n_heads=4, d_ff=64, vocab=128)
+    cfg = dataclasses.replace(cfg, microbatch=microbatch, remat=False)
+    bundle = get_model(cfg)
+    params, opt = init_train_state(bundle, jax.random.PRNGKey(0))
+    return bundle, params, opt
+
+
+def test_microbatch_equals_single_shot():
+    batch = {"tokens": jax.random.randint(jax.random.PRNGKey(1), (8, 16),
+                                          0, 128)}
+    outs = {}
+    for k in (1, 2, 4):
+        bundle, params, opt = _setup(k)
+        step = jax.jit(make_train_step(bundle))
+        p2, o2, m = step(params, opt, batch)
+        outs[k] = (float(m["loss"]),
+                   np.asarray(jax.tree_util.tree_leaves(p2)[0]))
+    assert abs(outs[1][0] - outs[2][0]) < 1e-5
+    assert abs(outs[1][0] - outs[4][0]) < 1e-5
+    np.testing.assert_allclose(outs[1][1], outs[4][1], rtol=2e-4, atol=2e-4)
+
+
+def test_loss_decreases():
+    from repro.optim.adamw import cosine_schedule
+    bundle, params, opt = _setup(1)
+    step = jax.jit(make_train_step(bundle, cosine_schedule(5e-3, 3, 1000)),
+                   donate_argnums=(0, 1))
+    losses = []
+    key = jax.random.PRNGKey(2)
+    for i in range(30):
+        batch = {"tokens": jax.random.randint(
+            jax.random.fold_in(key, i % 4), (8, 16), 0, 128)}
+        params, opt, m = step(params, opt, batch)
+        losses.append(float(m["loss"]))
+    assert np.mean(losses[-5:]) < np.mean(losses[:5]) - 0.2
+    assert int(opt.step) == 30
