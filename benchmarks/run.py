@@ -25,6 +25,13 @@ def main() -> None:
     for name, us, derived in kernel_bench.rows():
         print(f"{name},{us:.1f},{derived}")
 
+    from benchmarks import signal_graph_bench
+    print("\ngraph,variant,fabric_passes,shuffle_words,model_cycles,"
+          "us_per_call")
+    for name, variant, passes, words, cycles, us in \
+            signal_graph_bench.rows():
+        print(f"{name},{variant},{passes},{words},{cycles},{us:.1f}")
+
     art = os.path.join(os.path.dirname(__file__), "..", "artifacts",
                        "dryrun")
     if os.path.isdir(art) and any(f.endswith(".json")

@@ -1,0 +1,83 @@
+"""Graph-level SigStream benchmark: fused vs unfused pipeline lowering.
+
+For each pipeline graph, reports the static fabric-pass / shuffle-word
+counts from the graph compiler, the perf-model cycle estimate, and the
+measured wall-clock of the jitted compiled callable (CPU here; the ratio
+between fused and unfused is the interesting number, mirroring the
+paper's shuffle-traffic accounting at pipeline scope).
+
+    PYTHONPATH=src python -m benchmarks.signal_graph_bench
+"""
+
+from __future__ import annotations
+
+import os
+import sys
+import time
+from typing import List, Tuple
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _bench(fn, *args, iters: int = 10) -> float:
+    out = fn(*args)
+    jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters * 1e6   # us
+
+
+def _graphs(length: int):
+    from repro.signal import SignalGraph
+
+    fig9 = SignalGraph("fig9_enhance")
+    fig9.stft("spec", frame=256, hop=128)
+    fig9.dnn("mask", "spec",
+             fn=lambda p, z: jax.nn.sigmoid(jnp.abs(z) - 1.0))
+    fig9.mul("enh", "spec", "mask")
+    fig9.istft("out", "enh", hop=128, length=length)
+    fig9.output("out")
+
+    front = SignalGraph("fir_stft_mel")
+    front.fir("pre", "input", taps=np.hanning(16) / 8.0)
+    front.stft("spec", "pre", frame=256, hop=128)
+    front.magnitude("mag", "spec", onesided=True)
+    front.mel_filterbank("mel", "mag", sr=16_000, n_mels=40)
+    front.output("mel")
+
+    return [fig9, front]
+
+
+def rows(length: int = 4096, batch: int = 4) -> List[Tuple]:
+    """(graph, variant, fabric_passes, shuffle_words, model_cycles,
+    us_per_call) per graph x {fused, unfused}."""
+    from repro.core.perf_model import signal_graph_report
+
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.standard_normal((batch, length)), jnp.float32)
+    out = []
+    for g in _graphs(length):
+        for fuse in (True, False):
+            compiled = g.compile(length, fuse=fuse)
+            rep = signal_graph_report(compiled)
+            us = _bench(compiled.jit(), x, None)
+            out.append((g.name, "fused" if fuse else "unfused",
+                        rep["fabric_passes"], rep["shuffle_words"],
+                        rep["total"], us))
+    return out
+
+
+def main() -> None:
+    print("graph,variant,fabric_passes,shuffle_words,model_cycles,us_per_call")
+    for name, variant, passes, words, cycles, us in rows():
+        print(f"{name},{variant},{passes},{words},{cycles},{us:.1f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -27,7 +27,8 @@ import numpy as np
 from .shuffle_compiler import PAD, run_plan_via_isa
 
 __all__ = ["ShufflePlan", "PAD", "apply_plan", "apply_plan_np",
-           "pad_plan_to_word", "concat_plans", "identity_plan"]
+           "pad_plan_to_word", "concat_plans", "identity_plan",
+           "fuse_plans", "tile_plan"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -77,6 +78,34 @@ def concat_plans(*plans: ShufflePlan) -> ShufflePlan:
     gi = np.concatenate([p.gather_idx for p in plans])
     pv = np.concatenate([p.pad_values for p in plans])
     return ShufflePlan(gi, pv, width)
+
+
+def fuse_plans(*plans: ShufflePlan) -> ShufflePlan:
+    """Collapse a chain of back-to-back gathers into one fabric pass.
+
+    ``fuse_plans(p1, p2, ..., pk)`` is the plan whose single application
+    equals applying ``p1`` then ``p2`` ... then ``pk``.  This is the
+    graph-compiler's workhorse (signal/graph.py): adjacent data-movement
+    stages of a pipeline become one rd-buf/shuffle/wr-buf sequence instead
+    of k round trips through the buffer.
+    """
+    out = plans[0]
+    for p in plans[1:]:
+        out = out.then(p)
+    return out
+
+
+def tile_plan(plan: ShufflePlan, reps: int, in_stride: int) -> ShufflePlan:
+    """Block-diagonal replication: apply ``plan`` independently to ``reps``
+    consecutive length-``in_stride`` segments of the source.  Output is the
+    concatenation of the per-segment outputs.  Used to batch a per-frame
+    plan (e.g. one FFT stage) over all frames of a framed signal while
+    keeping it a single fabric pass."""
+    gi = plan.gather_idx[None, :] + in_stride * np.arange(reps)[:, None]
+    gi = np.where(plan.gather_idx[None, :] == PAD, PAD, gi)
+    pv = np.broadcast_to(plan.pad_values, (reps, plan.n_out))
+    return ShufflePlan(gi.ravel().astype(np.int32), pv.ravel().copy(),
+                       plan.width)
 
 
 def pad_plan_to_word(plan: ShufflePlan) -> ShufflePlan:

@@ -193,6 +193,38 @@ def sigdla_energy_j(w: Workload, aw: int, ww: int,
 
 
 # --------------------------------------------------------------------------
+# Graph-level accounting (SigStream pipeline graphs, signal/graph.py)
+# --------------------------------------------------------------------------
+
+def signal_graph_report(compiled, aw: int = 16, ww: int = 16,
+                        hw: SigDLAHW = SigDLAHW(),
+                        weights_resident: bool = True) -> dict:
+    """Cycle / traffic report for a compiled :class:`SignalGraph`.
+
+    ``compiled`` is duck-typed: it supplies ``shuffle_passes()`` (one
+    :class:`ShufflePass` per fabric pass the graph executes),
+    ``conv_layers()`` (one :class:`ConvLayer` per array einsum, plus any
+    user-declared DNN layers), and ``in_type`` / ``out_type`` element
+    counts for the DRAM streams.  This is the graph-level generalization of
+    the per-op workload builders above: fusing two back-to-back gathers
+    shows up here as one fewer pass and fewer shuffle words.
+    """
+    shuffles = list(compiled.shuffle_passes())
+    layers = list(compiled.conv_layers())
+    w = Workload(getattr(compiled, "name", "signal_graph"), layers, shuffles,
+                 dram_in_elems=compiled.in_type.elems,
+                 dram_out_elems=compiled.out_type.elems)
+    rep = sigdla_cycles(w, aw, ww, hw, weights_resident=weights_resident)
+    rep["fabric_passes"] = len(shuffles)
+    rep["shuffle_words"] = sum(s.words for s in shuffles)
+    rep["shuffle_elems"] = sum(s.elems for s in shuffles)
+    rep["macs"] = w.macs
+    rep["time_s"] = rep["total"] / hw.freq_hz
+    rep["energy_j"] = rep["time_s"] * hw.power_w
+    return rep
+
+
+# --------------------------------------------------------------------------
 # Baseline cycle models (FFT / FIR / DCT on DSP-class processors)
 # --------------------------------------------------------------------------
 

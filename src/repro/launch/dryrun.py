@@ -129,6 +129,12 @@ def lower_cell(arch: str, shape_name: str, multi_pod: bool,
 
     mem = compiled.memory_analysis()
     cost = compiled.cost_analysis()
+    # newer JAX returns a list of per-computation dicts (or None), older
+    # returns a single dict — normalize to one flat dict.
+    if cost is None:
+        cost = {}
+    elif isinstance(cost, (list, tuple)):
+        cost = cost[0] if cost else {}
     text = compiled.as_text()
     coll = collective_bytes(text)
     loop_aware = hlo_analysis.analyze(text).to_dict()

@@ -1,4 +1,6 @@
-from .engine import ServingEngine
+from .engine import Request, ServingEngine
 from .quantized import dequantize_tree, quantize_tree
+from .signal_service import CoScheduler, SignalRequest, SignalService
 
-__all__ = ["ServingEngine", "quantize_tree", "dequantize_tree"]
+__all__ = ["ServingEngine", "Request", "quantize_tree", "dequantize_tree",
+           "SignalService", "SignalRequest", "CoScheduler"]

@@ -1,0 +1,216 @@
+"""Signal-graph serving: batched DSP requests co-scheduled with LLM decode.
+
+The paper's system-level story is ONE array serving both DL and DSP work
+concurrently (Fig 9 runs an FFT->CNN->iFFT pipeline while the same DLA
+keeps its deep-learning duties).  This module is the serving counterpart:
+
+  * :class:`SignalService` — registry of named :class:`SignalGraph`
+    pipelines.  Pending requests are grouped by (graph, length), stacked
+    into one batch and executed as a single jitted call, so DSP traffic
+    gets the same batching amortization as token traffic.
+  * :class:`CoScheduler` — drives a :class:`~repro.serving.engine.
+    ServingEngine` and a :class:`SignalService` on one step loop: every
+    tick interleaves one batched LLM decode step with one batched DSP
+    graph execution, the two workloads time-sharing the accelerator
+    exactly like the paper's unified array.
+
+Greedy-decode results are identical to ``ServingEngine.serve`` and DSP
+results identical to offline graph execution (tests/test_signal_service.py).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..signal.graph import CompiledSignalGraph, SignalGraph
+from .engine import Request, ServingEngine
+
+__all__ = ["SignalRequest", "SignalService", "CoScheduler"]
+
+
+@dataclasses.dataclass
+class SignalRequest:
+    rid: int
+    graph: str
+    samples: np.ndarray            # (T,) one channel of signal
+    done: bool = False
+
+
+class SignalService:
+    """Batched serving of registered signal graphs.
+
+    Compiled callables are cached per (graph, length, batch) — like XLA
+    serving everywhere else in this repo, steady-state traffic with shared
+    shapes hits the cache and pays one fused program launch per batch.
+    """
+
+    def __init__(self, batch_size: int = 8, fuse: bool = True):
+        self.batch_size = batch_size
+        self.fuse = fuse
+        self._graphs: Dict[str, Tuple[SignalGraph, object]] = {}
+        self._compiled: Dict[Tuple[str, int], CompiledSignalGraph] = {}
+        self._jitted: Dict[Tuple[str, int], object] = {}
+        self._queue: List[SignalRequest] = []
+
+    # -- registry -----------------------------------------------------------
+    def register(self, name: str, graph: SignalGraph, params=None) -> None:
+        self._graphs[name] = (graph, params)
+        # re-registering a name replaces the graph: drop stale compiles
+        for key in [k for k in self._compiled if k[0] == name]:
+            del self._compiled[key]
+            self._jitted.pop(key, None)
+
+    def compiled_for(self, name: str, length: int) -> CompiledSignalGraph:
+        key = (name, length)
+        if key not in self._compiled:
+            graph, _ = self._graphs[name]
+            self._compiled[key] = graph.compile(length, fuse=self.fuse)
+        return self._compiled[key]
+
+    # -- queue --------------------------------------------------------------
+    def submit(self, req: SignalRequest) -> None:
+        if req.graph not in self._graphs:
+            raise KeyError(f"unknown graph {req.graph!r}")
+        self._queue.append(req)
+
+    def pending(self) -> int:
+        return len(self._queue)
+
+    def step(self) -> Dict[int, np.ndarray]:
+        """Execute ONE batched graph call: the oldest (graph, length)
+        group, up to ``batch_size`` requests stacked along the batch axis.
+        Returns {rid: output} for the completed requests."""
+        if not self._queue:
+            return {}
+        g0 = self._queue[0]
+        key = (g0.graph, int(np.asarray(g0.samples).shape[-1]))
+        wave = [r for r in self._queue
+                if (r.graph, int(np.asarray(r.samples).shape[-1])) == key]
+        wave = wave[: self.batch_size]
+        for r in wave:
+            self._queue.remove(r)
+
+        name, length = key
+        compiled = self.compiled_for(name, length)
+        if key not in self._jitted:
+            self._jitted[key] = compiled.jit()
+        _, params = self._graphs[name]
+        batch = jnp.stack([jnp.asarray(r.samples) for r in wave])
+        out = np.asarray(self._jitted[key](batch, params))
+        results = {}
+        for i, r in enumerate(wave):
+            r.done = True
+            results[r.rid] = out[i]
+        return results
+
+    def serve(self, requests: List[SignalRequest]) -> Dict[int, np.ndarray]:
+        """Drain a request list without an LLM co-tenant."""
+        for r in requests:
+            self.submit(r)
+        results: Dict[int, np.ndarray] = {}
+        while self.pending():
+            results.update(self.step())
+        return results
+
+
+# --------------------------------------------------------------------------
+# LLM + DSP co-scheduling
+# --------------------------------------------------------------------------
+
+class _LLMWave:
+    """Incremental replica of ``ServingEngine.generate`` for one wave:
+    prefill once, then one jitted decode step per ``step()`` call, so the
+    scheduler can interleave DSP work between token steps."""
+
+    def __init__(self, engine: ServingEngine, reqs: List[Request]):
+        self.engine = engine
+        self.reqs = reqs
+        self.max_new = max(r.max_new for r in reqs)
+        self.outs: List[List[int]] = [[] for _ in reqs]
+        b = len(reqs)
+        plen = max(len(r.prompt) for r in reqs)
+        toks = np.zeros((b, plen), np.int32)
+        for i, r in enumerate(reqs):
+            toks[i, -len(r.prompt):] = r.prompt          # left-pad
+        batch = {"tokens": jnp.asarray(toks)}
+        cfg = engine.cfg
+        if cfg.input_kind == "encdec":
+            batch["embeds"] = jnp.zeros(
+                (b, cfg.enc_seq, cfg.d_model), jnp.float32)
+        logits, self.cache = engine.bundle.prefill(
+            engine.params, batch, max_len=plen + self.max_new)
+        self.rng = jax.random.PRNGKey(0)
+        self.cur = engine._sample(logits[:, -1], self.rng)
+        self.steps = 0
+
+    @property
+    def done(self) -> bool:
+        return self.steps >= self.max_new
+
+    def step(self) -> None:
+        for i in range(len(self.reqs)):
+            self.outs[i].append(int(self.cur[i]))
+        self.steps += 1
+        if self.done:
+            return
+        logits, self.cache = self.engine._decode(
+            self.engine.params, self.cache, {"tokens": self.cur[:, None]})
+        self.rng, sub = jax.random.split(self.rng)
+        self.cur = self.engine._sample(logits[:, -1], sub)
+
+    def results(self) -> Dict[int, List[int]]:
+        return {r.rid: o[: r.max_new]
+                for r, o in zip(self.reqs, self.outs)}
+
+
+class CoScheduler:
+    """One step loop over two workload classes on the same device(s).
+
+    Each :meth:`tick` runs (a) one LLM decode step for the active token
+    wave and (b) one batched DSP graph execution — the serving analogue of
+    the paper's DLA interleaving signal tasks with DNN layers instead of
+    farming them out to a separate DSP chip.
+    """
+
+    def __init__(self, engine: ServingEngine, signals: SignalService):
+        self.engine = engine
+        self.signals = signals
+        self._llm_queue: List[Request] = []
+        self._wave: Optional[_LLMWave] = None
+        self.llm_results: Dict[int, List[int]] = {}
+        self.dsp_results: Dict[int, np.ndarray] = {}
+        self.ticks = 0
+
+    def submit_llm(self, req: Request) -> None:
+        self._llm_queue.append(req)
+
+    def submit_signal(self, req: SignalRequest) -> None:
+        self.signals.submit(req)
+
+    @property
+    def idle(self) -> bool:
+        return (self._wave is None and not self._llm_queue
+                and not self.signals.pending())
+
+    def tick(self) -> None:
+        if self._wave is None and self._llm_queue:
+            wave = self._llm_queue[: self.engine.batch_size]
+            self._llm_queue = self._llm_queue[self.engine.batch_size:]
+            self._wave = _LLMWave(self.engine, wave)
+        if self._wave is not None:
+            self._wave.step()
+            if self._wave.done:
+                self.llm_results.update(self._wave.results())
+                self._wave = None
+        self.dsp_results.update(self.signals.step())
+        self.ticks += 1
+
+    def run(self) -> Tuple[Dict[int, List[int]], Dict[int, np.ndarray]]:
+        while not self.idle:
+            self.tick()
+        return self.llm_results, self.dsp_results

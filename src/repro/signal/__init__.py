@@ -20,10 +20,15 @@ from ..core.signal_mapping import (complex_to_interleaved,
                                    dct_via_array as dct,
                                    dct2_via_array as dct2)
 from .spectrogram import stft, istft, magnitude_spectrogram
+from .graph import (SignalGraph, CompiledSignalGraph, SigType,
+                    biquad_apply, overlap_add, mel_filterbank_matrix)
+from .streaming import StreamingRunner
 
 __all__ = ["fft", "ifft", "fir", "fir_phased", "dct", "dct2", "dwt",
            "stft", "istft", "magnitude_spectrogram",
-           "complex_to_interleaved", "interleaved_to_complex"]
+           "complex_to_interleaved", "interleaved_to_complex",
+           "SignalGraph", "CompiledSignalGraph", "SigType", "biquad_apply",
+           "overlap_add", "mel_filterbank_matrix", "StreamingRunner"]
 
 
 @functools.lru_cache(maxsize=64)

@@ -1,0 +1,734 @@
+"""SigStream: a declarative DSP pipeline-graph compiler for the SigDLA path.
+
+The paper's headline workload (Fig 9) is not a single transform but a
+*pipeline* — FFT -> CNN -> iFFT speech enhancement — and the win of the
+shuffling-fabric architecture comes from keeping the whole pipeline on the
+accelerator.  A :class:`SignalGraph` is a DAG of typed stages (stft, fft,
+ifft, fir, iir_biquad, dct, dwt, mel_filterbank, magnitude, overlap_add,
+mul, dnn-model hook).  ``compile()`` lowers every stage to a sequence of
+three primitive step kinds:
+
+  * :class:`GatherStep` — one pass through the shuffling fabric (a static
+    :class:`~repro.core.fabric.ShufflePlan`, with an optional constant
+    per-element scale the consuming array pass applies on stream-in);
+  * :class:`EinsumStep` — one dense GEMM/einsum on the computing array
+    against a static operand (twiddles, taps, DCT matrix, mel filterbank);
+  * :class:`LambdaStep` — host/array glue (complex repacking, overlap-add
+    accumulation, the DNN hook) that moves no data through the fabric.
+
+A fusion pass then composes adjacent gathers via
+:func:`repro.core.fabric.fuse_plans` — back-to-back data-movement plans
+(framing -> complex interleave -> FFT bit-reversal -> stage-1 butterfly
+gather) collapse into ONE fabric pass, the graph-level generalization of
+the per-FFT ``fuse_adjacent`` optimization.  The result is a single
+jittable callable plus per-graph fabric-pass / shuffle-word / cycle
+accounting consumed by :func:`repro.core.perf_model.signal_graph_report`.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core import signal_mapping as _sm
+from ..core.fabric import PAD, ShufflePlan, apply_plan, fuse_plans, tile_plan
+
+__all__ = ["SignalGraph", "CompiledSignalGraph", "SigType",
+           "GatherStep", "EinsumStep", "LambdaStep",
+           "biquad_apply", "overlap_add", "mel_filterbank_matrix"]
+
+
+# --------------------------------------------------------------------------
+# Types carried along graph edges
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class SigType:
+    """Shape/domain of a stage output: ``suffix`` is the trailing shape
+    (leading axes are batch), ``domain`` is 'samples' or 'frames'."""
+    suffix: Tuple[int, ...]
+    is_complex: bool = False
+    domain: str = "samples"
+    frame: int = 0
+    hop: int = 0
+
+    @property
+    def elems(self) -> int:
+        n = 1
+        for d in self.suffix:
+            n *= d
+        return n * (2 if self.is_complex else 1)
+
+
+# --------------------------------------------------------------------------
+# Primitive steps (the compiled artifact)
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class GatherStep:
+    """One shuffling-fabric pass: ``out = in[plan] (* diag)``.  ``diag`` is
+    a static per-element scale folded into the consuming array pass (window
+    functions, 1/n iFFT normalization, conjugation sign patterns)."""
+    name: str
+    plan: ShufflePlan
+    diag: Optional[np.ndarray] = None
+
+
+@dataclasses.dataclass
+class EinsumStep:
+    """One computing-array pass: reshape the flat last axis to
+    ``reshape_in``, einsum against the static operand, flatten back."""
+    name: str
+    spec: str
+    operand: np.ndarray
+    reshape_in: Tuple[int, ...]
+    out_rank: int                 # rank of the einsum-result suffix to flatten
+    rows: int                     # output positions  (perf: ConvLayer.h)
+    cin: int                      # contraction size  (perf: ConvLayer.cin)
+    cout: int                     # output features   (perf: ConvLayer.cout)
+
+
+@dataclasses.dataclass
+class LambdaStep:
+    """Glue with no fabric traffic (repacking, OLA, DNN hook)."""
+    name: str
+    fn: Callable
+    takes_params: bool = False
+
+
+Step = object  # GatherStep | EinsumStep | LambdaStep
+
+
+def _run_steps(steps: Sequence[Step], x: jax.Array, params) -> jax.Array:
+    for s in steps:
+        if isinstance(s, GatherStep):
+            x = apply_plan(x, s.plan)
+            if s.diag is not None:
+                x = x * jnp.asarray(s.diag, dtype=x.dtype)
+        elif isinstance(s, EinsumStep):
+            h = x.reshape(*x.shape[:-1], *s.reshape_in)
+            y = jnp.einsum(s.spec, h, jnp.asarray(s.operand, dtype=h.dtype))
+            x = y.reshape(*y.shape[:-s.out_rank], -1)
+        else:
+            x = s.fn(params, x) if s.takes_params else s.fn(x)
+    return x
+
+
+def _compose_gathers(a: GatherStep, b: GatherStep) -> GatherStep:
+    """a then b -> one fabric pass.  a's diag sinks through b's gather."""
+    plan = fuse_plans(a.plan, b.plan)
+    diag = None
+    if a.diag is not None or b.diag is not None:
+        d1 = a.diag if a.diag is not None else np.ones(a.plan.n_out)
+        sunk = np.where(b.plan.gather_idx == PAD, 1.0,
+                        d1[np.clip(b.plan.gather_idx, 0, None)])
+        diag = sunk * (b.diag if b.diag is not None else 1.0)
+    return GatherStep(f"{a.name}+{b.name}", plan, diag)
+
+
+def _peephole(steps: List[Step]) -> List[Step]:
+    out: List[Step] = []
+    for s in steps:
+        if out and isinstance(s, GatherStep) and isinstance(out[-1],
+                                                            GatherStep):
+            out[-1] = _compose_gathers(out[-1], s)
+        else:
+            out.append(s)
+    return out
+
+
+# --------------------------------------------------------------------------
+# Reference DSP helpers shared with the streaming runtime
+# --------------------------------------------------------------------------
+
+def biquad_apply(x: jax.Array, b, a, zi: Optional[jax.Array] = None):
+    """Second-order IIR (transposed direct-form II), last axis = time.
+
+    Matches ``scipy.signal.lfilter(b, a, x, zi=zi)`` semantics for 3-tap
+    numerator/denominator: returns ``(y, zf)`` where ``zf`` is the final
+    2-element filter state (leading axes batched).  On the DLA the 3-tap
+    feedforward half is an array FIR; the order-2 feedback recurrence runs
+    on the scalar path — here both live in one ``lax.scan``.
+    """
+    b = jnp.asarray(b, dtype=x.dtype)
+    a = jnp.asarray(a, dtype=x.dtype)
+    b = b / a[0]
+    a = a / a[0]
+    if zi is None:
+        zi = jnp.zeros((*x.shape[:-1], 2), dtype=x.dtype)
+    xs = jnp.moveaxis(x, -1, 0)
+
+    def step(z, xn):
+        yn = b[0] * xn + z[..., 0]
+        z0 = b[1] * xn - a[1] * yn + z[..., 1]
+        z1 = b[2] * xn - a[2] * yn
+        return jnp.stack([z0, z1], axis=-1), yn
+
+    zf, ys = jax.lax.scan(step, zi, xs)
+    return jnp.moveaxis(ys, 0, -1), zf
+
+
+def overlap_add(frames: jax.Array, hop: int,
+                length: Optional[int] = None) -> jax.Array:
+    """OLA of (..., F, frame) real frames at the given hop."""
+    n_frames, frame = frames.shape[-2], frames.shape[-1]
+    natural = (n_frames - 1) * hop + frame
+    idx = (np.arange(n_frames)[:, None] * hop
+           + np.arange(frame)[None, :]).ravel()
+    flat = frames.reshape(*frames.shape[:-2], n_frames * frame)
+    out = jnp.zeros((*frames.shape[:-2], natural), dtype=flat.dtype)
+    out = out.at[..., idx].add(flat)
+    if length is None or length == natural:
+        return out
+    if length < natural:
+        return out[..., :length]
+    pad = [(0, 0)] * (out.ndim - 1) + [(0, length - natural)]
+    return jnp.pad(out, pad)
+
+
+def hann_window(n: int) -> np.ndarray:
+    return (0.5 * (1.0 - np.cos(2.0 * np.pi * np.arange(n) / n))
+            ).astype(np.float64)
+
+
+def mel_filterbank_matrix(bins: int, sr: float, n_mels: int,
+                          fmin: float = 0.0,
+                          fmax: Optional[float] = None) -> np.ndarray:
+    """(n_mels, bins) triangular HTK-mel filterbank over a one-sided
+    spectrum with ``bins`` linear frequencies in [0, sr/2]."""
+    fmax = fmax or sr / 2.0
+
+    def hz2mel(f):
+        return 2595.0 * np.log10(1.0 + np.asarray(f) / 700.0)
+
+    def mel2hz(m):
+        return 700.0 * (10.0 ** (np.asarray(m) / 2595.0) - 1.0)
+
+    freqs = np.linspace(0.0, sr / 2.0, bins)
+    edges = mel2hz(np.linspace(hz2mel(fmin), hz2mel(fmax), n_mels + 2))
+    fb = np.zeros((n_mels, bins))
+    for m in range(n_mels):
+        lo, mid, hi = edges[m], edges[m + 1], edges[m + 2]
+        up = (freqs - lo) / max(mid - lo, 1e-9)
+        down = (hi - freqs) / max(hi - mid, 1e-9)
+        fb[m] = np.clip(np.minimum(up, down), 0.0, None)
+    return fb.astype(np.float32)
+
+
+# --------------------------------------------------------------------------
+# Small plan builders
+# --------------------------------------------------------------------------
+
+def _frame_plan(length: int, frame: int, hop: int, width: int) -> ShufflePlan:
+    n_frames = 1 + (length - frame) // hop
+    idx = (np.arange(n_frames)[:, None] * hop
+           + np.arange(frame)[None, :]).astype(np.int32)
+    return ShufflePlan(idx.ravel(), np.zeros(idx.size, np.int64), width)
+
+
+def _interleave_plan(n: int, width: int) -> ShufflePlan:
+    """Real length-n -> interleaved complex [x0, 0, x1, 0, ...]: the zero
+    imaginary parts are DPU pad constants."""
+    gi = np.full(2 * n, PAD, np.int32)
+    gi[0::2] = np.arange(n)
+    return ShufflePlan(gi, np.zeros(2 * n, np.int64), width)
+
+
+def _deinterleave_plan(n: int, width: int) -> ShufflePlan:
+    """Interleaved complex -> the n real parts."""
+    gi = (2 * np.arange(n)).astype(np.int32)
+    return ShufflePlan(gi, np.zeros(n, np.int64), width)
+
+
+def _fft_steps(name: str, n: int, frames: int, fused: bool, width: int,
+               pre_diag: Optional[np.ndarray] = None) -> List[Step]:
+    """Batched radix-2 FFT over ``frames`` interleaved length-2n rows
+    (flat last axis of size frames*2n).  ``pre_diag`` is an elementwise
+    scale applied to the *input* (sunk through the first gather)."""
+    plan = _sm.make_fft_plan(n, fuse_adjacent=fused, width=width)
+    steps: List[Step] = []
+
+    def _gather(tag, p, diag=None):
+        steps.append(GatherStep(f"{name}.{tag}", tile_plan(p, frames, 2 * n),
+                                diag))
+
+    first = True
+
+    def _sink(p: ShufflePlan) -> Optional[np.ndarray]:
+        nonlocal first
+        if not first or pre_diag is None:
+            return None
+        first = False
+        tiled = tile_plan(p, frames, 2 * n)
+        return np.where(tiled.gather_idx == PAD, 1.0,
+                        pre_diag[np.clip(tiled.gather_idx, 0, None)])
+
+    if not plan.fused:
+        _gather("bitrev", plan.bitrev, _sink(plan.bitrev))
+    for i, st in enumerate(plan.stages):
+        _gather(f"s{i}.gather", st.gather, _sink(st.gather))
+        steps.append(EinsumStep(
+            f"{name}.s{i}.butterfly", "...fjbi,joi->...fjbo", st.twiddle,
+            reshape_in=(frames, st.half, st.nb, 4), out_rank=4,
+            rows=frames * st.half * st.nb, cin=4, cout=4))
+        if st.scatter.n_out:
+            _gather(f"s{i}.scatter", st.scatter)
+    return steps
+
+
+def _conj_pattern(n: int, frames: int) -> np.ndarray:
+    """Elementwise sign flipping the imaginary lanes of interleaved data."""
+    return np.tile(np.array([1.0, -1.0]), frames * n)
+
+
+# --------------------------------------------------------------------------
+# Stages and the graph builder
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class Stage:
+    name: str
+    kind: str
+    inputs: Tuple[str, ...]
+    params: Dict
+
+    @property
+    def frame_context(self) -> int:
+        """Frames of temporal context this stage needs on each side (0 for
+        pointwise stages; user-declared for DNN hooks with receptive field
+        across frames).  The streaming runtime uses this for exactness."""
+        return int(self.params.get("frame_context", 0))
+
+
+@dataclasses.dataclass
+class CompiledStage:
+    name: str
+    inputs: Tuple[str, ...]
+    combine: Optional[Callable]
+    steps: List[Step]
+    out_type: SigType
+    extra_layers: Tuple = ()      # perf_model.ConvLayer descriptors (dnn)
+
+
+class SignalGraph:
+    """Builder for a DAG of DSP stages.  ``"input"`` names the graph input;
+    every ``add_*`` method returns the stage name for chaining."""
+
+    INPUT = "input"
+
+    def __init__(self, name: str = "signal_graph"):
+        self.name = name
+        self.stages: Dict[str, Stage] = {}
+        self._order: List[str] = []
+        self._output: Optional[str] = None
+
+    # -- construction -------------------------------------------------------
+    def add(self, kind: str, name: str, inputs, **params) -> str:
+        if isinstance(inputs, str):
+            inputs = (inputs,)
+        if name in self.stages or name == self.INPUT:
+            raise ValueError(f"duplicate stage name {name!r}")
+        for i in inputs:
+            if i != self.INPUT and i not in self.stages:
+                raise ValueError(f"unknown input {i!r} for stage {name!r}")
+        self.stages[name] = Stage(name, kind, tuple(inputs), dict(params))
+        self._order.append(name)
+        return name
+
+    def stft(self, name, inp=INPUT, frame=256, hop=128, window=True):
+        return self.add("stft", name, inp, frame=frame, hop=hop,
+                        window=window)
+
+    def istft(self, name, inp, hop=128, length=None):
+        return self.add("istft", name, inp, hop=hop, length=length)
+
+    def fft(self, name, inp):
+        return self.add("fft", name, inp)
+
+    def ifft(self, name, inp):
+        return self.add("ifft", name, inp)
+
+    def fir(self, name, inp, taps, phases=1):
+        return self.add("fir", name, inp,
+                        taps=np.asarray(taps, np.float64), phases=phases)
+
+    def iir_biquad(self, name, inp, b, a):
+        b = np.asarray(b, np.float64)
+        a = np.asarray(a, np.float64)
+        if b.shape != (3,) or a.shape != (3,):
+            raise ValueError("biquad needs 3-tap b and a")
+        return self.add("iir_biquad", name, inp, b=b / a[0], a=a / a[0])
+
+    def dct(self, name, inp):
+        return self.add("dct", name, inp)
+
+    def dwt(self, name, inp, wavelet="haar"):
+        return self.add("dwt", name, inp, wavelet=wavelet)
+
+    def magnitude(self, name, inp, onesided=False):
+        return self.add("magnitude", name, inp, onesided=onesided)
+
+    def mel_filterbank(self, name, inp, sr, n_mels):
+        return self.add("mel_filterbank", name, inp, sr=sr, n_mels=n_mels)
+
+    def mul(self, name, a, b):
+        return self.add("mul", name, (a, b))
+
+    def dnn(self, name, inp, fn, frame_context=0, layers=()):
+        """Model hook: ``fn(params, x)`` with ``x`` the input stage's value.
+        ``frame_context`` declares the across-frame receptive field (for
+        streaming); ``layers`` optionally lists perf_model.ConvLayer
+        descriptors so the cycle report covers the DNN too."""
+        return self.add("dnn", name, inp, fn=fn,
+                        frame_context=frame_context, layers=tuple(layers))
+
+    def overlap_add(self, name, inp, hop=128, length=None):
+        return self.add("overlap_add", name, inp, hop=hop, length=length)
+
+    def output(self, name: str) -> None:
+        if name not in self.stages:
+            raise ValueError(f"unknown output stage {name!r}")
+        self._output = name
+
+    # -- compilation --------------------------------------------------------
+    def compile(self, length: int, fuse: bool = True,
+                width: int = 16) -> "CompiledSignalGraph":
+        """Shape-specialize and lower the graph for input length ``length``.
+
+        ``fuse=True`` runs the gather-composition pass (fewer fabric
+        passes, same math); ``fuse=False`` is the op-by-op lowering used as
+        the unfused baseline in benchmarks/tests.
+        """
+        out_name = self._output or (self._order[-1] if self._order else None)
+        if out_name is None:
+            raise ValueError("empty graph")
+        types: Dict[str, SigType] = {
+            self.INPUT: SigType((length,), False, "samples")}
+        compiled: List[CompiledStage] = []
+
+        for sname in self._order:
+            st = self.stages[sname]
+            in_types = [types[i] for i in st.inputs]
+            combine, steps, out_t = _lower_stage(st, in_types, fuse, width)
+            if fuse:
+                steps = _peephole(steps)
+            types[sname] = out_t
+            compiled.append(CompiledStage(
+                sname, st.inputs, combine, steps, out_t,
+                extra_layers=tuple(st.params.get("layers", ()))))
+
+        return CompiledSignalGraph(self.name, compiled, out_name,
+                                   types[self.INPUT], types[out_name],
+                                   fuse=fuse)
+
+
+# --------------------------------------------------------------------------
+# Per-kind lowering
+# --------------------------------------------------------------------------
+
+def _flat_len(t: SigType) -> int:
+    n = 1
+    for d in t.suffix:
+        n *= d
+    return n
+
+
+def _rows_last(t: SigType) -> Tuple[int, int]:
+    rows = 1
+    for d in t.suffix[:-1]:
+        rows *= d
+    return rows, t.suffix[-1]
+
+
+def _require_real(st: Stage, t: SigType) -> None:
+    if t.is_complex:
+        raise ValueError(f"stage {st.name!r} ({st.kind}) needs real input")
+
+
+def _lower_stage(st: Stage, in_types: List[SigType], fuse: bool,
+                 width: int):
+    """Returns (combine, steps, out_type)."""
+    kind, p = st.kind, st.params
+    t = in_types[0]
+
+    if kind == "mul":
+        def combine(a, b):
+            return a * b.astype(a.dtype) if (jnp.iscomplexobj(a)
+                                             and not jnp.iscomplexobj(b)) \
+                else a * b
+        big = in_types[0] if in_types[0].elems >= in_types[1].elems \
+            else in_types[1]
+        return combine, [], big
+
+    if kind == "stft":
+        _require_real(st, t)
+        frame, hop = p["frame"], p["hop"]
+        length = t.suffix[-1]
+        if length < frame:
+            raise ValueError(
+                f"stft stage {st.name!r}: input length {length} is shorter "
+                f"than the frame size {frame}")
+        n_frames = 1 + (length - frame) // hop
+        steps: List[Step] = []
+        win = np.tile(hann_window(frame), n_frames) if p["window"] else None
+        steps.append(GatherStep(f"{st.name}.frame",
+                                _frame_plan(length, frame, hop, width), win))
+        steps.append(GatherStep(
+            f"{st.name}.interleave",
+            tile_plan(_interleave_plan(frame, width), n_frames, frame)))
+        steps.extend(_fft_steps(st.name, frame, n_frames, fuse, width))
+
+        def to_complex(x):
+            z = _sm.interleaved_to_complex(x)
+            return z.reshape(*z.shape[:-1], n_frames, frame)
+        steps.append(LambdaStep(f"{st.name}.pack", to_complex))
+        return None, steps, SigType((n_frames, frame), True, "frames",
+                                    frame=frame, hop=hop)
+
+    if kind in ("istft", "istft_frames"):
+        if t.domain != "frames" or not t.is_complex:
+            raise ValueError("istft needs complex frames input")
+        n_frames, frame = t.suffix
+        hop = p["hop"]
+        steps = [LambdaStep(
+            f"{st.name}.unpack",
+            lambda x: _sm.complex_to_interleaved(
+                x).reshape(*x.shape[:-2], n_frames * 2 * frame))]
+        steps.extend(_fft_steps(st.name, frame, n_frames, fuse, width,
+                                pre_diag=_conj_pattern(frame, n_frames)))
+        steps.append(GatherStep(
+            f"{st.name}.deinterleave",
+            tile_plan(_deinterleave_plan(frame, width), n_frames, 2 * frame),
+            np.full(n_frames * frame, 1.0 / frame)))
+        if kind == "istft_frames":
+            steps.append(LambdaStep(
+                f"{st.name}.frames",
+                lambda x: x.reshape(*x.shape[:-1], n_frames, frame)))
+            return None, steps, SigType((n_frames, frame), False, "frames",
+                                        frame=frame, hop=hop)
+        length = p.get("length")
+
+        def ola(x):
+            fr = x.reshape(*x.shape[:-1], n_frames, frame)
+            return overlap_add(fr, hop, length)
+        steps.append(LambdaStep(f"{st.name}.ola", ola))
+        out_len = length or (n_frames - 1) * hop + frame
+        return None, steps, SigType((out_len,), False, "samples")
+
+    if kind == "overlap_add":
+        _require_real(st, t)
+        if t.domain != "frames":
+            raise ValueError("overlap_add needs frames input")
+        n_frames, frame = t.suffix
+        hop, length = p["hop"], p.get("length")
+
+        def ola2(x):
+            return overlap_add(x, hop, length)
+        out_len = length or (n_frames - 1) * hop + frame
+        return None, [LambdaStep(f"{st.name}.ola", ola2)], \
+            SigType((out_len,), False, "samples")
+
+    if kind == "fft":
+        n = t.suffix[-1]
+        rows, _ = _rows_last(t)
+        steps = []
+        if t.is_complex:
+            steps.append(LambdaStep(
+                f"{st.name}.unpack",
+                lambda x: _sm.complex_to_interleaved(x).reshape(
+                    *x.shape[:-len(t.suffix)], rows * 2 * n)))
+        else:
+            steps.append(GatherStep(
+                f"{st.name}.interleave",
+                tile_plan(_interleave_plan(n, width), rows, n)))
+        steps.extend(_fft_steps(st.name, n, rows, fuse, width))
+
+        def pack(x):
+            z = _sm.interleaved_to_complex(x)
+            return z.reshape(*z.shape[:-1], *t.suffix[:-1], n)
+        steps.append(LambdaStep(f"{st.name}.pack", pack))
+        return None, steps, dataclasses.replace(t, is_complex=True)
+
+    if kind == "ifft":
+        if not t.is_complex:
+            raise ValueError("ifft needs complex input")
+        n = t.suffix[-1]
+        rows, _ = _rows_last(t)
+        steps = [LambdaStep(
+            f"{st.name}.unpack",
+            lambda x: _sm.complex_to_interleaved(x).reshape(
+                *x.shape[:-len(t.suffix)], rows * 2 * n))]
+        steps.extend(_fft_steps(st.name, n, rows, fuse, width,
+                                pre_diag=_conj_pattern(n, rows)))
+
+        def pack_inv(x):
+            z = jnp.conj(_sm.interleaved_to_complex(x)) / n
+            return z.reshape(*z.shape[:-1], *t.suffix[:-1], n)
+        steps.append(LambdaStep(f"{st.name}.pack", pack_inv))
+        return None, steps, t
+
+    if kind == "fir":
+        _require_real(st, t)
+        h = p["taps"]
+        taps, phases = h.shape[0], p["phases"]
+        n = t.suffix[-1]
+        if phases > 1:
+            plan = _sm.make_fir_phase_plan(n, taps, phases, width)
+            W = _sm.fir_phase_weights(h, phases)
+            steps = [
+                GatherStep(f"{st.name}.window", plan.window),
+                EinsumStep(f"{st.name}.taps", "...ml,lp->...mp", W,
+                           reshape_in=(n // phases, plan.win_len), out_rank=2,
+                           rows=n // phases, cin=plan.win_len, cout=phases)]
+        else:
+            plan = _sm.make_fir_plan(n, taps, width)
+            steps = [
+                GatherStep(f"{st.name}.im2col", plan.im2col),
+                EinsumStep(f"{st.name}.taps", "...nt,t->...n",
+                           h.astype(np.float32), reshape_in=(n, taps),
+                           out_rank=1, rows=n, cin=taps, cout=1)]
+        return None, steps, t
+
+    if kind == "iir_biquad":
+        _require_real(st, t)
+        b, a = p["b"], p["a"]
+
+        def iir(x):
+            y, _ = biquad_apply(x, b, a)
+            return y
+        return None, [LambdaStep(f"{st.name}.scan", iir)], t
+
+    if kind == "dct":
+        _require_real(st, t)
+        rows, n = _rows_last(t)
+        C = _sm.dct_matrix(n)
+        return None, [EinsumStep(f"{st.name}.dct", "...rn,kn->...rk", C,
+                                 reshape_in=(rows, n), out_rank=2,
+                                 rows=rows, cin=n, cout=n)], t
+
+    if kind == "dwt":
+        _require_real(st, t)
+        rows, n = _rows_last(t)
+        plan = _sm.make_dwt_plan(n, p["wavelet"], width)
+        fb = _sm.dwt_filters(p["wavelet"])
+        steps = [
+            GatherStep(f"{st.name}.window", tile_plan(plan.window, rows, n)),
+            EinsumStep(f"{st.name}.bank", "...wl,lf->...wf", fb,
+                       reshape_in=(rows * n // 2, plan.filt_len), out_rank=2,
+                       rows=rows * n // 2, cin=plan.filt_len, cout=2)]
+        out_suffix = (*t.suffix[:-1], n // 2, 2)
+
+        def shape_dwt(x):
+            return x.reshape(*x.shape[:-1], *out_suffix)
+        steps.append(LambdaStep(f"{st.name}.pack", shape_dwt))
+        return None, steps, dataclasses.replace(t, suffix=out_suffix)
+
+    if kind == "magnitude":
+        if not t.is_complex:
+            raise ValueError("magnitude needs complex input")
+        onesided = p["onesided"]
+        n = t.suffix[-1]
+        keep = n // 2 + 1 if onesided else n
+
+        def mag(x):
+            y = jnp.abs(x)
+            return y[..., :keep] if onesided else y
+        out_suffix = (*t.suffix[:-1], keep)
+        return None, [LambdaStep(f"{st.name}.abs", mag)], \
+            dataclasses.replace(t, suffix=out_suffix, is_complex=False)
+
+    if kind == "mel_filterbank":
+        _require_real(st, t)
+        rows, bins = _rows_last(t)
+        M = mel_filterbank_matrix(bins, p["sr"], p["n_mels"])
+        out_suffix = (*t.suffix[:-1], p["n_mels"])
+        steps = [
+            LambdaStep(f"{st.name}.flatten",
+                       lambda x: x.reshape(*x.shape[:-len(t.suffix)], -1)),
+            EinsumStep(f"{st.name}.mel", "...rb,mb->...rm", M,
+                       reshape_in=(rows, bins), out_rank=2,
+                       rows=rows, cin=bins, cout=p["n_mels"]),
+            LambdaStep(f"{st.name}.pack",
+                       lambda x: x.reshape(*x.shape[:-1], *out_suffix))]
+        return None, steps, dataclasses.replace(t, suffix=out_suffix)
+
+    if kind == "dnn":
+        fn = p["fn"]
+        return None, [LambdaStep(f"{st.name}.model", fn,
+                                 takes_params=True)], t
+
+    raise ValueError(f"unknown stage kind {kind!r}")
+
+
+# --------------------------------------------------------------------------
+# The compiled graph
+# --------------------------------------------------------------------------
+
+class CompiledSignalGraph:
+    """Shape-specialized, lowered, (optionally) fused signal graph.
+
+    Calling it runs the whole pipeline as one jittable function of
+    ``(x, params)``; all plans and operands are static, so under ``jax.jit``
+    every gather folds into the XLA program exactly like the fabric folds
+    into the array's stream-in path.
+    """
+
+    def __init__(self, name: str, stages: List[CompiledStage],
+                 output: str, in_type: SigType, out_type: SigType,
+                 fuse: bool):
+        self.name = name
+        self.stages = stages
+        self.output = output
+        self.in_type = in_type
+        self.out_type = out_type
+        self.fused = fuse
+
+    # -- execution ----------------------------------------------------------
+    def __call__(self, x: jax.Array, params=None) -> jax.Array:
+        env = {SignalGraph.INPUT: x}
+        for st in self.stages:
+            vals = [env[i] for i in st.inputs]
+            h = st.combine(*vals) if st.combine is not None else vals[0]
+            sp = (params or {}).get(st.name) if isinstance(params, dict) \
+                else params
+            env[st.name] = _run_steps(st.steps, h, sp)
+        return env[self.output]
+
+    def jit(self):
+        return jax.jit(self.__call__)
+
+    def sharded_jit(self, mesh, batch_axis: str = "data"):
+        """Batch-sharded entry point: input (and output) sharded along the
+        leading batch axis of ``mesh``; params replicated."""
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        xs = NamedSharding(mesh, P(batch_axis))
+        return jax.jit(self.__call__, in_shardings=(xs, None),
+                       out_shardings=xs)
+
+    # -- accounting (consumed by perf_model.signal_graph_report) ------------
+    def gather_steps(self) -> List[GatherStep]:
+        return [s for st in self.stages for s in st.steps
+                if isinstance(s, GatherStep)]
+
+    def fabric_pass_count(self) -> int:
+        return len(self.gather_steps())
+
+    def shuffle_passes(self):
+        from ..core.perf_model import ShufflePass
+        return [ShufflePass(s.name, s.plan.n_out, s.plan.width)
+                for s in self.gather_steps()]
+
+    def conv_layers(self):
+        from ..core.perf_model import ConvLayer
+        out = []
+        for st in self.stages:
+            for s in st.steps:
+                if isinstance(s, EinsumStep):
+                    out.append(ConvLayer(s.name, h=s.rows, w=1, k=1,
+                                         cin=s.cin, cout=s.cout))
+            out.extend(st.extra_layers)
+        return out

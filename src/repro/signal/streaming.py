@@ -1,0 +1,323 @@
+"""Streaming execution of :class:`~repro.signal.graph.SignalGraph`.
+
+Real serving traffic arrives as chunks, not whole utterances.  A
+:class:`StreamingRunner` executes a compiled pipeline graph over chunked
+multi-channel input while carrying exactly the state the DSP math needs:
+
+  * FIR stages carry the last ``taps-1`` input samples (ring-buffer frame
+    carry), so chunk-boundary windows equal the offline im2col windows;
+  * IIR biquad stages carry their order-2 state vector across chunks (the
+    ``lax.scan`` simply resumes);
+  * the STFT->...->iSTFT core keeps a sample ring buffer for hop
+    continuity plus an overlap-add tail accumulator, and re-reads
+    ``frame_context`` frames of lookback so DNN stages with across-frame
+    receptive fields see the same context they would offline.
+
+The contract — enforced by tests/test_signal_streaming.py — is that the
+concatenated streamed output is *bit-identical* to running the same graph
+offline on the whole signal (for hop >= frame/2, where overlap-add sums
+two terms per sample and float addition is commutative).
+
+A sample ``s`` is emitted once no future frame can touch it, so the
+runner's latency is ``frame - hop`` samples plus ``frame_context * hop``
+for DNN lookahead; everything else is pipelined per chunk.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .graph import (CompiledSignalGraph, SignalGraph, biquad_apply,
+                    overlap_add)
+
+__all__ = ["StreamingRunner"]
+
+_SAMPLE_KINDS = ("fir", "iir_biquad")
+_FRAMEWISE_KINDS = ("dnn", "magnitude", "mel_filterbank", "mul", "dct",
+                    "fft", "ifft")
+
+
+# --------------------------------------------------------------------------
+# Stateful sample-domain stages
+# --------------------------------------------------------------------------
+
+class _FIRState:
+    def __init__(self, stage):
+        if stage.params.get("phases", 1) != 1:
+            raise ValueError("streaming supports fir with phases=1 only")
+        self.h = np.asarray(stage.params["taps"], np.float32)
+        self.carry = None           # (..., taps-1) previous input samples
+
+    def __call__(self, x: jax.Array) -> jax.Array:
+        taps = self.h.shape[0]
+        if self.carry is None:
+            self.carry = jnp.zeros((*x.shape[:-1], taps - 1), dtype=x.dtype)
+        block = jnp.concatenate([self.carry, x], axis=-1) if taps > 1 else x
+        n = x.shape[-1]
+        # window i covers block[taps-1+i-t] for t in 0..taps-1 — identical
+        # contraction to the offline im2col + einsum lowering.
+        idx = ((taps - 1) + np.arange(n)[:, None]
+               - np.arange(taps)[None, :])
+        cols = jnp.take(block, jnp.asarray(idx), axis=-1)
+        y = jnp.einsum("...nt,t->...n", cols,
+                       jnp.asarray(self.h, dtype=cols.dtype))
+        if taps > 1:
+            self.carry = block[..., -(taps - 1):]
+        return y
+
+
+class _IIRState:
+    def __init__(self, stage):
+        self.b = stage.params["b"]
+        self.a = stage.params["a"]
+        self.zi = None
+
+    def __call__(self, x: jax.Array) -> jax.Array:
+        if self.zi is None:
+            self.zi = jnp.zeros((*x.shape[:-1], 2), dtype=x.dtype)
+        y, self.zi = biquad_apply(x, self.b, self.a, self.zi)
+        return y
+
+
+def _make_sample_state(stage):
+    return _FIRState(stage) if stage.kind == "fir" else _IIRState(stage)
+
+
+# --------------------------------------------------------------------------
+# Runner
+# --------------------------------------------------------------------------
+
+class StreamingRunner:
+    """Push chunks with :meth:`process`, finish with :meth:`flush`.
+
+    ``graph`` must be a streamable pipeline: a linear chain of sample-domain
+    stages (fir / iir_biquad), optionally wrapped around one
+    stft -> framewise-stages -> istft core (any DAG of framewise stages in
+    between, e.g. the Fig-9 mask DNN with fan-out).  ``params`` is the same
+    per-stage dict the compiled graph takes.  Chunks may have leading batch
+    / channel axes; the last axis is time and chunk lengths may vary.
+    """
+
+    def __init__(self, graph: SignalGraph, params=None,
+                 block_frames: int = 8, fuse: bool = True,
+                 jit_blocks: bool = True):
+        self.graph = graph
+        self.params = params
+        self.block_frames = int(block_frames)
+        self.fuse = fuse
+        self.jit_blocks = jit_blocks
+        self._split(graph)
+        self._buf = None            # post-pre-chain samples, absolute index
+        self._buf_start = 0
+        self._batch_shape = ()      # leading axes seen by process()
+        self._total = 0             # samples received (post pre-chain)
+        self._f_next = 0            # next frame to overlap-add
+        self._tail = None           # OLA accumulator tail (frame - hop)
+        self._emitted = 0
+        self._core_cache: Dict[int, CompiledSignalGraph] = {}
+        self._core_jit_cache: Dict[int, object] = {}
+
+    # -- graph analysis -----------------------------------------------------
+    def _split(self, graph: SignalGraph) -> None:
+        stages = graph.stages
+        order = list(stages)
+        out = graph._output or (order[-1] if order else None)
+        framers = [s for s in order if stages[s].kind == "stft"]
+        deframers = [s for s in order
+                     if stages[s].kind in ("istft", "overlap_add")]
+        if len(framers) > 1 or len(deframers) > 1:
+            raise ValueError("streaming supports at most one stft/istft")
+        if bool(framers) != bool(deframers):
+            raise ValueError("stft and istft must appear together")
+
+        consumers: Dict[str, List[str]] = {}
+        for s in order:
+            for i in stages[s].inputs:
+                consumers.setdefault(i, []).append(s)
+
+        self.pre: List = []
+        self.post: List = []
+        self.core_names: List[str] = []
+        self.framer = self.deframer = None
+        self.frame = self.hop = 0
+        self.context = 0
+
+        if not framers:
+            # pure sample-domain chain input -> ... -> output
+            cur, seen = SignalGraph.INPUT, []
+            while consumers.get(cur):
+                nxts = consumers[cur]
+                if len(nxts) != 1:
+                    raise ValueError("streaming needs a linear sample chain")
+                cur = nxts[0]
+                if stages[cur].kind not in _SAMPLE_KINDS:
+                    raise ValueError(
+                        f"stage {cur!r} ({stages[cur].kind}) is not "
+                        "streamable in a sample-domain chain")
+                seen.append(cur)
+            if cur != out:
+                raise ValueError("output is not the end of the chain")
+            self.pre = [_make_sample_state(stages[s]) for s in seen]
+            return
+
+        self.framer, self.deframer = framers[0], deframers[0]
+        fst, dst = stages[self.framer], stages[self.deframer]
+        self.frame = int(fst.params["frame"])
+        self.hop = int(fst.params["hop"])
+        if int(dst.params["hop"]) != self.hop:
+            raise ValueError("streaming needs stft hop == istft hop")
+        self.out_length = dst.params.get("length")
+
+        # pre-chain: walk back from the framer to the input.
+        chain = []
+        cur = fst.inputs[0]
+        while cur != SignalGraph.INPUT:
+            st = stages[cur]
+            if st.kind not in _SAMPLE_KINDS or len(st.inputs) != 1:
+                raise ValueError(f"pre-stft stage {cur!r} not streamable")
+            chain.append(cur)
+            cur = st.inputs[0]
+        self.pre = [_make_sample_state(stages[s]) for s in reversed(chain)]
+
+        # post-chain: walk forward from the deframer to the output.
+        post = []
+        cur = self.deframer
+        while cur != out:
+            nxts = consumers.get(cur, [])
+            if len(nxts) != 1:
+                raise ValueError("post-istft stages must form a chain")
+            cur = nxts[0]
+            st = stages[cur]
+            if st.kind not in _SAMPLE_KINDS:
+                raise ValueError(f"post-istft stage {cur!r} not streamable")
+            post.append(cur)
+        self.post = [_make_sample_state(stages[s]) for s in post]
+
+        # interior: everything else must be framewise.
+        skip = set(chain) | set(post) | {self.framer, self.deframer}
+        interior = [s for s in order if s not in skip]
+        for s in interior:
+            st = stages[s]
+            if st.kind not in _FRAMEWISE_KINDS:
+                raise ValueError(
+                    f"stage {s!r} ({st.kind}) is not framewise-streamable")
+            for i in st.inputs:
+                if i == SignalGraph.INPUT or i in chain or i in post:
+                    raise ValueError(
+                        f"framewise stage {s!r} reads outside the core")
+            self.context += st.frame_context
+        self.core_names = [s for s in order
+                           if s == self.framer or s == self.deframer
+                           or s in interior]
+
+    # -- core block graph ---------------------------------------------------
+    def _core_graph(self, n_frames: int) -> CompiledSignalGraph:
+        if n_frames not in self._core_cache:
+            g = SignalGraph(f"{self.graph.name}_core")
+            for s in self.core_names:
+                st = self.graph.stages[s]
+                if s == self.framer:
+                    g.add("stft", s, SignalGraph.INPUT, **st.params)
+                elif s == self.deframer:
+                    g.add("istft_frames", s, st.inputs[0], hop=self.hop)
+                else:
+                    g.add(st.kind, s, st.inputs, **st.params)
+            g.output(self.deframer)
+            block_len = (n_frames - 1) * self.hop + self.frame
+            self._core_cache[n_frames] = g.compile(block_len, fuse=self.fuse)
+        return self._core_cache[n_frames]
+
+    def _run_core(self, block: jax.Array, n_frames: int) -> jax.Array:
+        compiled = self._core_graph(n_frames)
+        if not self.jit_blocks:
+            return compiled(block, self.params)
+        if n_frames not in self._core_jit_cache:
+            self._core_jit_cache[n_frames] = compiled.jit()
+        return self._core_jit_cache[n_frames](block, self.params)
+
+    # -- streaming ----------------------------------------------------------
+    def process(self, chunk: jax.Array) -> jax.Array:
+        """Feed one chunk; returns the samples that became final."""
+        x = jnp.asarray(chunk)
+        for st in self.pre:
+            x = st(x)
+        if self.framer is None:
+            self._batch_shape = x.shape[:-1]
+            return x                           # pure sample chain: no latency
+
+        self._buf = x if self._buf is None else jnp.concatenate(
+            [self._buf, x], axis=-1)
+        self._total += x.shape[-1]
+        return self._drain(final=False)
+
+    def flush(self) -> jax.Array:
+        """Process remaining frames and emit the overlap-add tail."""
+        if self.framer is None:
+            return jnp.zeros((*self._batch_shape, 0))
+        return self._drain(final=True)
+
+    def _avail_frames(self) -> int:
+        if self._total < self.frame:
+            return 0
+        return 1 + (self._total - self.frame) // self.hop
+
+    def _drain(self, final: bool) -> jax.Array:
+        frame, hop, C = self.frame, self.hop, self.context
+        f_avail = self._avail_frames()
+        f_ready = f_avail if final else max(self._f_next, f_avail - C)
+        pieces: List[jax.Array] = []
+        while self._f_next < f_ready:
+            count = min(self.block_frames, f_ready - self._f_next)
+            f_lo, f_hi = self._f_next, self._f_next + count
+            g0 = max(0, f_lo - C)
+            g1 = min(f_avail - 1, f_hi - 1 + C)
+            lo = g0 * hop - self._buf_start
+            hi = g1 * hop + frame - self._buf_start
+            block = self._buf[..., lo:hi]
+            frames = self._run_core(block, g1 - g0 + 1)
+            sel = frames[..., f_lo - g0:f_hi - g0, :]
+            acc = overlap_add(sel, hop)          # count*hop + frame-hop
+            if self._tail is None:
+                self._tail = jnp.zeros((*acc.shape[:-1], frame - hop),
+                                       dtype=acc.dtype)
+            acc = acc.at[..., :frame - hop].add(self._tail)
+            last = final and f_hi == f_avail
+            if last:
+                pieces.append(acc)               # includes the natural tail
+            else:
+                pieces.append(acc[..., :count * hop])
+                self._tail = acc[..., count * hop:]
+            self._f_next = f_hi
+            keep = max(0, self._f_next - C) * hop
+            if keep > self._buf_start:
+                self._buf = self._buf[..., keep - self._buf_start:]
+                self._buf_start = keep
+        if final and not pieces and self._tail is not None:
+            pieces.append(self._tail)            # everything already OLA'd
+            self._tail = None
+
+        if not pieces:
+            shape = (0,) if self._buf is None else \
+                (*self._buf.shape[:-1], 0)
+            return jnp.zeros(shape)
+        out = pieces[0] if len(pieces) == 1 else jnp.concatenate(
+            pieces, axis=-1)
+        if self.out_length is not None:
+            # istft length cap applies to the stream as a whole: every
+            # drain (not just the last) must stop at the target, and the
+            # final drain zero-pads if the natural output falls short.
+            allowed = self.out_length - self._emitted
+            if out.shape[-1] > allowed:
+                out = out[..., :max(0, allowed)]
+            elif final and out.shape[-1] < allowed:
+                pad = [(0, 0)] * (out.ndim - 1) + \
+                    [(0, allowed - out.shape[-1])]
+                out = jnp.pad(out, pad)
+        self._emitted += out.shape[-1]
+        for st in self.post:
+            out = st(out)
+        return out

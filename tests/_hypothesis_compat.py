@@ -1,0 +1,91 @@
+"""Hypothesis shim: use the real library when installed, otherwise fall
+back to deterministic seeded-random example sweeps.
+
+The property tests in this repo only use a small hypothesis subset
+(``@given``, ``@settings``, ``st.integers``, ``st.sampled_from``,
+``st.data()``).  The fallback draws ``max_examples`` pseudo-random
+examples per test from a seed derived from the test name, so runs are
+reproducible and the suite stays collectable on machines without
+hypothesis (the pinned ``test`` extra in pyproject.toml installs the real
+thing in CI).
+"""
+
+from __future__ import annotations
+
+import random
+import zlib
+
+try:
+    from hypothesis import given, settings, strategies as st  # noqa: F401
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+    class _Strategy:
+        def example(self, rng: random.Random):
+            raise NotImplementedError
+
+    class _Integers(_Strategy):
+        def __init__(self, lo, hi):
+            self.lo, self.hi = lo, hi
+
+        def example(self, rng):
+            return rng.randint(self.lo, self.hi)
+
+    class _SampledFrom(_Strategy):
+        def __init__(self, seq):
+            self.seq = list(seq)
+
+        def example(self, rng):
+            return rng.choice(self.seq)
+
+    class _DataStrategy(_Strategy):
+        pass
+
+    class _Data:
+        """Stand-in for hypothesis's interactive data object."""
+
+        def __init__(self, rng):
+            self._rng = rng
+
+        def draw(self, strategy, label=None):
+            return strategy.example(self._rng)
+
+    class _St:
+        @staticmethod
+        def integers(min_value, max_value):
+            return _Integers(min_value, max_value)
+
+        @staticmethod
+        def sampled_from(seq):
+            return _SampledFrom(seq)
+
+        @staticmethod
+        def data():
+            return _DataStrategy()
+
+    st = _St()
+
+    def given(*strategies):
+        def deco(fn):
+            def wrapper(*args, **kwargs):
+                n = getattr(wrapper, "_max_examples", 20)
+                rng = random.Random(zlib.crc32(fn.__name__.encode()))
+                for _ in range(n):
+                    drawn = [_Data(rng) if isinstance(s, _DataStrategy)
+                             else s.example(rng) for s in strategies]
+                    fn(*args, *drawn, **kwargs)
+            # deliberately NOT functools.wraps: pytest must see the
+            # wrapper's zero-strategy-arg signature, not the original's
+            # (otherwise the drawn parameters look like missing fixtures).
+            wrapper.__name__ = fn.__name__
+            wrapper.__doc__ = fn.__doc__
+            wrapper.__module__ = fn.__module__
+            return wrapper
+        return deco
+
+    def settings(max_examples: int = 20, **_ignored):
+        def deco(fn):
+            fn._max_examples = max_examples
+            return fn
+        return deco

@@ -2,7 +2,7 @@
 
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core.fabric import (PAD, ShufflePlan, apply_plan, apply_plan_np,
                                concat_plans, identity_plan,

@@ -2,7 +2,7 @@
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core import shuffle_ir as ir
 from repro.core.fabric import PAD, ShufflePlan, apply_plan_np, apply_plan_via_isa

@@ -1,0 +1,191 @@
+"""SigStream graph compiler: parity vs reference DSP, fusion accounting."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.perf_model import signal_graph_report
+from repro.signal import SignalGraph, biquad_apply, stft, istft
+
+FRAME, HOP = 256, 128
+
+
+def _fig9(length, mask_fn=None, ctx=0):
+    g = SignalGraph("fig9")
+    g.stft("spec", frame=FRAME, hop=HOP)
+    g.dnn("mask", "spec",
+          fn=mask_fn or (lambda p, z: jax.nn.sigmoid(jnp.abs(z) - 1.0)),
+          frame_context=ctx)
+    g.mul("enh", "spec", "mask")
+    g.istft("out", "enh", hop=HOP, length=length)
+    g.output("out")
+    return g
+
+
+def test_fft_stage_matches_numpy():
+    rng = np.random.default_rng(0)
+    for n in (16, 64, 256):
+        g = SignalGraph("f")
+        g.fft("F", "input")
+        c = g.compile(n)
+        x = rng.standard_normal(n).astype(np.float32)
+        np.testing.assert_allclose(np.asarray(c(jnp.asarray(x))),
+                                   np.fft.fft(x), rtol=1e-3, atol=1e-3)
+
+
+def test_ifft_stage_roundtrip():
+    rng = np.random.default_rng(1)
+    g = SignalGraph("rt")
+    g.fft("F", "input")
+    g.ifft("I", "F")
+    c = g.compile(128)
+    x = rng.standard_normal((3, 128)).astype(np.float32)
+    y = np.asarray(c(jnp.asarray(x)))
+    np.testing.assert_allclose(y.real, x, atol=1e-4)
+    np.testing.assert_allclose(y.imag, 0.0, atol=1e-4)
+
+
+def test_fir_stage_matches_scipy():
+    scipy_signal = pytest.importorskip("scipy.signal")
+    rng = np.random.default_rng(2)
+    x = rng.standard_normal(512).astype(np.float64)
+    h = rng.standard_normal(11)
+    g = SignalGraph("fir")
+    g.fir("f", "input", taps=h)
+    c = g.compile(512)
+    ref = scipy_signal.lfilter(h, [1.0], x)
+    np.testing.assert_allclose(np.asarray(c(jnp.asarray(x, jnp.float32))),
+                               ref, rtol=1e-4, atol=1e-4)
+
+
+def test_biquad_stage_matches_scipy_lfilter():
+    scipy_signal = pytest.importorskip("scipy.signal")
+    rng = np.random.default_rng(3)
+    x = rng.standard_normal((2, 300))
+    b, a = [0.2, 0.3, 0.2], [1.0, -0.5, 0.25]
+    g = SignalGraph("iir")
+    g.iir_biquad("q", "input", b=b, a=a)
+    c = g.compile(300)
+    ref = scipy_signal.lfilter(b, a, x, axis=-1)
+    np.testing.assert_allclose(
+        np.asarray(c(jnp.asarray(x, jnp.float32))), ref, atol=1e-4)
+
+
+def test_biquad_apply_state_continuation_matches_scipy():
+    scipy_signal = pytest.importorskip("scipy.signal")
+    rng = np.random.default_rng(4)
+    x = rng.standard_normal(200)
+    b, a = [0.1, 0.2, 0.1], [1.0, -0.3, 0.4]
+    y1, zf = biquad_apply(jnp.asarray(x[:90], jnp.float32), b, a)
+    y2, _ = biquad_apply(jnp.asarray(x[90:], jnp.float32), b, a, zf)
+    ref = scipy_signal.lfilter(b, a, x)
+    np.testing.assert_allclose(
+        np.concatenate([np.asarray(y1), np.asarray(y2)]), ref, atol=1e-5)
+
+
+def test_dct_dwt_mel_stages_match_references():
+    rng = np.random.default_rng(5)
+    from repro.core import signal_mapping as sm
+    from repro.signal import mel_filterbank_matrix
+
+    x = rng.standard_normal(64).astype(np.float32)
+    g = SignalGraph("dct")
+    g.dct("d", "input")
+    np.testing.assert_allclose(
+        np.asarray(g.compile(64)(jnp.asarray(x))),
+        np.asarray(sm.dct_via_array(jnp.asarray(x))), atol=1e-4)
+
+    g2 = SignalGraph("dwt")
+    g2.dwt("w", "input", wavelet="db2")
+    out = np.asarray(g2.compile(64)(jnp.asarray(x)))
+    plan = sm.make_dwt_plan(64, "db2")
+    lo, hi = sm.dwt_via_fabric(jnp.asarray(x), plan, "db2")
+    np.testing.assert_allclose(out[..., 0], np.asarray(lo), atol=1e-5)
+    np.testing.assert_allclose(out[..., 1], np.asarray(hi), atol=1e-5)
+
+    # mel: stft -> onesided magnitude -> filterbank == manual matmul
+    T = 1024
+    g3 = SignalGraph("mel")
+    g3.stft("spec", frame=FRAME, hop=HOP)
+    g3.magnitude("mag", "spec", onesided=True)
+    g3.mel_filterbank("mel", "mag", sr=16_000, n_mels=20)
+    g3.output("mel")
+    xs = rng.standard_normal(T).astype(np.float32)
+    got = np.asarray(g3.compile(T)(jnp.asarray(xs)))
+    mag = np.abs(np.asarray(stft(jnp.asarray(xs), FRAME, HOP)))[
+        ..., :FRAME // 2 + 1]
+    M = mel_filterbank_matrix(FRAME // 2 + 1, 16_000, 20)
+    np.testing.assert_allclose(got, mag @ M.T, rtol=1e-3, atol=1e-3)
+
+
+def test_fig9_roundtrip_matches_direct_path():
+    """Graph execution == composing the existing stft/istft ops by hand."""
+    T = 2048
+    rng = np.random.default_rng(6)
+    x = jnp.asarray(rng.standard_normal(T), jnp.float32)
+
+    def mask_fn(p, z):
+        return jax.nn.sigmoid(jnp.abs(z) - 1.0)
+
+    got = np.asarray(_fig9(T, mask_fn).compile(T, fuse=True)(x))
+    spec = stft(x, FRAME, HOP)
+    ref = istft(spec * mask_fn(None, spec).astype(spec.dtype), HOP, length=T)
+    np.testing.assert_array_equal(got, np.asarray(ref))
+
+
+def test_fused_equals_unfused_bitwise():
+    T = 2048
+    rng = np.random.default_rng(7)
+    x = jnp.asarray(rng.standard_normal(T), jnp.float32)
+    g = _fig9(T)
+    yf = np.asarray(g.compile(T, fuse=True)(x))
+    yu = np.asarray(g.compile(T, fuse=False)(x))
+    np.testing.assert_array_equal(yf, yu)
+
+
+def test_fig9_fused_fewer_fabric_passes():
+    """Acceptance: the graph compiler emits fewer fabric passes (and less
+    shuffle traffic) than the unfused op-by-op lowering."""
+    T = 4096
+    g = _fig9(T)
+    fused = g.compile(T, fuse=True)
+    unfused = g.compile(T, fuse=False)
+    assert fused.fabric_pass_count() < unfused.fabric_pass_count()
+    # framing + interleave + bit-reversal + stage-1 gather collapse into
+    # one pass per FFT direction: 2*(log2(256)+1) = 18 vs 37 op-by-op.
+    assert fused.fabric_pass_count() == 18
+    assert unfused.fabric_pass_count() == 37
+    rf = signal_graph_report(fused)
+    ru = signal_graph_report(unfused)
+    assert rf["shuffle_words"] < 0.6 * ru["shuffle_words"]
+    assert rf["macs"] == ru["macs"] > 0
+    assert rf["fabric_passes"] == 18
+    assert rf["total"] > 0 and rf["time_s"] > 0
+
+
+def test_graph_batched_and_jit_consistent():
+    T = 1024
+    rng = np.random.default_rng(8)
+    g = _fig9(T)
+    c = g.compile(T)
+    x = jnp.asarray(rng.standard_normal((3, 2, T)), jnp.float32)
+    eager = np.asarray(c(x))
+    jitted = np.asarray(c.jit()(x, None))
+    assert eager.shape == (3, 2, T)
+    np.testing.assert_allclose(eager, jitted, atol=1e-6)
+
+
+def test_graph_validation_errors():
+    g = SignalGraph("bad")
+    with pytest.raises(ValueError):
+        g.add("fft", "a", "nonexistent")
+    g.fft("a", "input")
+    with pytest.raises(ValueError):
+        g.add("fft", "a", "input")        # duplicate name
+    with pytest.raises(ValueError):
+        g.output("zzz")
+    g2 = SignalGraph("bad2")
+    g2.magnitude("m", "input")            # magnitude needs complex input
+    with pytest.raises(ValueError):
+        g2.compile(64)

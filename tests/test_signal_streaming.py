@@ -1,0 +1,181 @@
+"""Streaming-vs-offline equivalence of SigStream graphs.
+
+The exactness contract: chunked execution is bit-identical to offline for
+IIR state continuation, the STFT->...->iSTFT core with pointwise or
+conv-window (position-invariant) frame stages, at hop >= frame/2 where
+overlap-add sums two commutative terms per sample.  Stages whose XLA
+lowering is row-count dependent (FIR im2col GEMMs, dense per-frame
+matmuls) match to a few float32 ULPs — the vectorization-remainder lanes
+round differently for different array extents — and are tested at 1e-6.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.signal import SignalGraph, StreamingRunner
+
+FRAME, HOP = 256, 128
+
+
+def _stream(graph, x, splits, **kw):
+    r = StreamingRunner(graph, **kw)
+    pieces = [np.asarray(r.process(jnp.asarray(c)))
+              for c in np.split(x, splits, axis=-1)]
+    tail = np.asarray(r.flush())
+    if tail.size:
+        pieces.append(tail)
+    return np.concatenate([p for p in pieces if p.size], axis=-1)
+
+
+def test_streaming_iir_chain_bit_identical():
+    T = 2048
+    rng = np.random.default_rng(0)
+    x = rng.standard_normal(T).astype(np.float32)
+    g = SignalGraph("iir")
+    g.iir_biquad("q", "input", b=[0.2, 0.3, 0.2], a=[1.0, -0.5, 0.25])
+    g.iir_biquad("q2", "q", b=[0.5, 0.1, 0.0], a=[1.0, 0.2, 0.1])
+    g.output("q2")
+    off = np.asarray(g.compile(T)(jnp.asarray(x)))
+    got = _stream(g, x, [177, 900, 901])
+    assert np.array_equal(got, off)
+
+
+def test_streaming_fir_chain_close():
+    T = 2048
+    rng = np.random.default_rng(1)
+    x = rng.standard_normal(T).astype(np.float32)
+    h = rng.standard_normal(9).astype(np.float32)
+    g = SignalGraph("fir")
+    g.fir("f", "input", taps=h)
+    g.output("f")
+    off = np.asarray(g.compile(T)(jnp.asarray(x)))
+    got = _stream(g, x, [300, 1100])
+    np.testing.assert_allclose(got, off, atol=1e-6, rtol=1e-6)
+
+
+def test_streaming_stft_istft_core_bit_identical():
+    T = 4096
+    rng = np.random.default_rng(2)
+    x = rng.standard_normal(T).astype(np.float32)
+    g = SignalGraph("rt")
+    g.stft("spec", frame=FRAME, hop=HOP)
+    g.istft("out", "spec", hop=HOP, length=T)
+    g.output("out")
+    off = np.asarray(g.compile(T)(jnp.asarray(x)))
+    got = _stream(g, x, [300, 512, 700, 2500], block_frames=4)
+    assert got.shape == off.shape
+    assert np.array_equal(got, off)
+
+
+def test_streaming_fig9_conv_mask_bit_identical():
+    """Acceptance: the Fig-9 pipeline (stft -> conv-CNN mask -> istft)
+    streams bit-identically to offline, across uneven chunk sizes and
+    with DNN frame context carried over chunk boundaries."""
+    T = 4096
+    rng = np.random.default_rng(3)
+    x = rng.standard_normal((2, T)).astype(np.float32)   # batched channels
+    W = (rng.standard_normal((3, 3, 1, 1)) * 0.2).astype(np.float32)
+
+    def conv_mask(p, z):
+        m = jnp.abs(z)[..., None]
+        squeeze = m.ndim == 3
+        if squeeze:
+            m = m[None]
+        y = jax.lax.conv_general_dilated(
+            m, jnp.asarray(W), (1, 1), "SAME",
+            dimension_numbers=("NHWC", "HWIO", "NHWC"))
+        if squeeze:
+            y = y[0]
+        return jax.nn.sigmoid(y[..., 0])
+
+    g = SignalGraph("fig9")
+    g.stft("spec", frame=FRAME, hop=HOP)
+    g.dnn("mask", "spec", fn=conv_mask, frame_context=1)
+    g.mul("enh", "spec", "mask")
+    g.istft("out", "enh", hop=HOP, length=T)
+    g.output("out")
+
+    off = np.asarray(g.compile(T)(jnp.asarray(x)))
+    got = _stream(g, x, [300, 812, 1500, 3000], block_frames=4)
+    assert got.shape == off.shape
+    assert np.array_equal(got, off)
+
+
+def test_streaming_pre_and_post_sample_stages():
+    """fir -> stft -> mask -> istft -> iir: state carried on both sides."""
+    T = 2048
+    rng = np.random.default_rng(4)
+    x = rng.standard_normal(T).astype(np.float32)
+    h = (np.hanning(8) / 4).astype(np.float32)
+    g = SignalGraph("chain")
+    g.fir("pre", "input", taps=h)
+    g.stft("spec", "pre", frame=FRAME, hop=HOP)
+    g.dnn("mask", "spec", fn=lambda p, z: jax.nn.sigmoid(jnp.abs(z) - 1.0))
+    g.mul("enh", "spec", "mask")
+    g.istft("mid", "enh", hop=HOP, length=T)
+    g.iir_biquad("post", "mid", b=[0.3, 0.2, 0.1], a=[1.0, -0.4, 0.2])
+    g.output("post")
+    off = np.asarray(g.compile(T)(jnp.asarray(x)))
+    got = _stream(g, x, [333, 777, 1200])
+    np.testing.assert_allclose(got, off, atol=2e-6, rtol=1e-5)
+
+
+def test_streaming_chunk_pattern_invariance():
+    """Output is independent of how the input is chunked."""
+    T = 2048
+    rng = np.random.default_rng(5)
+    x = rng.standard_normal(T).astype(np.float32)
+    g = SignalGraph("rt")
+    g.stft("spec", frame=FRAME, hop=HOP)
+    g.istft("out", "spec", hop=HOP, length=T)
+    g.output("out")
+    a = _stream(g, x, [100, 200, 400, 1000])
+    b = _stream(g, x, [1024])
+    assert np.array_equal(a, b)
+
+
+def test_streaming_respects_short_istft_length():
+    """istft(length < natural) caps the stream at every drain, matching
+    the offline trim."""
+    T, L = 4096, 1000
+    rng = np.random.default_rng(6)
+    x = rng.standard_normal((2, T)).astype(np.float32)
+    g = SignalGraph("short")
+    g.stft("spec", frame=FRAME, hop=HOP)
+    g.istft("out", "spec", hop=HOP, length=L)
+    g.output("out")
+    off = np.asarray(g.compile(T)(jnp.asarray(x)))
+    got = _stream(g, x, [700, 1500, 3000], block_frames=4)
+    assert got.shape == off.shape == (2, L)
+    assert np.array_equal(got, off)
+
+
+def test_streaming_sample_chain_flush_keeps_batch_rank():
+    g = SignalGraph("fir")
+    g.fir("f", "input", taps=[1.0, 0.5, 0.25])
+    g.output("f")
+    r = StreamingRunner(g)
+    y = r.process(jnp.ones((2, 3, 64)))
+    tail = r.flush()
+    assert y.shape == (2, 3, 64)
+    assert tail.shape == (2, 3, 0)
+    np.concatenate([np.asarray(y), np.asarray(tail)], axis=-1)  # no raise
+
+
+def test_streaming_rejects_non_streamable():
+    g = SignalGraph("bad")
+    g.stft("s1", frame=64, hop=32)
+    g.istft("o1", "s1", hop=32)
+    g.stft("s2", "o1", frame=64, hop=32)    # two framers
+    g.istft("o2", "s2", hop=32)
+    g.output("o2")
+    with pytest.raises(ValueError):
+        StreamingRunner(g)
+
+    g2 = SignalGraph("bad2")
+    g2.dct("d", "input")                    # dct over raw samples: offline-only
+    g2.output("d")
+    with pytest.raises(ValueError):
+        StreamingRunner(g2)
