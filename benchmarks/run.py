@@ -26,11 +26,9 @@ def main() -> None:
         print(f"{name},{us:.1f},{derived}")
 
     from benchmarks import signal_graph_bench
-    print("\ngraph,variant,fabric_passes,shuffle_words,model_cycles,"
-          "us_per_call")
-    for name, variant, passes, words, cycles, us in \
-            signal_graph_bench.rows():
-        print(f"{name},{variant},{passes},{words},{cycles},{us:.1f}")
+    print("\n" + signal_graph_bench.HEADER)
+    for row in signal_graph_bench.rows():
+        print(signal_graph_bench.format_row(row))
 
     art = os.path.join(os.path.dirname(__file__), "..", "artifacts",
                        "dryrun")

@@ -1,10 +1,16 @@
-"""Graph-level SigStream benchmark: fused vs unfused pipeline lowering.
+"""Graph-level SigStream benchmark: pipeline lowering at each fusion level.
 
 For each pipeline graph, reports the static fabric-pass / shuffle-word
 counts from the graph compiler, the perf-model cycle estimate, and the
 measured wall-clock of the jitted compiled callable (CPU here; the ratio
-between fused and unfused is the interesting number, mirroring the
-paper's shuffle-traffic accounting at pipeline scope).
+between the variants is the interesting number, mirroring the paper's
+shuffle-traffic accounting at pipeline scope).  Variants:
+
+  * ``unfused``   — op-by-op lowering (``fuse=0``);
+  * ``fused``     — v1 gather∘gather composition (``fuse=1``);
+  * ``fused-v2``  — v1 + cross-einsum permutation folding (``fuse=2``):
+    pure-permutation passes ride the array passes' stream-in/out path,
+    reported in the ``streamed_words`` column.
 
     PYTHONPATH=src python -m benchmarks.signal_graph_bench
 """
@@ -54,29 +60,46 @@ def _graphs(length: int):
     return [fig9, front]
 
 
+VARIANTS = (("fused-v2", 2), ("fused", 1), ("unfused", 0))
+
+
 def rows(length: int = 4096, batch: int = 4) -> List[Tuple]:
-    """(graph, variant, fabric_passes, shuffle_words, model_cycles,
-    us_per_call) per graph x {fused, unfused}."""
+    """(graph, variant, fabric_passes, shuffle_words, streamed_words,
+    folded_passes, model_cycles, us_per_call) per graph x
+    {fused-v2, fused, unfused}."""
     from repro.core.perf_model import signal_graph_report
 
     rng = np.random.default_rng(0)
     x = jnp.asarray(rng.standard_normal((batch, length)), jnp.float32)
     out = []
     for g in _graphs(length):
-        for fuse in (True, False):
-            compiled = g.compile(length, fuse=fuse)
+        for variant, level in VARIANTS:
+            compiled = g.compile(length, fuse=level)
             rep = signal_graph_report(compiled)
             us = _bench(compiled.jit(), x, None)
-            out.append((g.name, "fused" if fuse else "unfused",
+            out.append((g.name, variant,
                         rep["fabric_passes"], rep["shuffle_words"],
+                        rep["streamed_words"], rep["folded_passes"],
                         rep["total"], us))
     return out
 
 
+HEADER = ("graph,variant,fabric_passes,shuffle_words,streamed_words,"
+          "folded_passes,model_cycles,us_per_call")
+
+
+def format_row(row: Tuple) -> str:
+    """One CSV line for a :func:`rows` tuple (kept next to HEADER so the
+    column set is defined in exactly one module)."""
+    name, variant, passes, words, stream, folded, cycles, us = row
+    return (f"{name},{variant},{passes},{words},{stream},{folded},"
+            f"{cycles},{us:.1f}")
+
+
 def main() -> None:
-    print("graph,variant,fabric_passes,shuffle_words,model_cycles,us_per_call")
-    for name, variant, passes, words, cycles, us in rows():
-        print(f"{name},{variant},{passes},{words},{cycles},{us:.1f}")
+    print(HEADER)
+    for row in rows():
+        print(format_row(row))
 
 
 if __name__ == "__main__":

@@ -28,7 +28,8 @@ from .shuffle_compiler import PAD, run_plan_via_isa
 
 __all__ = ["ShufflePlan", "PAD", "apply_plan", "apply_plan_np",
            "pad_plan_to_word", "concat_plans", "identity_plan",
-           "fuse_plans", "tile_plan"]
+           "fuse_plans", "tile_plan", "is_permutation", "is_identity",
+           "block_perm_tile", "compose_into_einsum"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -106,6 +107,103 @@ def tile_plan(plan: ShufflePlan, reps: int, in_stride: int) -> ShufflePlan:
     pv = np.broadcast_to(plan.pad_values, (reps, plan.n_out))
     return ShufflePlan(gi.ravel().astype(np.int32), pv.ravel().copy(),
                        plan.width)
+
+
+# --------------------------------------------------------------------------
+# Plan classification (consumed by the SignalGraph v2 fusion pass)
+# --------------------------------------------------------------------------
+
+def is_permutation(plan: ShufflePlan,
+                   n_in: Optional[int] = None) -> bool:
+    """True iff the plan is a pure permutation of its input: no DPU pad
+    constants and every source element read exactly once.
+
+    Pure permutations are exactly the plans the fabric can execute in
+    *stream mode* — reordering the buffer->array stream in lock-step with
+    the consuming array pass instead of materializing an intermediate in
+    the buffer.  Plans that duplicate sources (framing at hop < frame,
+    im2col) or inject pad constants still need the write-back pass, since
+    a streamed element can feed the array only once.
+
+    A :class:`ShufflePlan` does not record its source length, so a plan
+    whose indices happen to cover ``[0, n_out)`` of a *longer* input (a
+    prefix selection) is indistinguishable from a true permutation here.
+    Pass ``n_in`` when the caller knows the source length to close that
+    hole — required before any transform that would *drop* or *reorder
+    around* the plan rather than still executing it verbatim.
+    """
+    gi = plan.gather_idx
+    if gi.size == 0 or bool((gi == PAD).any()):
+        return False
+    if n_in is not None and int(n_in) != gi.size:
+        return False
+    return bool(np.array_equal(np.sort(gi), np.arange(gi.size)))
+
+
+def is_identity(plan: ShufflePlan, n_in: Optional[int] = None) -> bool:
+    """True iff the plan moves nothing: ``out == in`` elementwise.
+    Same source-length caveat as :func:`is_permutation` — a prefix
+    selection of a longer input looks like an identity; pass ``n_in``
+    before treating the plan as droppable."""
+    gi = plan.gather_idx
+    if gi.size == 0 or bool((gi == PAD).any()):
+        return False
+    if n_in is not None and int(n_in) != gi.size:
+        return False
+    return bool(np.array_equal(gi, np.arange(gi.size)))
+
+
+def block_perm_tile(plan: ShufflePlan) -> Optional[int]:
+    """Smallest tile size ``t`` (a divisor of ``n_out``) such that the plan
+    is a block-diagonal permutation over independent ``t``-sized tiles;
+    ``None`` if the plan is not a permutation at all.
+
+    ``t`` bounds the reorder window the fabric needs in stream mode:
+    ``tile_plan`` of a per-frame permutation reports the frame stride,
+    while ``t == n_out`` means the permutation is global.  ``t == 1`` is
+    the identity.
+    """
+    if not is_permutation(plan):
+        return None
+    n = plan.n_out
+    pos = np.arange(n)
+    for t in range(1, n + 1):
+        if n % t:
+            continue
+        if bool((plan.gather_idx // t == pos // t).all()):
+            return t
+    return n  # unreachable: t == n always satisfies the check
+
+
+def compose_into_einsum(plan: ShufflePlan, diag,
+                        pre: Optional[ShufflePlan], pre_diag):
+    """Fold a standalone (plan, diag) fabric pass into the stream-in
+    shuffle of a downstream array pass that already carries
+    ``(pre, pre_diag)``.
+
+    Returns the composed ``(pre, pre_diag)``: the earlier plan is applied
+    first, so ``pre`` indexes its output, and the earlier diag sinks
+    through ``pre``'s gather (pad lanes keep their DPU constants, scale 1).
+    This is the plan/scale algebra behind both the v1 gather∘gather
+    peephole and the v2 permutation folding in signal/graph.py.
+    """
+    if pre is None:
+        # identity stream-in: scales compose elementwise in plan-output
+        # space (an existing pre_diag without a pre plan must not drop).
+        if diag is None and pre_diag is None:
+            return plan, None
+        d = (np.asarray(diag) if diag is not None else 1.0) \
+            * (np.asarray(pre_diag) if pre_diag is not None else 1.0)
+        return plan, d
+    fused = fuse_plans(plan, pre)
+    new_diag = None
+    if diag is not None or pre_diag is not None:
+        d1 = np.asarray(diag) if diag is not None else np.ones(plan.n_out)
+        sunk = np.where(pre.gather_idx == PAD, 1.0,
+                        d1[np.clip(pre.gather_idx, 0, None)])
+        new_diag = sunk * (np.asarray(pre_diag) if pre_diag is not None
+                           else 1.0)
+    return fused, new_diag
 
 
 def pad_plan_to_word(plan: ShufflePlan) -> ShufflePlan:

@@ -202,12 +202,23 @@ def signal_graph_report(compiled, aw: int = 16, ww: int = 16,
     """Cycle / traffic report for a compiled :class:`SignalGraph`.
 
     ``compiled`` is duck-typed: it supplies ``shuffle_passes()`` (one
-    :class:`ShufflePass` per fabric pass the graph executes),
+    :class:`ShufflePass` per standalone fabric pass the graph executes),
     ``conv_layers()`` (one :class:`ConvLayer` per array einsum, plus any
     user-declared DNN layers), and ``in_type`` / ``out_type`` element
     counts for the DRAM streams.  This is the graph-level generalization of
     the per-op workload builders above: fusing two back-to-back gathers
     shows up here as one fewer pass and fewer shuffle words.
+
+    The v2 cross-einsum fusion pass is attributed explicitly.  Optional
+    ``streamed_shuffles()`` lists the permutations folded into array
+    passes: their words traverse the fabric in lock-step with the array's
+    operand stream (no buffer round trip), so they are *excluded* from
+    ``shuffle_words`` — which counts serialized buffer->fabric->buffer
+    traffic — and reported as ``streamed_words`` instead (their cycles
+    hide under the consuming layer's compute/DMA bound).  Optional
+    ``folded_pass_names()`` gives ``folded_passes``, the number of
+    lowered passes the fusion absorbed (stream folds plus commuted /
+    eliminated row permutations).
     """
     shuffles = list(compiled.shuffle_passes())
     layers = list(compiled.conv_layers())
@@ -218,6 +229,11 @@ def signal_graph_report(compiled, aw: int = 16, ww: int = 16,
     rep["fabric_passes"] = len(shuffles)
     rep["shuffle_words"] = sum(s.words for s in shuffles)
     rep["shuffle_elems"] = sum(s.elems for s in shuffles)
+    streamed = list(getattr(compiled, "streamed_shuffles", lambda: [])())
+    rep["streamed_passes"] = len(streamed)
+    rep["streamed_words"] = sum(s.words for s in streamed)
+    rep["folded_passes"] = len(
+        getattr(compiled, "folded_pass_names", lambda: [])())
     rep["macs"] = w.macs
     rep["time_s"] = rep["total"] / hw.freq_hz
     rep["energy_j"] = rep["time_s"] * hw.power_w

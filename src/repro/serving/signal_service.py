@@ -49,7 +49,7 @@ class SignalService:
     shapes hits the cache and pays one fused program launch per batch.
     """
 
-    def __init__(self, batch_size: int = 8, fuse: bool = True):
+    def __init__(self, batch_size: int = 8, fuse: "bool | int" = True):
         self.batch_size = batch_size
         self.fuse = fuse
         self._graphs: Dict[str, Tuple[SignalGraph, object]] = {}
@@ -175,6 +175,10 @@ class CoScheduler:
     wave and (b) one batched DSP graph execution — the serving analogue of
     the paper's DLA interleaving signal tasks with DNN layers instead of
     farming them out to a separate DSP chip.
+
+    Known limitation (see docs/serving.md and the ROADMAP): the tick loop
+    is strict round-robin between the two workload classes, with no
+    awareness of queue depth, request age or latency targets.
     """
 
     def __init__(self, engine: ServingEngine, signals: SignalService):

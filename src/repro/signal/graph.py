@@ -16,13 +16,42 @@ three primitive step kinds:
   * :class:`LambdaStep` — host/array glue (complex repacking, overlap-add
     accumulation, the DNN hook) that moves no data through the fabric.
 
-A fusion pass then composes adjacent gathers via
-:func:`repro.core.fabric.fuse_plans` — back-to-back data-movement plans
-(framing -> complex interleave -> FFT bit-reversal -> stage-1 butterfly
-gather) collapse into ONE fabric pass, the graph-level generalization of
-the per-FFT ``fuse_adjacent`` optimization.  The result is a single
-jittable callable plus per-graph fabric-pass / shuffle-word / cycle
-accounting consumed by :func:`repro.core.perf_model.signal_graph_report`.
+Two fusion passes then shrink the step list:
+
+  * **v1 — gather∘gather** composes adjacent gathers via
+    :func:`repro.core.fabric.fuse_plans` — back-to-back data-movement
+    plans (framing -> complex interleave -> FFT bit-reversal -> stage-1
+    butterfly gather) collapse into ONE fabric pass, the graph-level
+    generalization of the per-FFT ``fuse_adjacent`` optimization.
+  * **v2 — cross-einsum permutation folding** eliminates the fabric
+    passes *between* einsums.  A :class:`GatherStep` whose plan is a pure
+    permutation (:func:`repro.core.fabric.is_permutation`; block-diagonal
+    tiled permutations included) reads every source element exactly once,
+    so the fabric can apply it on the buffer->array stream of the
+    adjacent array pass instead of making a write-back round trip.  Two
+    rewrite rules apply, in order:
+
+      1. a *row-aligned* permutation (it moves whole contraction rows,
+         untouched inside) ahead of a *row-equivariant* einsum (operand
+         does not index the row axes) commutes through the einsum at
+         compile time and re-emerges as a row permutation of the output,
+         where the re-run gather∘gather pass fuses it onward (identities
+         vanish entirely);
+      2. any remaining pure-permutation neighbor folds into the
+         :class:`EinsumStep` itself as its ``pre``/``post`` stream
+         shuffle via :func:`repro.core.fabric.compose_into_einsum` — the
+         ``gather ∘ einsum ∘ gather`` chain becomes a single array pass
+         with pre/post-permuted operands.
+
+    Duplicating or padding plans (STFT framing at hop < frame, FIR
+    im2col) are *not* permutations and keep their standalone pass.  Both
+    rules move data without re-associating any arithmetic, so v2 output
+    is bit-identical to the unfused lowering.
+
+The result is a single jittable callable plus per-graph fabric-pass /
+shuffle-word / cycle accounting consumed by
+:func:`repro.core.perf_model.signal_graph_report`, which attributes the
+passes and words saved by each fusion level.
 """
 
 from __future__ import annotations
@@ -35,7 +64,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..core import signal_mapping as _sm
-from ..core.fabric import PAD, ShufflePlan, apply_plan, fuse_plans, tile_plan
+from ..core.fabric import (PAD, ShufflePlan, apply_plan, compose_into_einsum,
+                           is_identity, is_permutation, tile_plan)
 
 __all__ = ["SignalGraph", "CompiledSignalGraph", "SigType",
            "GatherStep", "EinsumStep", "LambdaStep",
@@ -81,7 +111,17 @@ class GatherStep:
 @dataclasses.dataclass
 class EinsumStep:
     """One computing-array pass: reshape the flat last axis to
-    ``reshape_in``, einsum against the static operand, flatten back."""
+    ``reshape_in``, einsum against the static operand, flatten back.
+
+    ``pre`` / ``post`` are optional pure-permutation shuffle plans the
+    fabric applies on the buffer->array stream-in and array->buffer
+    stream-out of the SAME pass (the v2 fusion target): they move words
+    in lock-step with the array and cost no standalone fabric pass.
+    ``pre_diag`` is the constant per-element stream-in scale (window /
+    conjugation / 1/n patterns) inherited from a folded gather.
+    ``folded`` records the names of the absorbed passes for the perf
+    report's attribution.
+    """
     name: str
     spec: str
     operand: np.ndarray
@@ -90,6 +130,10 @@ class EinsumStep:
     rows: int                     # output positions  (perf: ConvLayer.h)
     cin: int                      # contraction size  (perf: ConvLayer.cin)
     cout: int                     # output features   (perf: ConvLayer.cout)
+    pre: Optional[ShufflePlan] = None    # stream-in permutation (v2 fold)
+    pre_diag: Optional[np.ndarray] = None
+    post: Optional[ShufflePlan] = None   # stream-out permutation (v2 fold)
+    folded: Tuple[str, ...] = ()
 
 
 @dataclasses.dataclass
@@ -110,9 +154,15 @@ def _run_steps(steps: Sequence[Step], x: jax.Array, params) -> jax.Array:
             if s.diag is not None:
                 x = x * jnp.asarray(s.diag, dtype=x.dtype)
         elif isinstance(s, EinsumStep):
+            if s.pre is not None:
+                x = apply_plan(x, s.pre)
+                if s.pre_diag is not None:
+                    x = x * jnp.asarray(s.pre_diag, dtype=x.dtype)
             h = x.reshape(*x.shape[:-1], *s.reshape_in)
             y = jnp.einsum(s.spec, h, jnp.asarray(s.operand, dtype=h.dtype))
             x = y.reshape(*y.shape[:-s.out_rank], -1)
+            if s.post is not None:
+                x = apply_plan(x, s.post)
         else:
             x = s.fn(params, x) if s.takes_params else s.fn(x)
     return x
@@ -120,17 +170,12 @@ def _run_steps(steps: Sequence[Step], x: jax.Array, params) -> jax.Array:
 
 def _compose_gathers(a: GatherStep, b: GatherStep) -> GatherStep:
     """a then b -> one fabric pass.  a's diag sinks through b's gather."""
-    plan = fuse_plans(a.plan, b.plan)
-    diag = None
-    if a.diag is not None or b.diag is not None:
-        d1 = a.diag if a.diag is not None else np.ones(a.plan.n_out)
-        sunk = np.where(b.plan.gather_idx == PAD, 1.0,
-                        d1[np.clip(b.plan.gather_idx, 0, None)])
-        diag = sunk * (b.diag if b.diag is not None else 1.0)
+    plan, diag = compose_into_einsum(a.plan, a.diag, b.plan, b.diag)
     return GatherStep(f"{a.name}+{b.name}", plan, diag)
 
 
 def _peephole(steps: List[Step]) -> List[Step]:
+    """v1 fusion: collapse runs of back-to-back gathers into one pass."""
     out: List[Step] = []
     for s in steps:
         if out and isinstance(s, GatherStep) and isinstance(out[-1],
@@ -139,6 +184,174 @@ def _peephole(steps: List[Step]) -> List[Step]:
         else:
             out.append(s)
     return out
+
+
+# --------------------------------------------------------------------------
+# v2 fusion: fold permutation passes across einsum boundaries
+# --------------------------------------------------------------------------
+
+def _spec_axes(spec: str) -> Tuple[str, str, str]:
+    """Split an EinsumStep spec into (input, operand, output) subscripts
+    with the batch ellipses stripped."""
+    lhs, out = spec.split("->")
+    ins, op = lhs.split(",")
+    return ins.replace("...", ""), op.replace("...", ""), \
+        out.replace("...", "")
+
+
+def _row_equivariant(spec: str) -> bool:
+    """True iff the einsum applies the same contraction to every row: the
+    operand indexes no row axis (axes shared by input and output), and the
+    contracted axes trail the rows in the input layout.  Such einsums
+    commute with any permutation of whole rows."""
+    ins, op, out = _spec_axes(spec)
+    rows = [c for c in ins if c in out]
+    contracted = [c for c in ins if c not in out]
+    if not contracted or any(c in op for c in rows):
+        return False
+    first_contract = min(ins.index(c) for c in contracted)
+    if not all(ins.index(c) < first_contract for c in rows):
+        return False
+    # output must keep the rows leading and in input order, so the flat
+    # result is rows-major and a row permutation maps to cout-blocks.
+    return out[:len(rows)] == "".join(rows)
+
+
+def _row_aligned_perm(plan: ShufflePlan, rows: int,
+                      cin: int) -> Optional[np.ndarray]:
+    """If ``plan`` permutes whole ``cin``-sized rows without reordering
+    inside them (``P[r*cin + i] == sigma(r)*cin + i``), return ``sigma``;
+    else None."""
+    if plan.n_out != rows * cin or not is_permutation(plan):
+        return None
+    gi = plan.gather_idx.reshape(rows, cin)
+    base = gi[:, 0]
+    if bool((base % cin).any()):
+        return None
+    if not bool((gi == base[:, None] + np.arange(cin)[None, :]).all()):
+        return None
+    return base // cin
+
+
+def _step_out_len(step) -> Optional[int]:
+    """Flat last-axis length a step produces, when statically known
+    (None after a LambdaStep — host glue may reshape arbitrarily)."""
+    if isinstance(step, GatherStep):
+        return step.plan.n_out
+    if isinstance(step, EinsumStep):
+        return step.post.n_out if step.post is not None \
+            else step.rows * step.cout
+    return None
+
+
+def _commute_row_perms(steps: List[Step],
+                       in_len: Optional[int] = None) -> List[Step]:
+    """Rule 1: sink row-aligned permutations through row-equivariant
+    einsums.  ``[G_perm, E]`` becomes ``[E, G_rows]`` where ``G_rows``
+    permutes the einsum *output* rows (granularity ``cout``) — pure data
+    movement, computed at compile time, so outputs stay bit-identical.
+    The emitted gather then meets whatever follows and is eligible for
+    the gather∘gather peephole (or vanishes if the permutation was the
+    identity, e.g. the haar-DWT polyphase window).
+
+    Because the rule *moves* the gather instead of executing it in
+    place, it only fires when the gather's source length is statically
+    known (``in_len`` for the first step, the previous step's output
+    length otherwise) and equals ``n_out`` — a prefix *selection* of a
+    longer input must stay put."""
+    out: List[Step] = []
+    i = 0
+    cur = in_len
+    while i < len(steps):
+        s = steps[i]
+        nxt = steps[i + 1] if i + 1 < len(steps) else None
+        if (isinstance(s, GatherStep) and s.diag is None
+                and cur == s.plan.n_out
+                and isinstance(nxt, EinsumStep)
+                and _row_equivariant(nxt.spec)):
+            sigma = _row_aligned_perm(s.plan, nxt.rows, nxt.cin)
+            if sigma is not None:
+                e = dataclasses.replace(nxt, folded=nxt.folded + (s.name,))
+                out.append(e)
+                if not bool(np.array_equal(sigma, np.arange(sigma.size))):
+                    gi = (sigma[:, None] * e.cout
+                          + np.arange(e.cout)[None, :]).ravel()
+                    out.append(GatherStep(
+                        f"{s.name}>>{e.name}",
+                        ShufflePlan(gi.astype(np.int32),
+                                    np.zeros(gi.size, np.int64),
+                                    s.plan.width)))
+                cur = _step_out_len(out[-1])
+                i += 2
+                continue
+        out.append(s)
+        cur = _step_out_len(s)
+        i += 1
+    return out
+
+
+def _stream_fold(steps: List[Step],
+                 in_len: Optional[int] = None) -> List[Step]:
+    """Rule 2: absorb remaining pure-permutation gathers into the
+    adjacent array pass as its stream-in (``pre``) or stream-out
+    (``post``) shuffle.  The fabric applies these in lock-step with the
+    array's operand stream — the folded plan still executes verbatim at
+    runtime (same ops, no standalone pass), so this is safe even when
+    the source length cannot be verified.  Identity gathers (no
+    movement, no scale) are dropped outright — that *does* change the
+    executed ops, so it additionally requires the statically-known
+    source length to match (a prefix selection of a longer input is not
+    an identity)."""
+    out: List[Step] = []
+    i = 0
+    cur = in_len
+    while i < len(steps):
+        s = steps[i]
+        if isinstance(s, GatherStep) and s.diag is None \
+                and cur is not None and is_identity(s.plan, n_in=cur):
+            i += 1
+            continue
+        nxt = steps[i + 1] if i + 1 < len(steps) else None
+        if isinstance(s, GatherStep) and is_permutation(s.plan, n_in=cur) \
+                and isinstance(nxt, EinsumStep):
+            pre, pre_diag = compose_into_einsum(s.plan, s.diag,
+                                                nxt.pre, nxt.pre_diag)
+            out.append(dataclasses.replace(
+                nxt, pre=pre, pre_diag=pre_diag,
+                folded=nxt.folded + (s.name,)))
+            cur = _step_out_len(out[-1])
+            i += 2
+            continue
+        if isinstance(s, GatherStep) and is_permutation(s.plan, n_in=cur) \
+                and s.diag is None and out \
+                and isinstance(out[-1], EinsumStep) \
+                and out[-1].post is None:
+            out[-1] = dataclasses.replace(
+                out[-1], post=s.plan, folded=out[-1].folded + (s.name,))
+            cur = s.plan.n_out
+            i += 1
+            continue
+        out.append(s)
+        cur = _step_out_len(s)
+        i += 1
+    return out
+
+
+def _fuse_steps(steps: List[Step], level: int,
+                in_len: Optional[int] = None) -> List[Step]:
+    """Run the fusion pipeline up to ``level``: 0 = op-by-op lowering,
+    1 = gather∘gather composition, 2 = cross-einsum permutation folding
+    (rule 1 commute, re-peephole, rule 2 stream fold).  ``in_len`` is
+    the flat last-axis length entering the first step when statically
+    known; the v2 rules that delete or relocate a gather only fire with
+    a verified source length."""
+    if level >= 1:
+        steps = _peephole(steps)
+    if level >= 2:
+        steps = _commute_row_perms(steps, in_len)
+        steps = _peephole(steps)
+        steps = _stream_fold(steps, in_len)
+    return steps
 
 
 # --------------------------------------------------------------------------
@@ -328,6 +541,9 @@ class SignalGraph:
 
     # -- construction -------------------------------------------------------
     def add(self, kind: str, name: str, inputs, **params) -> str:
+        """Add a stage of ``kind`` reading from ``inputs`` (a stage name
+        or tuple of names; ``"input"`` is the graph input).  The typed
+        helpers below are thin wrappers over this.  Returns ``name``."""
         if isinstance(inputs, str):
             inputs = (inputs,)
         if name in self.stages or name == self.INPUT:
@@ -340,23 +556,39 @@ class SignalGraph:
         return name
 
     def stft(self, name, inp=INPUT, frame=256, hop=128, window=True):
+        """Hann-windowed STFT: real samples ``(..., T)`` -> complex frames
+        ``(..., F, frame)`` with ``F = 1 + (T - frame) // hop``.
+        ``window=False`` frames without the Hann taper."""
         return self.add("stft", name, inp, frame=frame, hop=hop,
                         window=window)
 
     def istft(self, name, inp, hop=128, length=None):
+        """Inverse STFT + overlap-add: complex frames ``(..., F, frame)``
+        -> real samples.  ``length`` trims or zero-pads the natural
+        ``(F - 1) * hop + frame`` output."""
         return self.add("istft", name, inp, hop=hop, length=length)
 
     def fft(self, name, inp):
+        """Radix-2 FFT along the last axis (power-of-two length); real or
+        complex input, complex output of the same suffix shape."""
         return self.add("fft", name, inp)
 
     def ifft(self, name, inp):
+        """Inverse FFT along the last axis (complex input required),
+        via conj -> FFT -> conj / n on the same butterfly plans."""
         return self.add("ifft", name, inp)
 
     def fir(self, name, inp, taps, phases=1):
+        """Causal FIR filter over real samples (im2col gather + tap GEMM;
+        Fig 3b).  ``phases > 1`` uses the multi-phase mapping that keeps
+        all 8 PEs busy (offline only — streaming needs ``phases=1``)."""
         return self.add("fir", name, inp,
                         taps=np.asarray(taps, np.float64), phases=phases)
 
     def iir_biquad(self, name, inp, b, a):
+        """Second-order IIR section, ``scipy.signal.lfilter(b, a, x)``
+        semantics with 3-tap ``b`` and ``a`` (normalized by ``a[0]``).
+        Runs as a ``lax.scan`` on the scalar path."""
         b = np.asarray(b, np.float64)
         a = np.asarray(a, np.float64)
         if b.shape != (3,) or a.shape != (3,):
@@ -364,18 +596,29 @@ class SignalGraph:
         return self.add("iir_biquad", name, inp, b=b / a[0], a=a / a[0])
 
     def dct(self, name, inp):
+        """Orthonormal DCT-II along the last axis: a plain dense GEMM
+        against the transform matrix (Fig 3c — no shuffle traffic)."""
         return self.add("dct", name, inp)
 
     def dwt(self, name, inp, wavelet="haar"):
+        """Single-level DWT (``haar`` or ``db2``): last axis ``n`` ->
+        ``(n // 2, 2)`` with approx/detail on the trailing axis
+        (polyphase window gather + filter-bank GEMM, Fig 3d)."""
         return self.add("dwt", name, inp, wavelet=wavelet)
 
     def magnitude(self, name, inp, onesided=False):
+        """``abs`` of a complex stage; ``onesided=True`` keeps the first
+        ``n // 2 + 1`` bins of the (symmetric) spectrum."""
         return self.add("magnitude", name, inp, onesided=onesided)
 
     def mel_filterbank(self, name, inp, sr, n_mels):
+        """Triangular HTK-mel filterbank GEMM over one-sided magnitude
+        bins: ``(..., F, bins)`` -> ``(..., F, n_mels)``."""
         return self.add("mel_filterbank", name, inp, sr=sr, n_mels=n_mels)
 
     def mul(self, name, a, b):
+        """Elementwise product of two stages (e.g. spectrum x mask);
+        a real operand is cast to the complex operand's dtype."""
         return self.add("mul", name, (a, b))
 
     def dnn(self, name, inp, fn, frame_context=0, layers=()):
@@ -387,22 +630,40 @@ class SignalGraph:
                         frame_context=frame_context, layers=tuple(layers))
 
     def overlap_add(self, name, inp, hop=128, length=None):
+        """Overlap-add real frames ``(..., F, frame)`` back to samples at
+        ``hop`` (the iSTFT tail without the inverse FFT)."""
         return self.add("overlap_add", name, inp, hop=hop, length=length)
 
     def output(self, name: str) -> None:
+        """Declare the graph output stage (defaults to the last added)."""
         if name not in self.stages:
             raise ValueError(f"unknown output stage {name!r}")
         self._output = name
 
     # -- compilation --------------------------------------------------------
-    def compile(self, length: int, fuse: bool = True,
+    def compile(self, length: int, fuse=True,
                 width: int = 16) -> "CompiledSignalGraph":
         """Shape-specialize and lower the graph for input length ``length``.
 
-        ``fuse=True`` runs the gather-composition pass (fewer fabric
-        passes, same math); ``fuse=False`` is the op-by-op lowering used as
-        the unfused baseline in benchmarks/tests.
+        ``fuse`` selects the fusion level:
+
+        * ``False`` / ``0`` — op-by-op lowering, one fabric pass per
+          emitted gather (the unfused baseline in benchmarks/tests);
+        * ``1`` — v1: compose back-to-back gathers into one pass;
+        * ``True`` / ``2`` — v2 (default): additionally fold
+          pure-permutation passes across einsum boundaries into the
+          adjacent array pass (see the module docstring).
+
+        All levels produce bit-identical outputs; they differ only in
+        how many standalone fabric passes the step list executes.
         """
+        if isinstance(fuse, (bool, np.bool_)):
+            level = 2 if fuse else 0
+        elif isinstance(fuse, (int, np.integer)) and int(fuse) in (0, 1, 2):
+            level = int(fuse)
+        else:
+            raise ValueError(f"fuse must be False, True, 0, 1 or 2; "
+                             f"got {fuse!r}")
         out_name = self._output or (self._order[-1] if self._order else None)
         if out_name is None:
             raise ValueError("empty graph")
@@ -413,9 +674,14 @@ class SignalGraph:
         for sname in self._order:
             st = self.stages[sname]
             in_types = [types[i] for i in st.inputs]
-            combine, steps, out_t = _lower_stage(st, in_types, fuse, width)
-            if fuse:
-                steps = _peephole(steps)
+            combine, steps, out_t = _lower_stage(st, in_types, level > 0,
+                                                 width)
+            # flat last-axis length entering the stage's first step, when
+            # statically known (complex values reach steps via an unpack
+            # lambda, so their entry length is tracked as unknown).
+            in_len = None if (not in_types or in_types[0].is_complex) \
+                else in_types[0].suffix[-1]
+            steps = _fuse_steps(steps, level, in_len)
             types[sname] = out_t
             compiled.append(CompiledStage(
                 sname, st.inputs, combine, steps, out_t,
@@ -423,7 +689,7 @@ class SignalGraph:
 
         return CompiledSignalGraph(self.name, compiled, out_name,
                                    types[self.INPUT], types[out_name],
-                                   fuse=fuse)
+                                   fuse=level)
 
 
 # --------------------------------------------------------------------------
@@ -449,6 +715,20 @@ def _require_real(st: Stage, t: SigType) -> None:
         raise ValueError(f"stage {st.name!r} ({st.kind}) needs real input")
 
 
+def _require_flat(st: Stage, t: SigType) -> None:
+    """Stages whose gathers/reshapes assume the suffix IS the last axis
+    (fir, dwt, dct, real-input fft) reject multi-dim suffixes loudly:
+    their plans index a flattened rows*n layout that a multi-dim value
+    does not have, which would otherwise gather out of bounds and return
+    garbage.  (Leading *batch* axes are fine — they are not part of the
+    suffix.)"""
+    if len(t.suffix) > 1:
+        raise ValueError(
+            f"stage {st.name!r} ({st.kind}) supports a 1-D suffix only, "
+            f"got {t.suffix}; route through magnitude/mel-style stages "
+            f"or reshape upstream")
+
+
 def _lower_stage(st: Stage, in_types: List[SigType], fuse: bool,
                  width: int):
     """Returns (combine, steps, out_type)."""
@@ -466,6 +746,7 @@ def _lower_stage(st: Stage, in_types: List[SigType], fuse: bool,
 
     if kind == "stft":
         _require_real(st, t)
+        _require_flat(st, t)
         frame, hop = p["frame"], p["hop"]
         length = t.suffix[-1]
         if length < frame:
@@ -542,6 +823,7 @@ def _lower_stage(st: Stage, in_types: List[SigType], fuse: bool,
                 lambda x: _sm.complex_to_interleaved(x).reshape(
                     *x.shape[:-len(t.suffix)], rows * 2 * n)))
         else:
+            _require_flat(st, t)
             steps.append(GatherStep(
                 f"{st.name}.interleave",
                 tile_plan(_interleave_plan(n, width), rows, n)))
@@ -573,6 +855,7 @@ def _lower_stage(st: Stage, in_types: List[SigType], fuse: bool,
 
     if kind == "fir":
         _require_real(st, t)
+        _require_flat(st, t)
         h = p["taps"]
         taps, phases = h.shape[0], p["phases"]
         n = t.suffix[-1]
@@ -604,6 +887,7 @@ def _lower_stage(st: Stage, in_types: List[SigType], fuse: bool,
 
     if kind == "dct":
         _require_real(st, t)
+        _require_flat(st, t)
         rows, n = _rows_last(t)
         C = _sm.dct_matrix(n)
         return None, [EinsumStep(f"{st.name}.dct", "...rn,kn->...rk", C,
@@ -612,6 +896,7 @@ def _lower_stage(st: Stage, in_types: List[SigType], fuse: bool,
 
     if kind == "dwt":
         _require_real(st, t)
+        _require_flat(st, t)
         rows, n = _rows_last(t)
         plan = _sm.make_dwt_plan(n, p["wavelet"], width)
         fb = _sm.dwt_filters(p["wavelet"])
@@ -679,13 +964,14 @@ class CompiledSignalGraph:
 
     def __init__(self, name: str, stages: List[CompiledStage],
                  output: str, in_type: SigType, out_type: SigType,
-                 fuse: bool):
+                 fuse: int):
         self.name = name
         self.stages = stages
         self.output = output
         self.in_type = in_type
         self.out_type = out_type
-        self.fused = fuse
+        self.fuse_level = int(fuse)   # 0 = unfused, 1 = gathers, 2 = v2
+        self.fused = self.fuse_level > 0
 
     # -- execution ----------------------------------------------------------
     def __call__(self, x: jax.Array, params=None) -> jax.Array:
@@ -699,6 +985,8 @@ class CompiledSignalGraph:
         return env[self.output]
 
     def jit(self):
+        """``jax.jit`` of :meth:`__call__`; all plans/operands are static
+        so the whole pipeline compiles to one XLA program."""
         return jax.jit(self.__call__)
 
     def sharded_jit(self, mesh, batch_axis: str = "data"):
@@ -711,16 +999,49 @@ class CompiledSignalGraph:
 
     # -- accounting (consumed by perf_model.signal_graph_report) ------------
     def gather_steps(self) -> List[GatherStep]:
+        """The standalone fabric passes (buffer -> fabric -> buffer)."""
         return [s for st in self.stages for s in st.steps
                 if isinstance(s, GatherStep)]
 
+    def einsum_steps(self) -> List[EinsumStep]:
+        """The computing-array passes, in execution order."""
+        return [s for st in self.stages for s in st.steps
+                if isinstance(s, EinsumStep)]
+
     def fabric_pass_count(self) -> int:
+        """Standalone fabric passes; v2-folded permutations ride the
+        array passes and are NOT counted here."""
         return len(self.gather_steps())
+
+    def array_pass_count(self) -> int:
+        return len(self.einsum_steps())
 
     def shuffle_passes(self):
         from ..core.perf_model import ShufflePass
         return [ShufflePass(s.name, s.plan.n_out, s.plan.width)
                 for s in self.gather_steps()]
+
+    def streamed_shuffles(self):
+        """One :class:`~repro.core.perf_model.ShufflePass` per
+        permutation the v2 pass folded into an array pass's stream-in /
+        stream-out path.  These words still traverse the fabric but in
+        lock-step with the array (no buffer round trip), so the perf
+        report attributes them separately from ``shuffle_passes``."""
+        from ..core.perf_model import ShufflePass
+        out = []
+        for s in self.einsum_steps():
+            if s.pre is not None:
+                out.append(ShufflePass(f"{s.name}.stream_in",
+                                       s.pre.n_out, s.pre.width))
+            if s.post is not None:
+                out.append(ShufflePass(f"{s.name}.stream_out",
+                                       s.post.n_out, s.post.width))
+        return out
+
+    def folded_pass_names(self) -> List[str]:
+        """Names of the lowered passes absorbed by v2 folding (both the
+        stream folds and the commuted/eliminated row permutations)."""
+        return [n for s in self.einsum_steps() for n in s.folded]
 
     def conv_layers(self):
         from ..core.perf_model import ConvLayer

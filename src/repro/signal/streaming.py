@@ -16,7 +16,13 @@ multi-channel input while carrying exactly the state the DSP math needs:
 The contract — enforced by tests/test_signal_streaming.py — is that the
 concatenated streamed output is *bit-identical* to running the same graph
 offline on the whole signal (for hop >= frame/2, where overlap-add sums
-two terms per sample and float addition is commutative).
+two terms per sample and float addition is commutative).  The contract
+holds at every fusion level: the carried-state bookkeeping (ring-buffer
+offsets, OLA tail, frame lookback) lives at *stage* boundaries, while the
+v1/v2 fusion passes only rewrite the step list *inside* each stage — a
+folded permutation runs the same ops in the same order as its standalone
+pass, so the per-block core graph compiled at ``fuse=2`` emits the same
+frames as the unfused lowering.
 
 A sample ``s`` is emitted once no future frame can touch it, so the
 runner's latency is ``frame - hop`` samples plus ``frame_context * hop``
@@ -100,10 +106,16 @@ class StreamingRunner:
     between, e.g. the Fig-9 mask DNN with fan-out).  ``params`` is the same
     per-stage dict the compiled graph takes.  Chunks may have leading batch
     / channel axes; the last axis is time and chunk lengths may vary.
+
+    ``block_frames`` sets how many new frames each drain compiles/executes
+    at once (one jitted core program per distinct block size);
+    ``fuse`` is forwarded to :meth:`SignalGraph.compile` for the per-block
+    core (``True`` = full v2 cross-einsum folding); ``jit_blocks=False``
+    runs the core eagerly (debugging).
     """
 
     def __init__(self, graph: SignalGraph, params=None,
-                 block_frames: int = 8, fuse: bool = True,
+                 block_frames: int = 8, fuse: "bool | int" = True,
                  jit_blocks: bool = True):
         self.graph = graph
         self.params = params

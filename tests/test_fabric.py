@@ -56,3 +56,81 @@ def test_concat_and_pad_to_word():
     x = rng.integers(-100, 100, size=8)
     np.testing.assert_array_equal(apply_plan_np(x, p)[:11],
                                   apply_plan_np(x, c))
+
+
+# --------------------------------------------------------------------------
+# Plan classification + einsum folding helpers (v2 cross-einsum fusion)
+# --------------------------------------------------------------------------
+
+def test_is_permutation_classification():
+    from repro.core.fabric import fuse_plans, is_permutation, tile_plan
+
+    rng = np.random.default_rng(2)
+    perm = ShufflePlan(rng.permutation(16).astype(np.int32),
+                       np.zeros(16, np.int64))
+    assert is_permutation(perm)
+    assert is_permutation(identity_plan(16))
+    # tiling a permutation (block-diagonal replication) stays a permutation
+    assert is_permutation(tile_plan(perm, 3, 16))
+    # composition of permutations is a permutation
+    perm2 = ShufflePlan(rng.permutation(16).astype(np.int32),
+                        np.zeros(16, np.int64))
+    assert is_permutation(fuse_plans(perm, perm2))
+    # duplication, padding and selection are NOT permutations
+    dup = ShufflePlan(np.array([0, 0, 1, 2], np.int32), np.zeros(4, np.int64))
+    assert not is_permutation(dup)
+    padded = ShufflePlan(np.array([0, PAD, 1, 2], np.int32),
+                         np.zeros(4, np.int64))
+    assert not is_permutation(padded)
+    select = ShufflePlan(np.array([0, 2, 4, 6], np.int32),
+                         np.zeros(4, np.int64))
+    assert not is_permutation(select)
+
+
+def test_block_perm_tile():
+    from repro.core.fabric import block_perm_tile, tile_plan
+
+    rng = np.random.default_rng(3)
+    inner = ShufflePlan(rng.permutation(8).astype(np.int32),
+                        np.zeros(8, np.int64))
+    tiled = tile_plan(inner, 4, 8)
+    assert block_perm_tile(tiled) == 8          # per-tile window
+    assert block_perm_tile(identity_plan(12)) == 1
+    # a global rotation has no smaller tile than the whole plan
+    rot = ShufflePlan(np.roll(np.arange(8), 1).astype(np.int32),
+                      np.zeros(8, np.int64))
+    assert block_perm_tile(rot) == 8
+    # non-permutations are unclassifiable
+    dup = ShufflePlan(np.array([0, 0], np.int32), np.zeros(2, np.int64))
+    assert block_perm_tile(dup) is None
+
+
+def test_compose_into_einsum_matches_two_pass_execution():
+    """Folding (plan, diag) into an existing (pre, pre_diag) stream-in
+    shuffle must equal running the two scaled gathers back to back."""
+    from repro.core.fabric import compose_into_einsum
+
+    rng = np.random.default_rng(4)
+    n0, n1, n2 = 12, 10, 14
+    g1 = _rand_plan(rng, n1, n0, pad_frac=0.15)
+    g2 = _rand_plan(rng, n2, n1, pad_frac=0.15)
+    d1 = rng.standard_normal(n1)
+    d2 = rng.standard_normal(n2)
+    x = rng.standard_normal(n0)
+
+    ref = apply_plan_np(x.copy(), g1) * d1
+    ref = apply_plan_np(ref, g2) * d2
+
+    plan, diag = compose_into_einsum(g1, d1, g2, d2)
+    got = apply_plan_np(x.copy(), plan) * diag
+    np.testing.assert_allclose(got, ref)
+
+    # degenerate case: nothing to fold into
+    plan0, diag0 = compose_into_einsum(g1, None, None, None)
+    assert plan0 is g1 and diag0 is None
+    # identity stream-in with an existing scale must keep the scale
+    plan1, diag1 = compose_into_einsum(g1, None, None, d1)
+    assert plan1 is g1
+    np.testing.assert_allclose(diag1, d1)
+    plan2, diag2 = compose_into_einsum(g1, d1, None, d1)
+    np.testing.assert_allclose(diag2, d1 * d1)

@@ -135,33 +135,199 @@ def test_fig9_roundtrip_matches_direct_path():
 
 
 def test_fused_equals_unfused_bitwise():
+    """Every fusion level (v1 gather∘gather, v2 cross-einsum folding)
+    reorganizes pure data movement only: outputs are bit-identical."""
     T = 2048
     rng = np.random.default_rng(7)
     x = jnp.asarray(rng.standard_normal(T), jnp.float32)
     g = _fig9(T)
-    yf = np.asarray(g.compile(T, fuse=True)(x))
     yu = np.asarray(g.compile(T, fuse=False)(x))
-    np.testing.assert_array_equal(yf, yu)
+    for level in (1, 2, True):
+        np.testing.assert_array_equal(
+            np.asarray(g.compile(T, fuse=level)(x)), yu)
 
 
 def test_fig9_fused_fewer_fabric_passes():
     """Acceptance: the graph compiler emits fewer fabric passes (and less
-    shuffle traffic) than the unfused op-by-op lowering."""
+    shuffle traffic) at each fusion level than the op-by-op lowering."""
     T = 4096
     g = _fig9(T)
-    fused = g.compile(T, fuse=True)
-    unfused = g.compile(T, fuse=False)
-    assert fused.fabric_pass_count() < unfused.fabric_pass_count()
-    # framing + interleave + bit-reversal + stage-1 gather collapse into
-    # one pass per FFT direction: 2*(log2(256)+1) = 18 vs 37 op-by-op.
-    assert fused.fabric_pass_count() == 18
+    v2 = g.compile(T, fuse=True)
+    v1 = g.compile(T, fuse=1)
+    unfused = g.compile(T, fuse=0)
+    # v1: framing + interleave + bit-reversal + stage-1 gather collapse
+    # into one pass per FFT direction: 2*(log2(256)+1) = 18 vs 37 op-by-op.
     assert unfused.fabric_pass_count() == 37
-    rf = signal_graph_report(fused)
+    assert v1.fabric_pass_count() == 18
+    # v2: the 7 inter-stage butterfly permutations per FFT direction plus
+    # the stft's final scatter and the istft's first (bitrev∘gather)
+    # permutation all fold into the adjacent array passes; only the two
+    # non-bijective passes remain (STFT framing duplicates samples at
+    # hop < frame, the iSTFT deinterleave drops the imaginary lanes).
+    assert v2.fabric_pass_count() == 2 <= 12
+    rf2 = signal_graph_report(v2)
+    rf1 = signal_graph_report(v1)
     ru = signal_graph_report(unfused)
-    assert rf["shuffle_words"] < 0.6 * ru["shuffle_words"]
-    assert rf["macs"] == ru["macs"] > 0
-    assert rf["fabric_passes"] == 18
-    assert rf["total"] > 0 and rf["time_s"] > 0
+    assert rf1["shuffle_words"] < 0.6 * ru["shuffle_words"]
+    assert rf2["shuffle_words"] < 0.1 * ru["shuffle_words"]
+    assert rf2["macs"] == rf1["macs"] == ru["macs"] > 0
+    assert rf2["fabric_passes"] == 2
+    assert rf2["total"] > 0 and rf2["time_s"] > 0
+    # attribution: the report accounts for every fold, and a folded word
+    # is moved to the lock-step stream-in/out path, not dropped.
+    assert rf2["folded_passes"] == 16 == rf2["streamed_passes"]
+    assert rf2["shuffle_words"] + rf2["streamed_words"] \
+        == rf1["shuffle_words"]
+    assert ru["folded_passes"] == ru["streamed_words"] == 0
+
+
+def test_v2_streamed_plans_cover_folded_names():
+    T = 2048
+    v2 = _fig9(T).compile(T, fuse=2)
+    folded = v2.folded_pass_names()
+    assert len(folded) == len(set(folded)) == 16
+    # every folded pass became a pre/post stream shuffle on some einsum
+    assert len(v2.streamed_shuffles()) == 16
+    # array passes are unchanged by the fold (same einsums, same MACs)
+    assert v2.array_pass_count() == _fig9(T).compile(
+        T, fuse=1).array_pass_count() == 16
+
+
+def test_v2_dwt_identity_window_is_eliminated():
+    """rule 1: the haar polyphase window is a row-aligned identity, so
+    the v2 pass removes the fabric pass entirely (db2 windows duplicate
+    samples and must keep theirs)."""
+    rng = np.random.default_rng(9)
+    x = jnp.asarray(rng.standard_normal(64), jnp.float32)
+    for wavelet, v2_passes in (("haar", 0), ("db2", 1)):
+        g = SignalGraph(f"dwt_{wavelet}")
+        g.dwt("w", "input", wavelet=wavelet)
+        v1 = g.compile(64, fuse=1)
+        v2 = g.compile(64, fuse=2)
+        assert v1.fabric_pass_count() == 1
+        assert v2.fabric_pass_count() == v2_passes
+        np.testing.assert_array_equal(np.asarray(v2(x)), np.asarray(v1(x)))
+
+
+def test_commute_row_perm_rule_bitwise():
+    """rule 1 with a non-identity row permutation: [G_perm, E] rewrites to
+    [E, G_rows] with bit-identical results and the row gather eligible
+    for downstream gather∘gather fusion."""
+    from repro.core.fabric import ShufflePlan, is_permutation
+    from repro.signal.graph import (EinsumStep, GatherStep, _fuse_steps,
+                                    _run_steps)
+
+    rng = np.random.default_rng(10)
+    rows, cin, cout = 6, 4, 3
+    sigma = rng.permutation(rows)
+    gi = (sigma[:, None] * cin + np.arange(cin)[None, :]).ravel()
+    gather = GatherStep("rowperm", ShufflePlan(
+        gi.astype(np.int32), np.zeros(gi.size, np.int64), 16))
+    W = rng.standard_normal((cin, cout)).astype(np.float32)
+    ein = EinsumStep("proj", "...rc,co->...ro", W, reshape_in=(rows, cin),
+                     out_rank=2, rows=rows, cin=cin, cout=cout)
+    steps = [gather, ein]
+    from repro.signal.graph import _commute_row_perms
+    commuted = _commute_row_perms(list(steps), in_len=rows * cin)
+    # rule 1 alone: the permutation moved to the output side as a pure
+    # row gather at cout granularity...
+    assert isinstance(commuted[0], EinsumStep) and commuted[0].pre is None
+    assert isinstance(commuted[1], GatherStep)
+    assert is_permutation(commuted[1].plan)
+    assert commuted[1].plan.n_out == rows * cout
+    assert commuted[0].folded == ("rowperm",)
+    # ...which the full pipeline then absorbs as the einsum's stream-out,
+    # leaving no standalone fabric pass at all.
+    fused = _fuse_steps(list(steps), 2, in_len=rows * cin)
+    assert len(fused) == 1 and isinstance(fused[0], EinsumStep)
+    assert fused[0].pre is None and is_permutation(fused[0].post)
+    x = jnp.asarray(rng.standard_normal((2, rows * cin)), jnp.float32)
+    ref = np.asarray(_run_steps(steps, x, None))
+    np.testing.assert_array_equal(
+        np.asarray(_run_steps(commuted, x, None)), ref)
+    np.testing.assert_array_equal(
+        np.asarray(_run_steps(fused, x, None)), ref)
+
+
+def test_stream_fold_rejects_non_permutations():
+    """rule 2 must leave duplicating / padding / selecting gathers as
+    standalone passes: only bijective plans can ride the stream."""
+    from repro.core.fabric import PAD, ShufflePlan
+    from repro.signal.graph import EinsumStep, GatherStep, _fuse_steps
+
+    rng = np.random.default_rng(11)
+    W = rng.standard_normal((4, 4)).astype(np.float32)
+    for gi in (np.array([0, 0, 1, 2, 3, 4, 5, 6]),          # duplication
+               np.array([0, PAD, 1, 2, 3, PAD, 4, 5]),      # padding
+               np.array([0, 2, 4, 6, 8, 10, 12, 14])):      # selection
+        g = GatherStep("g", ShufflePlan(gi.astype(np.int32),
+                                        np.zeros(8, np.int64), 16))
+        e = EinsumStep("e", "...rc,co->...ro", W, reshape_in=(2, 4),
+                       out_rank=2, rows=2, cin=4, cout=4)
+        fused = _fuse_steps([g, e], 2)
+        assert len(fused) == 2 and isinstance(fused[0], GatherStep)
+        assert fused[1].pre is None
+
+
+def test_prefix_selection_is_not_dropped_as_identity():
+    """A plan whose indices are arange(n) but whose *source* is longer
+    (a truncating prefix selection) must not be deleted or commuted by
+    the v2 pass — only executed-in-place folds are allowed for it."""
+    from repro.core.fabric import ShufflePlan
+    from repro.signal.graph import (EinsumStep, GatherStep, _fuse_steps,
+                                    _run_steps)
+
+    rng = np.random.default_rng(12)
+    # looks like an identity of 8 elements, but reads a 16-element input
+    sel = GatherStep("sel", ShufflePlan(np.arange(8, dtype=np.int32),
+                                        np.zeros(8, np.int64), 16))
+    W = rng.standard_normal((4, 4)).astype(np.float32)
+    ein = EinsumStep("e", "...rc,co->...ro", W, reshape_in=(2, 4),
+                     out_rank=2, rows=2, cin=4, cout=4)
+    x = jnp.asarray(rng.standard_normal((3, 16)), jnp.float32)
+    ref = np.asarray(_run_steps([sel, ein], x, None))
+
+    # with the true source length the gather survives as-is
+    kept = _fuse_steps([sel, ein], 2, in_len=16)
+    assert isinstance(kept[0], GatherStep)
+    np.testing.assert_array_equal(np.asarray(_run_steps(kept, x, None)), ref)
+
+    # with an unknown source length only in-place stream folding may
+    # fire, which still executes the plan verbatim — never a deletion
+    unknown = _fuse_steps([sel, ein], 2, in_len=None)
+    assert any(isinstance(s, GatherStep) or
+               (isinstance(s, EinsumStep) and s.pre is not None)
+               for s in unknown)
+    np.testing.assert_array_equal(
+        np.asarray(_run_steps(unknown, x, None)), ref)
+
+
+def test_multidim_suffix_rejected_by_flat_stages():
+    """dwt/fir/dct/stft/real-fft plans index a flattened rows*n layout;
+    feeding them a multi-dim suffix (e.g. dwt∘dwt) used to gather out of
+    bounds silently — it must raise at compile time instead."""
+    g = SignalGraph("dd")
+    g.dwt("w1", "input", wavelet="haar")
+    g.dwt("w2", "w1")                      # w1 suffix is (32, 2)
+    with pytest.raises(ValueError, match="1-D suffix"):
+        g.compile(64)
+    g2 = SignalGraph("md")
+    g2.stft("spec", frame=64, hop=32)
+    g2.magnitude("mag", "spec", onesided=True)
+    g2.dct("d", "mag")                     # mag suffix is (F, 33)
+    with pytest.raises(ValueError, match="1-D suffix"):
+        g2.compile(256)
+
+
+def test_compile_rejects_bad_fuse_level():
+    g = _fig9(1024)
+    for bad in (3, -1, 1.5, "full"):
+        with pytest.raises(ValueError):
+            g.compile(1024, fuse=bad)
+    # numpy bools behave like python bools (True -> full v2)
+    assert g.compile(1024, fuse=np.True_).fuse_level == 2
+    assert g.compile(1024, fuse=np.False_).fuse_level == 0
+    assert g.compile(1024, fuse=np.int64(1)).fuse_level == 1
 
 
 def test_graph_batched_and_jit_consistent():

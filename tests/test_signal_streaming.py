@@ -122,6 +122,26 @@ def test_streaming_pre_and_post_sample_stages():
     np.testing.assert_allclose(got, off, atol=2e-6, rtol=1e-5)
 
 
+def test_streaming_v2_fusion_bit_identical_across_levels():
+    """Carried-state offsets survive the v2-rewritten step list: the
+    stream compiled with cross-einsum folding matches both the offline
+    v2 graph and the completely unfused offline lowering, bit for bit."""
+    T = 4096
+    rng = np.random.default_rng(7)
+    x = rng.standard_normal(T).astype(np.float32)
+    g = SignalGraph("fig9")
+    g.stft("spec", frame=FRAME, hop=HOP)
+    g.dnn("mask", "spec", fn=lambda p, z: jax.nn.sigmoid(jnp.abs(z) - 1.0))
+    g.mul("enh", "spec", "mask")
+    g.istft("out", "enh", hop=HOP, length=T)
+    g.output("out")
+    off_unfused = np.asarray(g.compile(T, fuse=False)(jnp.asarray(x)))
+    off_v2 = np.asarray(g.compile(T, fuse=2)(jnp.asarray(x)))
+    got = _stream(g, x, [300, 812, 1500, 3000], block_frames=4, fuse=2)
+    assert np.array_equal(off_v2, off_unfused)
+    assert np.array_equal(got, off_v2)
+
+
 def test_streaming_chunk_pattern_invariance():
     """Output is independent of how the input is chunked."""
     T = 2048
