@@ -1,0 +1,240 @@
+"""Serving-level benchmark: continuous-batched DSP + LLM co-scheduling.
+
+Simulates an offered load of mixed-length DSP requests and LLM decode
+requests against one :class:`CoScheduler` per policy, measuring
+
+  * request latency (p50 / p95, in perf-model accelerator cycles from
+    arrival to completion — the virtual clock is the cumulative cost of
+    everything the scheduler executed);
+  * the DSP/DL array-occupancy split at the end of the offered window
+    (the knob ``cost_balanced`` steers; under the default skewed load the
+    round-robin split collapses onto the DSP side while ``cost_balanced``
+    holds its target);
+  * streaming sessions: N concurrent connections fed in lock-step, with
+    the jitted-core-calls-per-tick ratio (<= 1 for same-graph sessions —
+    the batched-chunk-step acceptance number).
+
+Output: one CSV block per section (like the other benches) and, with
+``--json PATH``, a machine-readable summary.
+
+    PYTHONPATH=src python -m benchmarks.signal_service_bench [--smoke]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+from typing import Dict, List
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+FRAME, HOP, MAXLEN = 64, 32, 512
+POLICIES = ("round_robin", "latency_aware", "cost_balanced")
+DSP_TARGET = 0.5
+
+
+def _graph():
+    from repro.signal import SignalGraph
+
+    g = SignalGraph("fig9_small")
+    g.stft("spec", frame=FRAME, hop=HOP)
+    g.dnn("mask", "spec", fn=lambda p, z: jax.nn.sigmoid(jnp.abs(z) - 1.0))
+    g.mul("enh", "spec", "mask")
+    g.istft("out", "enh", hop=HOP)
+    g.output("out")
+    return g
+
+
+def _engine():
+    from repro.configs import get_config
+    from repro.models.zoo import get_model
+    from repro.serving import ServingEngine
+
+    cfg = get_config("starcoder2-3b").reduced(
+        n_layers=2, d_model=32, n_heads=4, d_ff=64, vocab=128)
+    bundle = get_model(cfg)
+    eng = ServingEngine(bundle, batch_size=2)
+    eng.load(bundle.init(jax.random.PRNGKey(0)))
+    return eng
+
+
+def simulate(policy: str, ticks: int, dsp_per_tick: float,
+             llm_per_tick: float, seed: int = 0) -> Dict:
+    """Open-loop offered load for ``ticks`` scheduler ticks, then drain.
+    Latency clock = cumulative perf-model cycles of executed work."""
+    from repro.serving import (CoScheduler, CostBalancedPolicy, Request,
+                               SignalRequest, SignalService)
+
+    eng = _engine()
+    svc = SignalService(batch_size=4)
+    svc.register("fig9", _graph())
+    pol = CostBalancedPolicy(DSP_TARGET) if policy == "cost_balanced" \
+        else policy
+    sched = CoScheduler(eng, svc, policy=pol)
+
+    rng = np.random.default_rng(seed)
+    arrive_cycle: Dict[int, int] = {}
+    done_cycle: Dict[int, int] = {}
+    rid = 0
+    lid = 0
+    dsp_acc = llm_acc = 0.0
+    for t in range(ticks):
+        dsp_acc += dsp_per_tick
+        while dsp_acc >= 1.0:
+            dsp_acc -= 1.0
+            length = int(rng.integers(FRAME, MAXLEN + 1))
+            now = sched.llm_cycles + sched.dsp_cycles
+            sched.submit_signal(SignalRequest(
+                rid=rid, graph="fig9",
+                samples=rng.standard_normal(length).astype(np.float32),
+                deadline=now + 200_000.0))
+            arrive_cycle[rid] = now
+            rid += 1
+        llm_acc += llm_per_tick
+        while llm_acc >= 1.0:
+            llm_acc -= 1.0
+            now = sched.llm_cycles + sched.dsp_cycles
+            sched.submit_llm(Request(
+                rid=10_000_000 + lid, max_new=8,
+                prompt=[1 + int(x) for x in rng.integers(1, 100, size=4)],
+                deadline=now + 400_000.0))
+            lid += 1
+        sched.tick()
+        now = sched.llm_cycles + sched.dsp_cycles
+        for r in sched.dsp_results:
+            done_cycle.setdefault(r, now)
+    occ_loaded = sched.occupancy()             # split under sustained load
+    while not sched.idle:                      # drain the backlog
+        sched.tick()
+        now = sched.llm_cycles + sched.dsp_cycles
+        for r in sched.dsp_results:
+            done_cycle.setdefault(r, now)
+
+    lats = sorted(done_cycle[r] - arrive_cycle[r] for r in done_cycle)
+    pct = (lambda p: float(lats[min(len(lats) - 1,
+                                    int(p * len(lats)))]) if lats else 0.0)
+    return {
+        "policy": policy,
+        "offered_dsp_per_tick": dsp_per_tick,
+        "offered_llm_per_tick": llm_per_tick,
+        "ticks_offered": ticks,
+        "ticks_total": sched.ticks,
+        "dsp_completed": len(done_cycle),
+        "llm_completed": len(sched.llm_results),
+        "p50_cycles": pct(0.50),
+        "p95_cycles": pct(0.95),
+        "dsp_share_loaded": occ_loaded["dsp_share"],
+        "dsp_share_final": sched.occupancy()["dsp_share"],
+        "llm_cycles": sched.llm_cycles,
+        "dsp_cycles": sched.dsp_cycles,
+    }
+
+
+def simulate_sessions(n_sessions: int, n_ticks: int,
+                      chunk: int = 4 * HOP, seed: int = 1) -> Dict:
+    """Lock-stepped streaming sessions: jitted core calls per tick must
+    stay at 1 for same-graph sessions (batched chunk steps)."""
+    from repro.serving import SignalService
+
+    svc = SignalService(block_frames=4)
+    svc.register("fig9", _graph())
+    rng = np.random.default_rng(seed)
+    sessions = [svc.open_stream("fig9") for _ in range(n_sessions)]
+    calls: List[int] = []
+    emitted = 0
+    for _ in range(n_ticks):
+        for s in sessions:
+            s.feed(jnp.asarray(rng.standard_normal(chunk).astype(
+                np.float32)))
+        calls.append(svc.stream_step())
+        for s in sessions:
+            emitted += s.read().shape[-1]
+    for s in sessions:
+        emitted += s.close().shape[-1]
+    active = [c for c in calls if c]
+    return {
+        "sessions": n_sessions,
+        "ticks": n_ticks,
+        "core_calls": sum(calls),
+        "max_calls_per_tick": max(calls) if calls else 0,
+        "calls_per_active_tick": (sum(active) / len(active)) if active
+        else 0.0,
+        "samples_emitted": emitted,
+    }
+
+
+LOAD_HEADER = ("policy,dsp_per_tick,llm_per_tick,dsp_done,llm_done,"
+               "p50_cycles,p95_cycles,dsp_share_loaded,dsp_share_final")
+
+
+def format_load_row(r: Dict) -> str:
+    return (f"{r['policy']},{r['offered_dsp_per_tick']:g},"
+            f"{r['offered_llm_per_tick']:g},{r['dsp_completed']},"
+            f"{r['llm_completed']},{r['p50_cycles']:.0f},"
+            f"{r['p95_cycles']:.0f},{r['dsp_share_loaded']:.3f},"
+            f"{r['dsp_share_final']:.3f}")
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--ticks", type=int, default=600,
+                    help="offered-load window (scheduler ticks)")
+    ap.add_argument("--sessions", type=int, default=4)
+    ap.add_argument("--session-ticks", type=int, default=12)
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny sweep for CI")
+    ap.add_argument("--json", type=str, default=None,
+                    help="also write a JSON summary to this path")
+    args = ap.parse_args(argv)
+
+    ticks = 120 if args.smoke else args.ticks
+    # offered load (dsp, llm) requests per tick: a balanced point plus a
+    # DSP-skewed point where round_robin's occupancy visibly drifts while
+    # cost_balanced holds its target (the acceptance number).
+    sweep = [(0.80, 0.20)] if args.smoke else [(0.15, 0.20), (0.80, 0.20)]
+
+    load_rows = []
+    print(LOAD_HEADER)
+    for dsp_rate, llm_rate in sweep:
+        for policy in POLICIES:
+            r = simulate(policy, ticks, dsp_rate, llm_rate)
+            load_rows.append(r)
+            print(format_load_row(r))
+
+    sess = simulate_sessions(args.sessions,
+                             6 if args.smoke else args.session_ticks)
+    print("\nsessions,ticks,core_calls,max_calls_per_tick,"
+          "calls_per_active_tick")
+    print(f"{sess['sessions']},{sess['ticks']},{sess['core_calls']},"
+          f"{sess['max_calls_per_tick']},"
+          f"{sess['calls_per_active_tick']:.2f}")
+    if sess["max_calls_per_tick"] > 1:
+        raise SystemExit("FAIL: same-graph sessions issued more than one "
+                         "jitted core call in a tick")
+    cb = [r for r in load_rows if r["policy"] == "cost_balanced"]
+    worst = max(abs(r["dsp_share_loaded"] - DSP_TARGET) for r in cb)
+    print(f"\ncost_balanced occupancy error vs target {DSP_TARGET}: "
+          f"{worst:.3f}")
+    if worst > 0.10:
+        raise SystemExit("FAIL: cost_balanced occupancy split drifted "
+                         ">10% from target under load")
+
+    if args.json:
+        payload = {"load_sweep": load_rows, "streaming": sess,
+                   "dsp_target": DSP_TARGET}
+        d = os.path.dirname(args.json)
+        if d:
+            os.makedirs(d, exist_ok=True)
+        with open(args.json, "w") as f:
+            json.dump(payload, f, indent=2)
+        print(f"wrote {args.json}")
+
+
+if __name__ == "__main__":
+    main()

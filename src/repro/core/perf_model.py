@@ -241,6 +241,47 @@ def signal_graph_report(compiled, aw: int = 16, ww: int = 16,
 
 
 # --------------------------------------------------------------------------
+# Scheduler cost estimates (consumed by the serving CoScheduler policies)
+# --------------------------------------------------------------------------
+
+def decode_step_layers(cfg, batch: int = 1) -> List[ConvLayer]:
+    """One LLM decode step as array FC layers (per token: the attention
+    projections, the FF pair, and the LM head), batched over ``batch``
+    rows.  A deliberate first-order model — the CoScheduler only needs
+    *relative* cost between a decode step and a DSP batch, not absolute
+    latency."""
+    d, ff = cfg.d_model, cfg.d_ff
+    vocab = getattr(cfg, "padded_vocab", cfg.vocab)
+    layers = []
+    for i in range(cfg.n_layers):
+        layers.append(ConvLayer(f"l{i}.qkvo", h=batch, w=1, k=1,
+                                cin=d, cout=4 * d))
+        layers.append(ConvLayer(f"l{i}.ff", h=batch, w=1, k=1,
+                                cin=d, cout=2 * ff))
+    layers.append(ConvLayer("head", h=batch, w=1, k=1, cin=d, cout=vocab))
+    return layers
+
+
+def decode_step_cost(cfg, batch: int = 1, aw: int = 16, ww: int = 16,
+                     hw: SigDLAHW = SigDLAHW()) -> int:
+    """Estimated array cycles for ONE batched decode step of ``cfg``."""
+    w = Workload("decode_step", decode_step_layers(cfg, batch))
+    return sigdla_cycles(w, aw, ww, hw, weights_resident=True)["total"]
+
+
+def step_cost_estimate(compiled, batch: int = 1, aw: int = 16,
+                       ww: int = 16, hw: SigDLAHW = SigDLAHW()) -> int:
+    """Estimated array cycles for ONE batched execution of a compiled
+    signal graph (:func:`signal_graph_report` total, scaled by the batch
+    size — the graph's layers/passes all scale with the leading batch
+    axis).  The cost-balanced scheduling policy compares this against
+    :func:`decode_step_cost` to keep the DSP/DL occupancy split near its
+    target (the paper's §V utilization argument)."""
+    rep = signal_graph_report(compiled, aw, ww, hw)
+    return int(rep["total"]) * max(1, int(batch))
+
+
+# --------------------------------------------------------------------------
 # Baseline cycle models (FFT / FIR / DCT on DSP-class processors)
 # --------------------------------------------------------------------------
 

@@ -1,6 +1,12 @@
-from .engine import Request, ServingEngine
+from .engine import DecodeWave, Request, ServingEngine
 from .quantized import dequantize_tree, quantize_tree
-from .signal_service import CoScheduler, SignalRequest, SignalService
+from .signal_service import (CoScheduler, CostBalancedPolicy,
+                             LatencyAwarePolicy, RoundRobinPolicy,
+                             SchedulePolicy, SignalRequest, SignalService,
+                             StreamSession, get_policy)
 
-__all__ = ["ServingEngine", "Request", "quantize_tree", "dequantize_tree",
-           "SignalService", "SignalRequest", "CoScheduler"]
+__all__ = ["ServingEngine", "Request", "DecodeWave",
+           "quantize_tree", "dequantize_tree",
+           "SignalService", "SignalRequest", "StreamSession", "CoScheduler",
+           "SchedulePolicy", "RoundRobinPolicy", "LatencyAwarePolicy",
+           "CostBalancedPolicy", "get_policy"]

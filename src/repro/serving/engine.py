@@ -6,11 +6,21 @@ slots are refilled from the queue (slot-level continuous batching); decode
 is one jit'd step for the whole batch.  Optional int8/int4 weight
 quantization via serving/quantized.py.  This is the serving counterpart
 the decode_32k / long_500k dry-run cells lower.
+
+:class:`DecodeWave` is the incremental form used by the LLM+DSP
+CoScheduler: prefill once, then one jitted decode step per ``step()``
+call, so a scheduler can interleave other work between token steps.  It
+also carries the continuous-batching hooks — per-request completion
+tracking (:meth:`DecodeWave.pop_done`) and mid-flight admission
+(:meth:`DecodeWave.admit`, greedy decode only) — plus a per-step cost
+estimate (:meth:`ServingEngine.decode_step_cost`) for cost-aware
+scheduling policies.
 """
 
 from __future__ import annotations
 
 import dataclasses
+import math
 from typing import Any, Dict, List, Optional
 
 import jax
@@ -27,6 +37,7 @@ class Request:
     max_new: int = 16
     out: List[int] = dataclasses.field(default_factory=list)
     done: bool = False
+    deadline: float = math.inf     # scheduler hint (latency_aware policy)
 
 
 class ServingEngine:
@@ -49,9 +60,10 @@ class ServingEngine:
         self.params = params
 
     # -- single-batch generation (prefill once, decode loop) ---------------
-    def generate(self, prompts: List[List[int]], max_new: int = 16,
-                 rng: Optional[jax.Array] = None) -> List[List[int]]:
-        assert len(prompts) <= self.batch_size
+    def prefill_prompts(self, prompts: List[List[int]], max_new: int):
+        """Left-pad ``prompts`` into one batch and prefill.  Returns
+        ``(logits, cache, plen)``.  Shared by :meth:`generate` and
+        :class:`DecodeWave` so their token streams stay identical."""
         b = len(prompts)
         plen = max(len(p) for p in prompts)
         toks = np.zeros((b, plen), np.int32)
@@ -63,6 +75,13 @@ class ServingEngine:
                 (b, self.cfg.enc_seq, self.cfg.d_model), jnp.float32)
         logits, cache = self.bundle.prefill(self.params, batch,
                                             max_len=plen + max_new)
+        return logits, cache, plen
+
+    def generate(self, prompts: List[List[int]], max_new: int = 16,
+                 rng: Optional[jax.Array] = None) -> List[List[int]]:
+        assert len(prompts) <= self.batch_size
+        b = len(prompts)
+        logits, cache, _ = self.prefill_prompts(prompts, max_new)
         outs: List[List[int]] = [[] for _ in range(b)]
         rng = rng if rng is not None else jax.random.PRNGKey(0)
         cur = self._sample(logits[:, -1], rng)
@@ -93,3 +112,131 @@ class ServingEngine:
             for r, o in zip(wave, outs):
                 results[r.rid] = o[: r.max_new]
         return results
+
+    # -- scheduler hooks ----------------------------------------------------
+    def decode_step_cost(self, batch: Optional[int] = None) -> int:
+        """Estimated accelerator cycles for one batched decode step (see
+        :func:`repro.core.perf_model.decode_step_cost`); cost-aware
+        CoScheduler policies weigh this against DSP batch costs.  The
+        analytic model is pure in (cfg, batch), so results are memoized
+        per batch size (the scheduler asks every tick)."""
+        b = batch or self.batch_size
+        cache = getattr(self, "_step_cost_cache", None)
+        if cache is None:
+            cache = self._step_cost_cache = {}
+        if b not in cache:
+            from ..core.perf_model import decode_step_cost
+            cache[b] = decode_step_cost(self.cfg, b)
+        return cache[b]
+
+
+class DecodeWave:
+    """Incremental equivalent of :meth:`ServingEngine.generate` for one
+    wave of requests: prefill once, then one jitted decode step per
+    :meth:`step` call.  For a fixed member set the produced tokens are
+    identical to ``generate`` (same prefill shapes, same rng stream).
+
+    Continuous-batching hooks:
+
+    * :meth:`pop_done` — harvest requests that reached their ``max_new``
+      so the scheduler can report them before the wave finishes;
+    * :meth:`admit` — join new requests mid-flight.  Admission re-prefills
+      the merged wave over each active request's prompt + generated
+      prefix; greedy decode (temperature 0) is context-deterministic, so
+      every request continues exactly as if it had run alone *modulo
+      left-padding*: requests whose padded prefix lengths change relative
+      positions may diverge for position-sensitive models, which is the
+      same caveat batched ``generate`` already has.  Sampling
+      (temperature > 0) would restart the rng stream, so admission
+      requires greedy decode.
+    """
+
+    def __init__(self, engine: ServingEngine, reqs: List[Request]):
+        self.engine = engine
+        self.reqs = list(reqs)
+        self.outs: List[List[int]] = [[] for _ in self.reqs]
+        self._reported: set = set()           # rids harvested early
+        self._prefill()
+
+    def _prefill(self) -> None:
+        if not self.reqs:
+            raise ValueError("DecodeWave needs at least one request")
+        engine = self.engine
+        prompts = [list(r.prompt) + o for r, o in zip(self.reqs, self.outs)]
+        self.max_new = max(r.max_new - len(o)
+                           for r, o in zip(self.reqs, self.outs))
+        logits, self.cache, plen = engine.prefill_prompts(prompts,
+                                                          self.max_new)
+        self.prefill_tokens = plen            # for scheduler cost accounting
+        self.rng = jax.random.PRNGKey(0)
+        self.cur = engine._sample(logits[:, -1], self.rng)
+        self.steps = 0
+
+    @property
+    def done(self) -> bool:
+        return self.steps >= self.max_new
+
+    @property
+    def size(self) -> int:
+        return len(self.reqs)
+
+    def free_slots(self, capacity: Optional[int] = None) -> int:
+        """Slots a scheduler may fill via :meth:`admit`: unused capacity
+        plus members that already reached their own ``max_new``."""
+        cap = capacity if capacity is not None else self.engine.batch_size
+        finished = sum(1 for r, o in zip(self.reqs, self.outs)
+                       if len(o) >= r.max_new)
+        return max(0, cap - len(self.reqs)) + finished
+
+    def step(self) -> None:
+        for i, (r, o) in enumerate(zip(self.reqs, self.outs)):
+            if len(o) < r.max_new:
+                o.append(int(self.cur[i]))
+        self.steps += 1
+        if self.done:
+            return
+        logits, self.cache = self.engine._decode(
+            self.engine.params, self.cache, {"tokens": self.cur[:, None]})
+        self.rng, sub = jax.random.split(self.rng)
+        self.cur = self.engine._sample(logits[:, -1], sub)
+
+    def pop_done(self) -> Dict[int, List[int]]:
+        """Harvest requests that reached their ``max_new`` and were not
+        harvested before.  Members stay in the batch (their rows keep
+        decoding until the wave ends or :meth:`admit` re-prefills) — this
+        only lets the scheduler report results early."""
+        out: Dict[int, List[int]] = {}
+        for r, o in zip(self.reqs, self.outs):
+            if len(o) >= r.max_new and r.rid not in self._reported:
+                out[r.rid] = o[: r.max_new]
+                self._reported.add(r.rid)
+        return out
+
+    def admit(self, reqs: List[Request]) -> Dict[int, List[int]]:
+        """Mid-flight admission: merge ``reqs`` into the wave.  Finished
+        members are harvested (returned, as in :meth:`pop_done`) and
+        their slots freed; the merged wave re-prefills over prompt +
+        generated prefix and decoding resumes.  Greedy decode only."""
+        if self.engine.temperature > 0.0:
+            raise ValueError("mid-flight admission requires greedy decode "
+                             "(temperature == 0)")
+        if not reqs:
+            return self.pop_done()            # nothing to join: no re-prefill
+        finished: Dict[int, List[int]] = {}
+        keep_r, keep_o = [], []
+        for r, o in zip(self.reqs, self.outs):
+            if len(o) >= r.max_new:
+                if r.rid not in self._reported:
+                    finished[r.rid] = o[: r.max_new]
+                    self._reported.add(r.rid)
+            else:
+                keep_r.append(r)
+                keep_o.append(o)
+        self.reqs = keep_r + list(reqs)
+        self.outs = keep_o + [[] for _ in reqs]
+        self._prefill()
+        return finished
+
+    def results(self) -> Dict[int, List[int]]:
+        return {r.rid: o[: r.max_new]
+                for r, o in zip(self.reqs, self.outs)}

@@ -1,36 +1,62 @@
-"""Signal-graph serving: batched DSP requests co-scheduled with LLM decode.
+"""Signal-graph serving: continuous-batched DSP requests co-scheduled
+with LLM decode.
 
 The paper's system-level story is ONE array serving both DL and DSP work
 concurrently (Fig 9 runs an FFT->CNN->iFFT pipeline while the same DLA
 keeps its deep-learning duties).  This module is the serving counterpart:
 
   * :class:`SignalService` — registry of named :class:`SignalGraph`
-    pipelines.  Pending requests are grouped by (graph, length), stacked
-    into one batch and executed as a single jitted call, so DSP traffic
-    gets the same batching amortization as token traffic.
+    pipelines with a continuous-batching request loop.  Mixed-length
+    requests are padded up to a small set of compile-cached **bucket**
+    lengths (powers of two, or config-supplied) and batched per
+    ``(graph, bucket)``; per-request valid-length masks are threaded
+    through the compiled graph (:meth:`CompiledSignalGraph.masked_jit`)
+    so padded results equal unpadded execution — bit-identical for the
+    FFT/IIR/pointwise stage classes, float32-ULP-close for FIR im2col
+    GEMMs whose XLA lowering is row-count dependent (the streaming
+    runtime's caveat, tests/test_signal_bucketing.py).  New
+    requests join the next tick's batch mid-flight — the wave is
+    re-formed from the live queue every step, like token-level
+    continuous batching in :mod:`repro.serving.engine`.
+  * :class:`StreamSession` — a per-connection streaming handle
+    (:meth:`SignalService.open_stream`): chunked submissions accumulate
+    in per-connection :class:`~repro.signal.streaming.StreamState`
+    pytrees, and every :meth:`SignalService.stream_step` stacks the
+    ready blocks of same-graph sessions into ONE jitted core call.
   * :class:`CoScheduler` — drives a :class:`~repro.serving.engine.
-    ServingEngine` and a :class:`SignalService` on one step loop: every
-    tick interleaves one batched LLM decode step with one batched DSP
-    graph execution, the two workloads time-sharing the accelerator
-    exactly like the paper's unified array.
+    ServingEngine` and a :class:`SignalService` on one step loop, with a
+    pluggable :class:`SchedulePolicy` deciding what runs each tick:
+    ``round_robin`` (one decode step + one DSP batch per tick, the
+    original behaviour), ``latency_aware`` (earliest-deadline-first
+    across both workload classes), or ``cost_balanced`` (uses
+    :func:`repro.core.perf_model.step_cost_estimate` /
+    ``decode_step_cost`` to keep the DSP/DL array-occupancy split near a
+    target — the paper's §V utilization argument).
 
 Greedy-decode results are identical to ``ServingEngine.serve`` and DSP
-results identical to offline graph execution (tests/test_signal_service.py).
+results identical to offline graph execution (tests/test_signal_service.py,
+tests/test_signal_bucketing.py).
 """
 
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional, Tuple
+import math
+from typing import Callable, Dict, List, Optional, Tuple, Union
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from ..signal.graph import CompiledSignalGraph, SignalGraph
-from .engine import Request, ServingEngine
+from ..signal.graph import CompiledSignalGraph, FuseLevel, SignalGraph
+from ..signal.streaming import (StreamState, StreamStructure, commit_frames,
+                                drain_state, finalize_piece, push_chunk,
+                                ready_spec, take_block)
+from .engine import DecodeWave, Request, ServingEngine
 
-__all__ = ["SignalRequest", "SignalService", "CoScheduler"]
+__all__ = ["SignalRequest", "SignalService", "StreamSession", "CoScheduler",
+           "SchedulePolicy", "RoundRobinPolicy", "LatencyAwarePolicy",
+           "CostBalancedPolicy", "get_policy", "TickPlan"]
 
 
 @dataclasses.dataclass
@@ -38,75 +64,293 @@ class SignalRequest:
     rid: int
     graph: str
     samples: np.ndarray            # (T,) one channel of signal
+    deadline: float = math.inf     # scheduler hint (latency_aware policy)
     done: bool = False
+    error: Optional[str] = None    # set when the service drops the request
+    seq: int = -1                  # arrival order (assigned by submit)
+
+
+@dataclasses.dataclass
+class _Registration:
+    graph: SignalGraph
+    params: object
+    struct: Optional[StreamStructure]   # None => not bucketable/streamable
+
+
+@dataclasses.dataclass(frozen=True)
+class GroupInfo:
+    """One pending batch group: requests sharing a (graph, length-bucket)
+    compiled program."""
+    key: Tuple[str, int]
+    count: int
+    oldest_seq: int
+    earliest_deadline: float
 
 
 class SignalService:
-    """Batched serving of registered signal graphs.
+    """Continuous-batched serving of registered signal graphs.
 
-    Compiled callables are cached per (graph, length, batch) — like XLA
-    serving everywhere else in this repo, steady-state traffic with shared
-    shapes hits the cache and pays one fused program launch per batch.
+    Compiled callables are cached per ``(graph, bucket)`` — requests of
+    any length up to a bucket share that bucket's XLA program, padded
+    and masked back to the unpadded results (bitwise, except FIR im2col
+    GEMMs which match to float32 ULPs).  ``buckets`` optionally pins
+    the admissible lengths (sorted ascending); the default is powers of
+    two.  Graphs whose math is not local in time (a ``dct``/``fft``/
+    ``dwt`` over the raw input axis) cannot be masked and fall back to
+    exact-length grouping; ``bucketing=False`` forces that for all
+    graphs.
     """
 
-    def __init__(self, batch_size: int = 8, fuse: "bool | int" = True):
+    def __init__(self, batch_size: int = 8,
+                 fuse: "FuseLevel | int" = FuseLevel.STREAM,
+                 buckets: Optional[List[int]] = None,
+                 bucketing: bool = True,
+                 block_frames: int = 8):
         self.batch_size = batch_size
-        self.fuse = fuse
-        self._graphs: Dict[str, Tuple[SignalGraph, object]] = {}
+        self.fuse = FuseLevel.coerce(fuse)
+        self.buckets = sorted(int(b) for b in buckets) if buckets else None
+        self.bucketing = bucketing
+        self.block_frames = int(block_frames)
+        self._graphs: Dict[str, _Registration] = {}
         self._compiled: Dict[Tuple[str, int], CompiledSignalGraph] = {}
         self._jitted: Dict[Tuple[str, int], object] = {}
+        self._masked_jitted: Dict[Tuple[str, int], object] = {}
+        self._cost_cache: Dict[Tuple[str, int], int] = {}
         self._queue: List[SignalRequest] = []
+        self._seq = 0
+        self._sessions: Dict[str, List["StreamSession"]] = {}
+        self._sid = 0
+        # est_cycles accumulates the perf-model cost of every executed
+        # batch (one-shot + streaming); the CoScheduler reads deltas for
+        # its occupancy accounting.
+        self.est_cycles = 0
+        self.stats = {"compiles": 0, "batches": 0, "bucketed": 0,
+                      "exact": 0, "dropped": 0, "detached_sessions": 0,
+                      "core_calls": 0, "flush_core_calls": 0,
+                      "stream_ticks": 0}
 
     # -- registry -----------------------------------------------------------
     def register(self, name: str, graph: SignalGraph, params=None) -> None:
-        self._graphs[name] = (graph, params)
-        # re-registering a name replaces the graph: drop stale compiles
+        """Register (or replace) a named graph.  Replacement drops the
+        stale compile/cost caches, any queued requests referencing the
+        old graph, AND detaches its open streaming sessions (their
+        carried state was built under the old graph's frame/hop) — their
+        ``error`` fields say why.  Nothing queued or streaming can ever
+        execute against a graph it was not submitted for."""
+        replacing = name in self._graphs
+        try:
+            struct = StreamStructure.analyze(graph)
+        except ValueError:
+            struct = None                     # offline-only: exact lengths
+        self._graphs[name] = _Registration(graph, params, struct)
         for key in [k for k in self._compiled if k[0] == name]:
             del self._compiled[key]
             self._jitted.pop(key, None)
+            self._masked_jitted.pop(key, None)
+        for key in [k for k in self._cost_cache
+                    if k[0] in (name, f"{name}//core")]:
+            del self._cost_cache[key]
+        if replacing:
+            stale = [r for r in self._queue if r.graph == name]
+            for r in stale:
+                r.error = (f"graph {name!r} was re-registered while the "
+                           f"request was queued; resubmit")
+                self._queue.remove(r)
+            self.stats["dropped"] += len(stale)
+            for sess in self._sessions.pop(name, []):
+                sess.closed = True
+                sess.error = (f"graph {name!r} was re-registered; the "
+                              f"stream's carried state no longer applies "
+                              f"— open a new session")
+                self.stats["detached_sessions"] += 1
 
     def compiled_for(self, name: str, length: int) -> CompiledSignalGraph:
         key = (name, length)
         if key not in self._compiled:
-            graph, _ = self._graphs[name]
+            graph = self._graphs[name].graph
             self._compiled[key] = graph.compile(length, fuse=self.fuse)
+            self.stats["compiles"] += 1
         return self._compiled[key]
+
+    # -- length bucketing ---------------------------------------------------
+    def bucket_for(self, name: str, length: int) -> Optional[int]:
+        """The compile length serving a request of ``length`` samples:
+        the smallest admissible bucket >= length (and >= the graph's
+        minimum input).  None => exact-length execution (bucketing off,
+        graph not maskable, or length above the largest pinned bucket)."""
+        reg = self._graphs[name]
+        if not self.bucketing or reg.struct is None:
+            return None
+        lo = max(length, reg.struct.min_length)
+        if self.buckets is not None:
+            for b in self.buckets:
+                if b >= lo:
+                    return b
+            return None
+        b = 1
+        while b < lo:
+            b <<= 1
+        return b
+
+    def group_key(self, req: SignalRequest) -> Tuple[str, int]:
+        """The request's (graph, compile-length) batch key — computed
+        once at submit and cached on the request (requests are immutable
+        after submit, and re-registration drops queued requests rather
+        than re-keying them)."""
+        key = getattr(req, "_group_key", None)
+        if key is None:
+            length = int(np.asarray(req.samples).shape[-1])
+            bucket = self.bucket_for(req.graph, length)
+            key = (req.graph, bucket if bucket is not None else length)
+            req._group_key = key
+        return key
 
     # -- queue --------------------------------------------------------------
     def submit(self, req: SignalRequest) -> None:
+        """Validate and enqueue.  ``samples`` must be a real-valued 1-D
+        ``(T,)`` array (ints are coerced to float32) long enough for the
+        graph's analysis frame — rejected here with a clear error rather
+        than failing inside the jitted batch."""
         if req.graph not in self._graphs:
             raise KeyError(f"unknown graph {req.graph!r}")
+        reg = self._graphs[req.graph]
+        arr = np.asarray(req.samples)
+        if arr.ndim != 1:
+            raise ValueError(
+                f"SignalRequest.samples must be 1-D (T,); got shape "
+                f"{arr.shape} for rid={req.rid}")
+        if not (np.issubdtype(arr.dtype, np.floating)
+                or np.issubdtype(arr.dtype, np.integer)):
+            raise TypeError(
+                f"SignalRequest.samples must be real-valued; got dtype "
+                f"{arr.dtype} for rid={req.rid}")
+        if arr.dtype != np.float32:
+            arr = arr.astype(np.float32)
+        min_len = reg.struct.min_length if reg.struct is not None else 1
+        if arr.shape[-1] < min_len:
+            raise ValueError(
+                f"SignalRequest.samples too short for graph "
+                f"{req.graph!r}: {arr.shape[-1]} < {min_len} samples "
+                f"(the analysis frame) for rid={req.rid}")
+        req.samples = arr
+        req.seq = self._seq
+        self._seq += 1
+        req._group_key = None          # (re-)keyed by THIS service's buckets
+        self.group_key(req)
         self._queue.append(req)
 
     def pending(self) -> int:
         return len(self._queue)
 
-    def step(self) -> Dict[int, np.ndarray]:
-        """Execute ONE batched graph call: the oldest (graph, length)
-        group, up to ``batch_size`` requests stacked along the batch axis.
-        Returns {rid: output} for the completed requests."""
+    def pending_groups(self) -> List[GroupInfo]:
+        """Summaries of the queued batch groups, in FIFO order of their
+        oldest member (what a policy needs to pick a group)."""
+        groups: Dict[Tuple[str, int], List[SignalRequest]] = {}
+        for r in self._queue:
+            groups.setdefault(self.group_key(r), []).append(r)
+        out = [GroupInfo(key=k, count=len(rs),
+                         oldest_seq=min(r.seq for r in rs),
+                         earliest_deadline=min(r.deadline for r in rs))
+               for k, rs in groups.items()]
+        out.sort(key=lambda g: g.oldest_seq)
+        return out
+
+    def group_cost(self, key: Tuple[str, int], batch: int = 1) -> int:
+        """Perf-model cycles for one batched execution of a group
+        (compiles the bucket on first use; cached thereafter)."""
+        from ..core.perf_model import step_cost_estimate
+        if key not in self._cost_cache:
+            self._cost_cache[key] = step_cost_estimate(
+                self.compiled_for(*key))
+        return self._cost_cache[key] * max(1, batch)
+
+    # -- one-shot batched execution -----------------------------------------
+    def _fifo_pick(self, queue: List[SignalRequest]) -> List[SignalRequest]:
+        key = self.group_key(queue[0])
+        wave = [r for r in queue if self.group_key(r) == key]
+        return wave[: self.batch_size]
+
+    def make_pick(self, key: Tuple[str, int],
+                  order: str = "fifo") -> Callable:
+        """A picker for :meth:`step` selecting ``key``'s group, in FIFO
+        or earliest-deadline order."""
+        def pick(queue: List[SignalRequest]) -> List[SignalRequest]:
+            wave = [r for r in queue if self.group_key(r) == key]
+            if order == "deadline":
+                wave.sort(key=lambda r: (r.deadline, r.seq))
+            return wave[: self.batch_size]
+        return pick
+
+    def step(self, pick: Optional[Callable] = None) -> Dict[int, np.ndarray]:
+        """Execute ONE batched graph call and return ``{rid: output}``.
+
+        ``pick`` selects the wave from the live queue (default: the
+        oldest request's (graph, bucket) group in arrival order, up to
+        ``batch_size``) — admission is continuous, so requests submitted
+        after earlier steps join whichever wave their group forms next.
+        All requests in a wave share one compiled program; shorter
+        requests are zero-padded to the bucket and masked, and their
+        outputs trimmed back, equal to unpadded execution (bitwise
+        except FIR im2col GEMMs — see the module docstring).
+        """
         if not self._queue:
             return {}
-        g0 = self._queue[0]
-        key = (g0.graph, int(np.asarray(g0.samples).shape[-1]))
-        wave = [r for r in self._queue
-                if (r.graph, int(np.asarray(r.samples).shape[-1])) == key]
-        wave = wave[: self.batch_size]
+        wave = (pick or self._fifo_pick)(list(self._queue))
+        if not wave:
+            return {}
         for r in wave:
             self._queue.remove(r)
-
-        name, length = key
+        name, length = self.group_key(wave[0])
+        reg = self._graphs[name]
         compiled = self.compiled_for(name, length)
-        if key not in self._jitted:
-            self._jitted[key] = compiled.jit()
-        _, params = self._graphs[name]
-        batch = jnp.stack([jnp.asarray(r.samples) for r in wave])
-        out = np.asarray(self._jitted[key](batch, params))
-        results = {}
+        lens = [int(r.samples.shape[-1]) for r in wave]
+        padded = any(t != length for t in lens)
+        stack = np.zeros((len(wave), length), np.float32)
         for i, r in enumerate(wave):
+            stack[i, : lens[i]] = r.samples
+        batch = jnp.asarray(stack)
+        key = (name, length)
+
+        if padded or (reg.struct is not None
+                      and reg.struct.framer is not None
+                      and self.bucket_for(name, length) is not None):
+            out = self._run_masked(key, compiled, reg, batch, lens)
+            self.stats["bucketed"] += 1
+        else:
+            if key not in self._jitted:
+                self._jitted[key] = compiled.jit()
+            out = np.asarray(self._jitted[key](batch, reg.params))
+            self.stats["exact"] += 1
+
+        self.stats["batches"] += 1
+        self.est_cycles += self.group_cost(key, batch=len(wave))
+        suffix_rank = len(compiled.out_type.suffix)
+        results: Dict[int, np.ndarray] = {}
+        for i, r in enumerate(wave):
+            res = out[i]
+            if reg.struct is not None:
+                cnt = reg.struct.out_count(lens[i])
+                sl = [slice(None)] * res.ndim
+                sl[res.ndim - suffix_rank] = slice(0, cnt)
+                res = res[tuple(sl)]
             r.done = True
-            results[r.rid] = out[i]
+            results[r.rid] = res
         return results
+
+    def _run_masked(self, key, compiled, reg, batch, lens) -> np.ndarray:
+        """Masked/padded execution: valid-frame counts per row are traced
+        so one compile serves every length mix in the bucket."""
+        struct = reg.struct
+        if struct.framer is None:
+            # pure sample chain: causal stages never read past a row's
+            # valid prefix, so padding needs no masking — only trimming.
+            if key not in self._jitted:
+                self._jitted[key] = compiled.jit()
+            return np.asarray(self._jitted[key](batch, reg.params))
+        if key not in self._masked_jitted:
+            self._masked_jitted[key] = compiled.masked_jit()
+        vf = jnp.asarray([struct.valid_frames(t) for t in lens], jnp.int32)
+        return np.asarray(self._masked_jitted[key](batch, vf, reg.params))
 
     def serve(self, requests: List[SignalRequest]) -> Dict[int, np.ndarray]:
         """Drain a request list without an LLM co-tenant."""
@@ -117,101 +361,429 @@ class SignalService:
             results.update(self.step())
         return results
 
+    # -- per-connection streaming sessions ----------------------------------
+    def open_stream(self, name: str,
+                    block_frames: Optional[int] = None) -> "StreamSession":
+        """Open a streaming connection over a registered graph.  The
+        graph must stream (sample chain, or stft -> core -> istft);
+        chunked submissions go through :meth:`StreamSession.feed` and
+        same-graph sessions' ready blocks execute as ONE jitted core
+        call per :meth:`stream_step`."""
+        reg = self._graphs.get(name)
+        if reg is None:
+            raise KeyError(f"unknown graph {name!r}")
+        if reg.struct is None or (reg.struct.framer is not None
+                                  and reg.struct.deframer is None):
+            raise ValueError(f"graph {name!r} is not streamable")
+        sess = StreamSession(self, name, self._sid,
+                             block_frames or self.block_frames)
+        self._sid += 1
+        self._sessions.setdefault(name, []).append(sess)
+        return sess
 
-# --------------------------------------------------------------------------
-# LLM + DSP co-scheduling
-# --------------------------------------------------------------------------
+    def stream_sessions(self, name: Optional[str] = None) -> int:
+        if name is not None:
+            return len(self._sessions.get(name, []))
+        return sum(len(v) for v in self._sessions.values())
 
-class _LLMWave:
-    """Incremental replica of ``ServingEngine.generate`` for one wave:
-    prefill once, then one jitted decode step per ``step()`` call, so the
-    scheduler can interleave DSP work between token steps."""
+    def stream_pending(self) -> bool:
+        """True if any open session has a full block ready to execute."""
+        for name, sessions in self._sessions.items():
+            struct = self._graphs[name].struct
+            for s in sessions:
+                if ready_spec(struct, s.state, s.block_frames,
+                              final=False) is not None:
+                    return True
+        return False
 
-    def __init__(self, engine: ServingEngine, reqs: List[Request]):
-        self.engine = engine
-        self.reqs = reqs
-        self.max_new = max(r.max_new for r in reqs)
-        self.outs: List[List[int]] = [[] for _ in reqs]
-        b = len(reqs)
-        plen = max(len(r.prompt) for r in reqs)
-        toks = np.zeros((b, plen), np.int32)
-        for i, r in enumerate(reqs):
-            toks[i, -len(r.prompt):] = r.prompt          # left-pad
-        batch = {"tokens": jnp.asarray(toks)}
-        cfg = engine.cfg
-        if cfg.input_kind == "encdec":
-            batch["embeds"] = jnp.zeros(
-                (b, cfg.enc_seq, cfg.d_model), jnp.float32)
-        logits, self.cache = engine.bundle.prefill(
-            engine.params, batch, max_len=plen + self.max_new)
-        self.rng = jax.random.PRNGKey(0)
-        self.cur = engine._sample(logits[:, -1], self.rng)
-        self.steps = 0
+    def stream_step(self) -> int:
+        """Advance all streaming sessions by at most one block each.
+        Ready blocks of same-graph sessions with matching shapes stack
+        into ONE jitted core call; each session then overlap-adds its own
+        slice back into its carried state.  Returns the number of jitted
+        core calls issued (the bench asserts <= 1 per tick per graph for
+        lock-stepped sessions)."""
+        calls = 0
+        for name, sessions in self._sessions.items():
+            reg = self._graphs[name]
+            struct = reg.struct
+            groups: Dict[Tuple,
+                         List[Tuple["StreamSession", object,
+                                    jax.Array]]] = {}
+            for sess in sessions:
+                spec = ready_spec(struct, sess.state, sess.block_frames,
+                                  final=False)
+                if spec is None:
+                    continue
+                block = take_block(sess.state, spec)
+                gkey = (spec.n_frames, block.shape, block.dtype.name)
+                groups.setdefault(gkey, []).append((sess, spec, block))
+            for (n_frames, _, _), members in groups.items():
+                stacked = jnp.stack([b for _, _, b in members])
+                frames = struct.core_jit(n_frames, self.fuse)(
+                    stacked, reg.params)
+                calls += 1
+                self.est_cycles += self._stream_cost(name, n_frames) \
+                    * len(members)
+                for i, (sess, spec, _) in enumerate(members):
+                    st, piece = commit_frames(struct, sess.state, spec,
+                                              frames[i], final=False)
+                    st, out = finalize_piece(struct, st, piece, final=False)
+                    sess.state = st
+                    sess._push_out(out)
+        if calls:
+            self.stats["core_calls"] += calls
+        self.stats["stream_ticks"] += 1
+        return calls
+
+    def _stream_cost(self, name: str, n_frames: int) -> int:
+        """Perf-model cycles for one session's core block (cached)."""
+        from ..core.perf_model import step_cost_estimate
+        key = (f"{name}//core", n_frames)
+        if key not in self._cost_cache:
+            struct = self._graphs[name].struct
+            self._cost_cache[key] = step_cost_estimate(
+                struct.core_graph(n_frames, self.fuse))
+        return self._cost_cache[key]
+
+    def _close_stream(self, sess: "StreamSession") -> None:
+        lst = self._sessions.get(sess.graph_name, [])
+        if sess in lst:
+            lst.remove(sess)
+
+
+class StreamSession:
+    """One streaming connection to a :class:`SignalService`.
+
+    ``feed(chunk)`` pushes samples through the connection's sample-domain
+    pre-chain into its ring buffer (cheap, host-side); the heavy framed
+    core runs when the service batches ready blocks across sessions in
+    :meth:`SignalService.stream_step`.  ``read()`` pops the samples that
+    became final; ``close()`` drains the remainder (including the
+    overlap-add tail) and returns everything unread.  The concatenated
+    ``read()``/``close()`` stream is bit-identical to a private
+    :class:`StreamingRunner` (they share one drain implementation) and
+    matches the graph's offline execution under the streaming runtime's
+    exactness contract (bitwise; FIR stages to float32 ULPs).
+    """
+
+    def __init__(self, service: SignalService, name: str, sid: int,
+                 block_frames: int):
+        self.service = service
+        self.graph_name = name
+        self.sid = sid
+        self.block_frames = int(block_frames)
+        self.state = StreamState()
+        self.closed = False
+        self.error: Optional[str] = None      # set when force-detached
+        self._out: List[np.ndarray] = []
 
     @property
-    def done(self) -> bool:
-        return self.steps >= self.max_new
+    def _reg(self) -> _Registration:
+        return self.service._graphs[self.graph_name]
 
-    def step(self) -> None:
-        for i in range(len(self.reqs)):
-            self.outs[i].append(int(self.cur[i]))
-        self.steps += 1
-        if self.done:
-            return
-        logits, self.cache = self.engine._decode(
-            self.engine.params, self.cache, {"tokens": self.cur[:, None]})
-        self.rng, sub = jax.random.split(self.rng)
-        self.cur = self.engine._sample(logits[:, -1], sub)
+    def feed(self, chunk) -> None:
+        """Push one chunk (last axis = time; chunk lengths may vary)."""
+        if self.closed:
+            raise ValueError(self.error or f"session {self.sid} is closed")
+        self.state, out = push_chunk(self._reg.struct, self.state, chunk)
+        if out is not None:              # pure sample chain: no latency
+            self._push_out(out)
 
-    def results(self) -> Dict[int, List[int]]:
-        return {r.rid: o[: r.max_new]
-                for r, o in zip(self.reqs, self.outs)}
+    def _push_out(self, out) -> None:
+        arr = np.asarray(out)
+        if arr.shape[-1]:
+            self._out.append(arr)
 
+    def frames_ready(self) -> int:
+        """Frames currently executable without more input (lookahead
+        held back, as in non-final streaming)."""
+        struct = self._reg.struct
+        if struct.framer is None:
+            return 0
+        spec = ready_spec(struct, self.state, 10 ** 9, final=False)
+        return 0 if spec is None else spec.count
+
+    def read(self) -> np.ndarray:
+        """Pop the output samples that became final so far."""
+        if not self._out:
+            shape = (*self.state.batch_shape, 0) if self.state.buf is None \
+                else (*self.state.buf.shape[:-1], 0)
+            return np.zeros(shape, np.float32)
+        out = self._out[0] if len(self._out) == 1 else np.concatenate(
+            self._out, axis=-1)
+        self._out = []
+        return out
+
+    def close(self) -> np.ndarray:
+        """Flush: run the remaining frames (per-session — tails have
+        irregular shapes), emit the overlap-add tail, detach from the
+        service, and return everything unread."""
+        if self.closed:
+            return self.read()
+        self.closed = True
+        struct, reg = self._reg.struct, self._reg
+        if struct.framer is not None:
+            svc = self.service
+
+            def run_core(block, n_frames):
+                svc.est_cycles += svc._stream_cost(self.graph_name,
+                                                   n_frames)
+                svc.stats["flush_core_calls"] += 1
+                return struct.core_jit(n_frames, svc.fuse)(
+                    block[None], reg.params)[0]
+
+            self.state, out = drain_state(struct, self.state,
+                                          self.block_frames, run_core,
+                                          final=True)
+            if out is not None:
+                self._push_out(out)
+        self.service._close_stream(self)
+        return self.read()
+
+
+# --------------------------------------------------------------------------
+# LLM + DSP co-scheduling policies
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class TickPlan:
+    """What one CoScheduler tick should do, as decided by a policy."""
+    run_llm: bool = True
+    run_dsp: bool = True                       # one-shot DSP batch
+    run_streams: Optional[bool] = None         # session block round
+    admit: bool = False                        # mid-flight LLM admission
+    dsp_key: Optional[Tuple[str, int]] = None  # group to run (None: FIFO)
+    dsp_order: str = "fifo"                    # "fifo" | "deadline"
+
+    def __post_init__(self):
+        if self.run_streams is None:           # default: ride with DSP
+            self.run_streams = self.run_dsp
+
+
+class SchedulePolicy:
+    """Decides, each tick, which workload classes run and how the DSP
+    wave is picked.  Implement :meth:`plan`; the scheduler exposes its
+    queues / wave / occupancy counters for inspection."""
+
+    name = "base"
+
+    def plan(self, sched: "CoScheduler") -> TickPlan:
+        raise NotImplementedError
+
+
+class RoundRobinPolicy(SchedulePolicy):
+    """The original behaviour: every tick runs one LLM decode step AND
+    one FIFO DSP batch, with LLM waves admitted only between waves.
+    Kept as the reference policy — existing tests pin it byte-for-byte."""
+
+    name = "round_robin"
+
+    def plan(self, sched: "CoScheduler") -> TickPlan:
+        return TickPlan(run_llm=True, run_dsp=True, admit=False)
+
+
+class LatencyAwarePolicy(SchedulePolicy):
+    """Earliest-deadline-first across both workload classes: each tick
+    runs the single workload whose most urgent pending request has the
+    earliest *finite* deadline.  On a deadline tie (typically ``inf`` ==
+    ``inf`` — nobody declared an SLO) the tick degrades to round-robin,
+    both sides running in arrival order, so deadline-less traffic can
+    never be starved by the other class.  Streaming sessions carry no
+    deadline; their ready blocks ride along on every non-DSP tick.  LLM
+    newcomers join the active wave mid-flight when slots free up — on
+    LLM ticks, since admission itself costs a (re-)prefill and a
+    DSP-only tick must not spend the array on one."""
+
+    name = "latency_aware"
+
+    def plan(self, sched: "CoScheduler") -> TickPlan:
+        groups = sched.signals.pending_groups()
+        dsp_dl = min((g.earliest_deadline for g in groups),
+                     default=math.inf)
+        llm_dl = sched.llm_earliest_deadline()
+        have_llm = sched.llm_pending()
+        if not groups:
+            # no one-shot DSP wave to race: LLM advances, and any ready
+            # stream blocks ride along (streams carry no deadline — they
+            # must neither starve nor starve the token side).
+            return TickPlan(run_llm=True, run_dsp=False,
+                            run_streams=sched.signals.stream_pending(),
+                            admit=True)
+        best = min(groups, key=lambda g: (g.earliest_deadline,
+                                          g.oldest_seq))
+        if not have_llm or dsp_dl < llm_dl:
+            # admit=False: admission re-prefills, an LLM-side action a
+            # DSP-only tick must not perform (tick() honors admit only
+            # when run_llm is set, for the same reason).
+            return TickPlan(run_llm=False, run_dsp=True, admit=False,
+                            dsp_key=best.key, dsp_order="deadline")
+        if llm_dl < dsp_dl:
+            # streaming blocks still ride along: real-time connections
+            # can never starve behind deadline-bearing token traffic.
+            return TickPlan(run_llm=True, run_dsp=False, run_streams=True,
+                            admit=True)
+        # deadline tie: round-robin the tick so neither class starves.
+        return TickPlan(run_llm=True, run_dsp=True, admit=True,
+                        dsp_key=best.key, dsp_order="deadline")
+
+
+class CostBalancedPolicy(SchedulePolicy):
+    """Keep the accelerator-occupancy split between DSP and decode near
+    ``dsp_target`` (fraction of estimated array cycles spent on DSP),
+    using :func:`repro.core.perf_model.step_cost_estimate` for compiled
+    graphs and ``ServingEngine.decode_step_cost`` for decode steps.
+    Each tick runs the side that is furthest below its target share —
+    under skewed load this shifts the interleave instead of blindly
+    alternating (the paper's §V utilization argument at serving scope)."""
+
+    name = "cost_balanced"
+
+    def __init__(self, dsp_target: float = 0.5):
+        if not 0.0 < dsp_target < 1.0:
+            raise ValueError("dsp_target must be in (0, 1)")
+        self.dsp_target = float(dsp_target)
+
+    def plan(self, sched: "CoScheduler") -> TickPlan:
+        have_llm = sched.llm_pending()
+        have_dsp = (sched.signals.pending() > 0
+                    or sched.signals.stream_pending())
+        if not (have_llm and have_dsp):
+            return TickPlan(run_llm=have_llm, run_dsp=have_dsp, admit=True)
+        total = sched.llm_cycles + sched.dsp_cycles
+        dsp_share = sched.dsp_cycles / total if total else 0.0
+        if dsp_share < self.dsp_target:
+            # admit=False on DSP-only ticks: admission re-prefills (an
+            # LLM-side cost this tick chose not to pay).
+            return TickPlan(run_llm=False, run_dsp=True, admit=False)
+        return TickPlan(run_llm=True, run_dsp=False, admit=True)
+
+
+_POLICIES = {p.name: p for p in
+             (RoundRobinPolicy, LatencyAwarePolicy, CostBalancedPolicy)}
+
+
+def get_policy(policy: Union[str, SchedulePolicy]) -> SchedulePolicy:
+    """Resolve a policy name ('round_robin' | 'latency_aware' |
+    'cost_balanced') or pass an instance through."""
+    if isinstance(policy, SchedulePolicy):
+        return policy
+    try:
+        return _POLICIES[policy]()
+    except KeyError:
+        raise ValueError(
+            f"unknown policy {policy!r}; choose from "
+            f"{sorted(_POLICIES)} or pass a SchedulePolicy instance")
+
+
+# --------------------------------------------------------------------------
+# The co-scheduler
+# --------------------------------------------------------------------------
 
 class CoScheduler:
     """One step loop over two workload classes on the same device(s).
 
-    Each :meth:`tick` runs (a) one LLM decode step for the active token
-    wave and (b) one batched DSP graph execution — the serving analogue of
-    the paper's DLA interleaving signal tasks with DNN layers instead of
-    farming them out to a separate DSP chip.
+    Each :meth:`tick` asks the :class:`SchedulePolicy` for a
+    :class:`TickPlan` and then runs (a) one LLM decode step for the
+    active token wave and/or (b) one batched DSP execution plus one
+    streaming-session block round — the serving analogue of the paper's
+    DLA interleaving signal tasks with DNN layers instead of farming
+    them out to a separate DSP chip.
 
-    Known limitation (see docs/serving.md and the ROADMAP): the tick loop
-    is strict round-robin between the two workload classes, with no
-    awareness of queue depth, request age or latency targets.
+    Occupancy accounting: ``llm_cycles`` / ``dsp_cycles`` accumulate the
+    perf-model cost estimates of every step executed, which is what the
+    ``cost_balanced`` policy steers and the serving bench reports.
     """
 
-    def __init__(self, engine: ServingEngine, signals: SignalService):
+    def __init__(self, engine: ServingEngine, signals: SignalService,
+                 policy: Union[str, SchedulePolicy] = "round_robin"):
         self.engine = engine
         self.signals = signals
+        self.policy = get_policy(policy)
         self._llm_queue: List[Request] = []
-        self._wave: Optional[_LLMWave] = None
+        self._wave: Optional[DecodeWave] = None
         self.llm_results: Dict[int, List[int]] = {}
         self.dsp_results: Dict[int, np.ndarray] = {}
         self.ticks = 0
+        self.llm_cycles = 0
+        self.dsp_cycles = 0
 
+    # -- submission ---------------------------------------------------------
     def submit_llm(self, req: Request) -> None:
         self._llm_queue.append(req)
 
     def submit_signal(self, req: SignalRequest) -> None:
         self.signals.submit(req)
 
+    # -- introspection (used by policies) -----------------------------------
+    def llm_pending(self) -> bool:
+        return self._wave is not None or bool(self._llm_queue)
+
+    def llm_earliest_deadline(self) -> float:
+        dls = [r.deadline for r in self._llm_queue]
+        if self._wave is not None:
+            dls.extend(r.deadline for r in self._wave.reqs)
+        return min(dls, default=math.inf)
+
+    def occupancy(self) -> Dict[str, float]:
+        total = self.llm_cycles + self.dsp_cycles
+        return {"llm_cycles": self.llm_cycles,
+                "dsp_cycles": self.dsp_cycles,
+                "dsp_share": self.dsp_cycles / total if total else 0.0}
+
     @property
     def idle(self) -> bool:
         return (self._wave is None and not self._llm_queue
-                and not self.signals.pending())
+                and not self.signals.pending()
+                and not self.signals.stream_pending())
+
+    # -- the step loop ------------------------------------------------------
+    def _charge_prefill(self) -> None:
+        """Prefill processes ``prefill_tokens`` positions for the whole
+        batch — first-order, that is one decode-step cost per token."""
+        self.llm_cycles += (self.engine.decode_step_cost(self._wave.size)
+                            * max(1, self._wave.prefill_tokens))
 
     def tick(self) -> None:
-        if self._wave is None and self._llm_queue:
-            wave = self._llm_queue[: self.engine.batch_size]
-            self._llm_queue = self._llm_queue[self.engine.batch_size:]
-            self._wave = _LLMWave(self.engine, wave)
-        if self._wave is not None:
+        plan = self.policy.plan(self)
+
+        # LLM side (gated by the plan — a DSP-only tick must not spend
+        # the array on a prefill): start a wave between waves, or admit
+        # newcomers into a running wave when the policy allows it.
+        if plan.run_llm:
+            if self._wave is None and self._llm_queue:
+                wave = self._llm_queue[: self.engine.batch_size]
+                self._llm_queue = self._llm_queue[self.engine.batch_size:]
+                self._wave = DecodeWave(self.engine, wave)
+                self._charge_prefill()
+            elif (plan.admit and self._wave is not None and self._llm_queue
+                  and self.engine.temperature <= 0.0):
+                free = self._wave.free_slots()
+                if free > 0:
+                    newcomers = self._llm_queue[:free]
+                    self._llm_queue = self._llm_queue[free:]
+                    self.llm_results.update(self._wave.admit(newcomers))
+                    self._charge_prefill()      # admission re-prefills
+        if plan.run_llm and self._wave is not None:
             self._wave.step()
+            self.llm_cycles += self.engine.decode_step_cost(self._wave.size)
+            self.llm_results.update(self._wave.pop_done())
             if self._wave.done:
                 self.llm_results.update(self._wave.results())
                 self._wave = None
-        self.dsp_results.update(self.signals.step())
+
+        # DSP side: one batched one-shot wave and/or one streaming block
+        # round (streams can ride along on LLM ticks — latency_aware
+        # keeps real-time connections from starving behind token work).
+        before = self.signals.est_cycles
+        if plan.run_dsp:
+            pick = None
+            if plan.dsp_key is not None:
+                pick = self.signals.make_pick(plan.dsp_key, plan.dsp_order)
+            self.dsp_results.update(self.signals.step(pick=pick))
+        if plan.run_streams:
+            self.signals.stream_step()
+        self.dsp_cycles += self.signals.est_cycles - before
         self.ticks += 1
 
     def run(self) -> Tuple[Dict[int, List[int]], Dict[int, np.ndarray]]:

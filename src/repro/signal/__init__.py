@@ -20,15 +20,16 @@ from ..core.signal_mapping import (complex_to_interleaved,
                                    dct_via_array as dct,
                                    dct2_via_array as dct2)
 from .spectrogram import stft, istft, magnitude_spectrogram
-from .graph import (SignalGraph, CompiledSignalGraph, SigType,
+from .graph import (SignalGraph, CompiledSignalGraph, SigType, FuseLevel,
                     biquad_apply, overlap_add, mel_filterbank_matrix)
-from .streaming import StreamingRunner
+from .streaming import StreamingRunner, StreamStructure
 
 __all__ = ["fft", "ifft", "fir", "fir_phased", "dct", "dct2", "dwt",
            "stft", "istft", "magnitude_spectrogram",
            "complex_to_interleaved", "interleaved_to_complex",
-           "SignalGraph", "CompiledSignalGraph", "SigType", "biquad_apply",
-           "overlap_add", "mel_filterbank_matrix", "StreamingRunner"]
+           "SignalGraph", "CompiledSignalGraph", "SigType", "FuseLevel",
+           "biquad_apply", "overlap_add", "mel_filterbank_matrix",
+           "StreamingRunner", "StreamStructure"]
 
 
 @functools.lru_cache(maxsize=64)

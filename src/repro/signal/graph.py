@@ -57,6 +57,8 @@ passes and words saved by each fusion level.
 from __future__ import annotations
 
 import dataclasses
+import enum
+import warnings
 from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 import jax
@@ -67,9 +69,46 @@ from ..core import signal_mapping as _sm
 from ..core.fabric import (PAD, ShufflePlan, apply_plan, compose_into_einsum,
                            is_identity, is_permutation, tile_plan)
 
-__all__ = ["SignalGraph", "CompiledSignalGraph", "SigType",
+__all__ = ["SignalGraph", "CompiledSignalGraph", "SigType", "FuseLevel",
            "GatherStep", "EinsumStep", "LambdaStep",
            "biquad_apply", "overlap_add", "mel_filterbank_matrix"]
+
+
+class FuseLevel(enum.IntEnum):
+    """Fusion level of the graph compiler (see the module docstring).
+
+    * ``NONE``   (0) — op-by-op lowering, one fabric pass per gather;
+    * ``GATHER`` (1) — v1: compose back-to-back gathers into one pass;
+    * ``STREAM`` (2) — v2: additionally fold pure-permutation passes
+      across einsum boundaries into the adjacent array pass.
+
+    All levels produce bit-identical outputs.  Plain ints 0/1/2 are
+    accepted anywhere a ``FuseLevel`` is; the historical ``True`` /
+    ``False`` spelling still works but is deprecated.
+    """
+
+    NONE = 0
+    GATHER = 1
+    STREAM = 2
+
+    @classmethod
+    def coerce(cls, value: "FuseLevel | bool | int") -> "FuseLevel":
+        """Normalize a user-supplied fusion level.  Booleans map to
+        ``STREAM`` / ``NONE`` for back-compat and raise a
+        ``DeprecationWarning``; ints must be 0, 1 or 2."""
+        if isinstance(value, cls):
+            return value
+        if isinstance(value, (bool, np.bool_)):
+            warnings.warn(
+                "fuse=True/False is deprecated; pass FuseLevel.STREAM / "
+                "FuseLevel.NONE (or the ints 2 / 0)",
+                DeprecationWarning, stacklevel=3)
+            return cls.STREAM if value else cls.NONE
+        if isinstance(value, (int, np.integer)) and int(value) in (0, 1, 2):
+            return cls(int(value))
+        raise ValueError(
+            f"fuse must be a FuseLevel, 0, 1 or 2 (or the deprecated "
+            f"True/False); got {value!r}")
 
 
 # --------------------------------------------------------------------------
@@ -641,29 +680,27 @@ class SignalGraph:
         self._output = name
 
     # -- compilation --------------------------------------------------------
-    def compile(self, length: int, fuse=True,
+    def compile(self, length: int, fuse: "FuseLevel | int" = FuseLevel.STREAM,
                 width: int = 16) -> "CompiledSignalGraph":
         """Shape-specialize and lower the graph for input length ``length``.
 
-        ``fuse`` selects the fusion level:
+        ``fuse`` selects the fusion level (a :class:`FuseLevel` or the
+        equivalent int):
 
-        * ``False`` / ``0`` — op-by-op lowering, one fabric pass per
-          emitted gather (the unfused baseline in benchmarks/tests);
-        * ``1`` — v1: compose back-to-back gathers into one pass;
-        * ``True`` / ``2`` — v2 (default): additionally fold
+        * ``FuseLevel.NONE``   (0) — op-by-op lowering, one fabric pass
+          per emitted gather (the unfused baseline in benchmarks/tests);
+        * ``FuseLevel.GATHER`` (1) — v1: compose back-to-back gathers
+          into one pass;
+        * ``FuseLevel.STREAM`` (2, default) — v2: additionally fold
           pure-permutation passes across einsum boundaries into the
           adjacent array pass (see the module docstring).
 
         All levels produce bit-identical outputs; they differ only in
         how many standalone fabric passes the step list executes.
+        (``True`` / ``False`` still coerce to STREAM / NONE with a
+        ``DeprecationWarning``.)
         """
-        if isinstance(fuse, (bool, np.bool_)):
-            level = 2 if fuse else 0
-        elif isinstance(fuse, (int, np.integer)) and int(fuse) in (0, 1, 2):
-            level = int(fuse)
-        else:
-            raise ValueError(f"fuse must be False, True, 0, 1 or 2; "
-                             f"got {fuse!r}")
+        level = int(FuseLevel.coerce(fuse))
         out_name = self._output or (self._order[-1] if self._order else None)
         if out_name is None:
             raise ValueError("empty graph")
@@ -953,6 +990,21 @@ def _lower_stage(st: Stage, in_types: List[SigType], fuse: bool,
 # The compiled graph
 # --------------------------------------------------------------------------
 
+def _mask_frames(y: jax.Array, valid_frames: jax.Array,
+                 suffix_rank: int) -> jax.Array:
+    """Zero the frame rows at index >= ``valid_frames`` of a frames-domain
+    value.  ``y`` is ``(*batch, F, *rest)`` with ``suffix_rank`` trailing
+    suffix axes (the frames axis leads the suffix); ``valid_frames`` is an
+    int array broadcastable over the batch axes (scalar or one count per
+    batch row).  Valid rows pass through untouched — ``jnp.where`` selects,
+    it never rescales — so the valid region stays bit-identical."""
+    axis = y.ndim - suffix_rank
+    idx = jnp.arange(y.shape[axis]).reshape((-1,) + (1,) * (suffix_rank - 1))
+    vf = jnp.asarray(valid_frames)
+    vf = vf.reshape(vf.shape + (1,) * suffix_rank)
+    return jnp.where(idx < vf, y, jnp.zeros((), y.dtype))
+
+
 class CompiledSignalGraph:
     """Shape-specialized, lowered, (optionally) fused signal graph.
 
@@ -974,20 +1026,43 @@ class CompiledSignalGraph:
         self.fused = self.fuse_level > 0
 
     # -- execution ----------------------------------------------------------
-    def __call__(self, x: jax.Array, params=None) -> jax.Array:
+    def __call__(self, x: jax.Array, params=None, *,
+                 valid_frames=None) -> jax.Array:
+        """Run the pipeline.  ``valid_frames`` enables the masked /
+        padded execution path used by length-bucketed serving: ``x`` is
+        zero-padded past each row's true length, ``valid_frames`` is the
+        per-row count of frames computed from real samples (an int array
+        broadcastable over the batch axes), and every frames-domain stage
+        output has its rows at index >= ``valid_frames`` zeroed.  Zeroed
+        frames contribute exact ``+0.0`` terms to overlap-add and match
+        the zero padding a SAME-padded conv sees at the signal boundary,
+        so the valid region is bit-identical to compiling at the true
+        length (tests/test_signal_bucketing.py)."""
         env = {SignalGraph.INPUT: x}
         for st in self.stages:
             vals = [env[i] for i in st.inputs]
             h = st.combine(*vals) if st.combine is not None else vals[0]
             sp = (params or {}).get(st.name) if isinstance(params, dict) \
                 else params
-            env[st.name] = _run_steps(st.steps, h, sp)
+            y = _run_steps(st.steps, h, sp)
+            if valid_frames is not None and st.out_type.domain == "frames":
+                y = _mask_frames(y, valid_frames, len(st.out_type.suffix))
+            env[st.name] = y
         return env[self.output]
 
     def jit(self):
         """``jax.jit`` of :meth:`__call__`; all plans/operands are static
         so the whole pipeline compiles to one XLA program."""
         return jax.jit(self.__call__)
+
+    def masked_jit(self):
+        """Jitted masked entry point ``(x, valid_frames, params) -> y``
+        for length-bucketed execution: same XLA program as :meth:`jit`
+        plus the per-stage frame masks (``valid_frames`` is traced, so
+        one compile serves every mix of request lengths in the bucket)."""
+        def call(x, valid_frames, params=None):
+            return self.__call__(x, params, valid_frames=valid_frames)
+        return jax.jit(call)
 
     def sharded_jit(self, mesh, batch_axis: str = "data"):
         """Batch-sharded entry point: input (and output) sharded along the

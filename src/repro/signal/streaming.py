@@ -1,8 +1,30 @@
 """Streaming execution of :class:`~repro.signal.graph.SignalGraph`.
 
-Real serving traffic arrives as chunks, not whole utterances.  A
-:class:`StreamingRunner` executes a compiled pipeline graph over chunked
-multi-channel input while carrying exactly the state the DSP math needs:
+Real serving traffic arrives as chunks, not whole utterances.  This module
+has three layers:
+
+  * :class:`StreamStructure` — the *analysis* of a graph into the
+    streamable shape ``sample pre-chain -> stft -> framewise core ->
+    istft -> sample post-chain`` (any prefix of that shape).  The
+    structure owns the per-block core-graph compile/jit caches, so many
+    connections over the same graph share one set of compiled programs.
+    The serving layer also uses it to decide length-bucketing legality
+    and to compute per-request valid-frame counts / output lengths.
+  * :class:`StreamState` — the carried state of ONE connection, as a
+    registered JAX pytree (FIR ring carries, IIR state vectors, the
+    sample ring buffer, the overlap-add tail) plus host-side counters.
+    States of lock-stepped connections can be stacked / unstacked across
+    a leading batch axis (:func:`stack_states` / :func:`unstack_states`),
+    and the pure step functions (:func:`push_chunk`, :func:`ready_spec`,
+    :func:`take_block`, :func:`commit_frames`, :func:`finalize_piece`)
+    let a scheduler interleave and batch the core computation of many
+    connections — ``SignalService.StreamSession`` stacks same-shape
+    blocks from concurrent sessions into ONE jitted core call.
+  * :class:`StreamingRunner` — the single-connection convenience wrapper
+    (``process`` / ``flush``) over those pieces, API-compatible with the
+    original per-instance runner.
+
+The per-stage state the DSP math needs:
 
   * FIR stages carry the last ``taps-1`` input samples (ring-buffer frame
     carry), so chunk-boundary windows equal the offline im2col windows;
@@ -21,8 +43,8 @@ holds at every fusion level: the carried-state bookkeeping (ring-buffer
 offsets, OLA tail, frame lookback) lives at *stage* boundaries, while the
 v1/v2 fusion passes only rewrite the step list *inside* each stage — a
 folded permutation runs the same ops in the same order as its standalone
-pass, so the per-block core graph compiled at ``fuse=2`` emits the same
-frames as the unfused lowering.
+pass, so the per-block core graph compiled at ``FuseLevel.STREAM`` emits
+the same frames as the unfused lowering.
 
 A sample ``s`` is emitted once no future frame can touch it, so the
 runner's latency is ``frame - hop`` samples plus ``frame_context * hop``
@@ -31,16 +53,18 @@ for DNN lookahead; everything else is pipelined per chunk.
 
 from __future__ import annotations
 
-from typing import Dict, List, Optional
+import dataclasses
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .graph import (CompiledSignalGraph, SignalGraph, biquad_apply,
-                    overlap_add)
+from .graph import (CompiledSignalGraph, FuseLevel, SignalGraph,
+                    biquad_apply, overlap_add)
 
-__all__ = ["StreamingRunner"]
+__all__ = ["StreamingRunner", "StreamState", "StreamStructure", "BlockSpec",
+           "stack_states", "unstack_states", "drain_state"]
 
 _SAMPLE_KINDS = ("fir", "iir_biquad")
 _FRAMEWISE_KINDS = ("dnn", "magnitude", "mel_filterbank", "mul", "dct",
@@ -48,21 +72,24 @@ _FRAMEWISE_KINDS = ("dnn", "magnitude", "mel_filterbank", "mul", "dct",
 
 
 # --------------------------------------------------------------------------
-# Stateful sample-domain stages
+# Stateful sample-domain stages (pure transforms with explicit carry)
 # --------------------------------------------------------------------------
 
-class _FIRState:
+class _FIRStage:
+    """Causal FIR over chunks: the carry is the last ``taps-1`` inputs."""
+
     def __init__(self, stage):
         if stage.params.get("phases", 1) != 1:
             raise ValueError("streaming supports fir with phases=1 only")
         self.h = np.asarray(stage.params["taps"], np.float32)
-        self.carry = None           # (..., taps-1) previous input samples
 
-    def __call__(self, x: jax.Array) -> jax.Array:
+    def init(self, x: jax.Array) -> jax.Array:
         taps = self.h.shape[0]
-        if self.carry is None:
-            self.carry = jnp.zeros((*x.shape[:-1], taps - 1), dtype=x.dtype)
-        block = jnp.concatenate([self.carry, x], axis=-1) if taps > 1 else x
+        return jnp.zeros((*x.shape[:-1], taps - 1), dtype=x.dtype)
+
+    def apply(self, carry, x):
+        taps = self.h.shape[0]
+        block = jnp.concatenate([carry, x], axis=-1) if taps > 1 else x
         n = x.shape[-1]
         # window i covers block[taps-1+i-t] for t in 0..taps-1 — identical
         # contraction to the offline im2col + einsum lowering.
@@ -71,92 +98,184 @@ class _FIRState:
         cols = jnp.take(block, jnp.asarray(idx), axis=-1)
         y = jnp.einsum("...nt,t->...n", cols,
                        jnp.asarray(self.h, dtype=cols.dtype))
-        if taps > 1:
-            self.carry = block[..., -(taps - 1):]
-        return y
+        carry = block[..., -(taps - 1):] if taps > 1 else carry
+        return carry, y
 
 
-class _IIRState:
+class _IIRStage:
+    """Second-order IIR: the carry is the 2-element scan state."""
+
     def __init__(self, stage):
         self.b = stage.params["b"]
         self.a = stage.params["a"]
-        self.zi = None
 
-    def __call__(self, x: jax.Array) -> jax.Array:
-        if self.zi is None:
-            self.zi = jnp.zeros((*x.shape[:-1], 2), dtype=x.dtype)
-        y, self.zi = biquad_apply(x, self.b, self.a, self.zi)
-        return y
+    def init(self, x: jax.Array) -> jax.Array:
+        return jnp.zeros((*x.shape[:-1], 2), dtype=x.dtype)
+
+    def apply(self, carry, x):
+        y, zf = biquad_apply(x, self.b, self.a, carry)
+        return zf, y
 
 
-def _make_sample_state(stage):
-    return _FIRState(stage) if stage.kind == "fir" else _IIRState(stage)
+def _make_sample_stage(stage):
+    return _FIRStage(stage) if stage.kind == "fir" else _IIRStage(stage)
+
+
+def _apply_chain(stages: Sequence, carries: Tuple, x: jax.Array):
+    """Run a sample-domain chain, threading (and lazily initializing)
+    the per-stage carries."""
+    if stages and not carries:
+        carries = tuple(s.init(x) for s in stages)
+    new = []
+    for s, c in zip(stages, carries):
+        c, x = s.apply(c, x)
+        new.append(c)
+    return tuple(new), x
 
 
 # --------------------------------------------------------------------------
-# Runner
+# Carried state (a registered pytree)
 # --------------------------------------------------------------------------
 
-class StreamingRunner:
-    """Push chunks with :meth:`process`, finish with :meth:`flush`.
+@dataclasses.dataclass
+class StreamState:
+    """Carried state of one streaming connection.
 
-    ``graph`` must be a streamable pipeline: a linear chain of sample-domain
-    stages (fir / iir_biquad), optionally wrapped around one
-    stft -> framewise-stages -> istft core (any DAG of framewise stages in
-    between, e.g. the Fig-9 mask DNN with fan-out).  ``params`` is the same
-    per-stage dict the compiled graph takes.  Chunks may have leading batch
-    / channel axes; the last axis is time and chunk lengths may vary.
-
-    ``block_frames`` sets how many new frames each drain compiles/executes
-    at once (one jitted core program per distinct block size);
-    ``fuse`` is forwarded to :meth:`SignalGraph.compile` for the per-block
-    core (``True`` = full v2 cross-einsum folding); ``jit_blocks=False``
-    runs the core eagerly (debugging).
+    Array leaves (``pre`` / ``post`` carries, sample ring buffer ``buf``,
+    overlap-add ``tail``) are pytree children; the host-side counters
+    (absolute buffer offset, samples received, next frame, samples
+    emitted) ride along as aux data, so two states can be stacked with
+    :func:`stack_states` exactly when their counters agree — i.e. when
+    the connections are in lock-step.
     """
 
-    def __init__(self, graph: SignalGraph, params=None,
-                 block_frames: int = 8, fuse: "bool | int" = True,
-                 jit_blocks: bool = True):
-        self.graph = graph
-        self.params = params
-        self.block_frames = int(block_frames)
-        self.fuse = fuse
-        self.jit_blocks = jit_blocks
-        self._split(graph)
-        self._buf = None            # post-pre-chain samples, absolute index
-        self._buf_start = 0
-        self._batch_shape = ()      # leading axes seen by process()
-        self._total = 0             # samples received (post pre-chain)
-        self._f_next = 0            # next frame to overlap-add
-        self._tail = None           # OLA accumulator tail (frame - hop)
-        self._emitted = 0
-        self._core_cache: Dict[int, CompiledSignalGraph] = {}
-        self._core_jit_cache: Dict[int, object] = {}
+    pre: Tuple = ()
+    post: Tuple = ()
+    buf: Optional[jax.Array] = None
+    tail: Optional[jax.Array] = None
+    buf_start: int = 0
+    total: int = 0
+    f_next: int = 0
+    emitted: int = 0
+    batch_shape: Tuple[int, ...] = ()
 
-    # -- graph analysis -----------------------------------------------------
-    def _split(self, graph: SignalGraph) -> None:
+
+jax.tree_util.register_pytree_node(
+    StreamState,
+    lambda s: ((s.pre, s.post, s.buf, s.tail),
+               (s.buf_start, s.total, s.f_next, s.emitted, s.batch_shape)),
+    lambda aux, ch: StreamState(ch[0], ch[1], ch[2], ch[3], *aux))
+
+
+def _state_counters(s: StreamState) -> Tuple:
+    return (s.buf_start, s.total, s.f_next, s.emitted, s.batch_shape)
+
+
+def stack_states(states: Sequence[StreamState]) -> StreamState:
+    """Stack lock-stepped connection states along a new leading batch
+    axis.  All counters (and the None-ness of every leaf) must agree."""
+    first = _state_counters(states[0])
+    for s in states[1:]:
+        if _state_counters(s) != first:
+            raise ValueError("stack_states needs lock-stepped states "
+                             "(matching counters)")
+    return jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *states)
+
+
+def unstack_states(state: StreamState, n: int) -> List[StreamState]:
+    """Inverse of :func:`stack_states`."""
+    return [jax.tree_util.tree_map(lambda x, i=i: x[i], state)
+            for i in range(n)]
+
+
+@dataclasses.dataclass(frozen=True)
+class BlockSpec:
+    """One core-graph execution: frames ``[f_lo, f_hi)`` become final,
+    computed from buffered frames ``[g0, g1]`` (context included).
+    ``lo:hi`` is the slice of the current ring buffer to feed."""
+
+    f_lo: int
+    f_hi: int
+    g0: int
+    g1: int
+    lo: int
+    hi: int
+    f_avail: int
+
+    @property
+    def count(self) -> int:
+        return self.f_hi - self.f_lo
+
+    @property
+    def n_frames(self) -> int:
+        return self.g1 - self.g0 + 1
+
+    @property
+    def block_len(self) -> int:
+        return self.hi - self.lo
+
+
+# --------------------------------------------------------------------------
+# Graph analysis (shared by StreamingRunner and SignalService)
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class StreamStructure:
+    """Streamable decomposition of a :class:`SignalGraph`:
+    ``input -> pre (fir/iir) -> stft -> framewise core -> istft ->
+    post (fir/iir) -> output`` — every piece optional from the outside
+    in.  Graphs with a framer but no deframer (e.g. stft -> magnitude ->
+    mel feature frontends) analyze fine and are length-bucketable, but
+    only deframed graphs stream sample-wise.
+
+    Raises ``ValueError`` for graphs outside this shape (multiple
+    framers, non-streamable stages in a sample chain, global transforms
+    over raw samples like ``dct``/``fft``/``dwt`` on the input axis) —
+    such graphs neither stream nor bucket: their math is not local in
+    time, so padded execution could not be masked back to exactness.
+    """
+
+    graph: SignalGraph
+    pre_names: List[str]
+    core_names: List[str]
+    post_names: List[str]
+    framer: Optional[str]
+    deframer: Optional[str]
+    frame: int
+    hop: int
+    context: int
+    out_length: Optional[int]
+    output: str
+
+    def __post_init__(self):
+        stages = self.graph.stages
+        self.pre_stages = [_make_sample_stage(stages[s])
+                           for s in self.pre_names]
+        self.post_stages = [_make_sample_stage(stages[s])
+                            for s in self.post_names]
+        self._core_cache: Dict[Tuple[int, int], CompiledSignalGraph] = {}
+        self._core_jit_cache: Dict[Tuple[int, int], object] = {}
+
+    # -- analysis -----------------------------------------------------------
+    @classmethod
+    def analyze(cls, graph: SignalGraph) -> "StreamStructure":
         stages = graph.stages
         order = list(stages)
         out = graph._output or (order[-1] if order else None)
+        if out is None:
+            raise ValueError("empty graph")
         framers = [s for s in order if stages[s].kind == "stft"]
         deframers = [s for s in order
                      if stages[s].kind in ("istft", "overlap_add")]
         if len(framers) > 1 or len(deframers) > 1:
             raise ValueError("streaming supports at most one stft/istft")
-        if bool(framers) != bool(deframers):
-            raise ValueError("stft and istft must appear together")
+        if deframers and not framers:
+            raise ValueError("istft/overlap_add without a matching stft")
 
         consumers: Dict[str, List[str]] = {}
         for s in order:
             for i in stages[s].inputs:
                 consumers.setdefault(i, []).append(s)
-
-        self.pre: List = []
-        self.post: List = []
-        self.core_names: List[str] = []
-        self.framer = self.deframer = None
-        self.frame = self.hop = 0
-        self.context = 0
 
         if not framers:
             # pure sample-domain chain input -> ... -> output
@@ -173,16 +292,21 @@ class StreamingRunner:
                 seen.append(cur)
             if cur != out:
                 raise ValueError("output is not the end of the chain")
-            self.pre = [_make_sample_state(stages[s]) for s in seen]
-            return
+            return cls(graph, pre_names=seen, core_names=[], post_names=[],
+                       framer=None, deframer=None, frame=0, hop=0,
+                       context=0, out_length=None, output=out)
 
-        self.framer, self.deframer = framers[0], deframers[0]
-        fst, dst = stages[self.framer], stages[self.deframer]
-        self.frame = int(fst.params["frame"])
-        self.hop = int(fst.params["hop"])
-        if int(dst.params["hop"]) != self.hop:
-            raise ValueError("streaming needs stft hop == istft hop")
-        self.out_length = dst.params.get("length")
+        framer = framers[0]
+        deframer = deframers[0] if deframers else None
+        fst = stages[framer]
+        frame = int(fst.params["frame"])
+        hop = int(fst.params["hop"])
+        out_length = None
+        if deframer is not None:
+            dst = stages[deframer]
+            if int(dst.params["hop"]) != hop:
+                raise ValueError("streaming needs stft hop == istft hop")
+            out_length = dst.params.get("length")
 
         # pre-chain: walk back from the framer to the input.
         chain = []
@@ -193,25 +317,29 @@ class StreamingRunner:
                 raise ValueError(f"pre-stft stage {cur!r} not streamable")
             chain.append(cur)
             cur = st.inputs[0]
-        self.pre = [_make_sample_state(stages[s]) for s in reversed(chain)]
+        pre_names = list(reversed(chain))
 
         # post-chain: walk forward from the deframer to the output.
-        post = []
-        cur = self.deframer
-        while cur != out:
-            nxts = consumers.get(cur, [])
-            if len(nxts) != 1:
-                raise ValueError("post-istft stages must form a chain")
-            cur = nxts[0]
-            st = stages[cur]
-            if st.kind not in _SAMPLE_KINDS:
-                raise ValueError(f"post-istft stage {cur!r} not streamable")
-            post.append(cur)
-        self.post = [_make_sample_state(stages[s]) for s in post]
+        post: List[str] = []
+        if deframer is not None:
+            cur = deframer
+            while cur != out:
+                nxts = consumers.get(cur, [])
+                if len(nxts) != 1:
+                    raise ValueError("post-istft stages must form a chain")
+                cur = nxts[0]
+                st = stages[cur]
+                if st.kind not in _SAMPLE_KINDS:
+                    raise ValueError(
+                        f"post-istft stage {cur!r} not streamable")
+                post.append(cur)
 
         # interior: everything else must be framewise.
-        skip = set(chain) | set(post) | {self.framer, self.deframer}
+        skip = set(chain) | set(post) | {framer}
+        if deframer is not None:
+            skip.add(deframer)
         interior = [s for s in order if s not in skip]
+        context = 0
         for s in interior:
             st = stages[s]
             if st.kind not in _FRAMEWISE_KINDS:
@@ -221,14 +349,47 @@ class StreamingRunner:
                 if i == SignalGraph.INPUT or i in chain or i in post:
                     raise ValueError(
                         f"framewise stage {s!r} reads outside the core")
-            self.context += st.frame_context
-        self.core_names = [s for s in order
-                           if s == self.framer or s == self.deframer
-                           or s in interior]
+            context += st.frame_context
+        if deframer is None and out not in interior and out != framer:
+            raise ValueError(
+                f"output {out!r} is outside the framewise core")
+        core_names = [s for s in order
+                      if s == framer or s == deframer or s in interior]
+        return cls(graph, pre_names=pre_names, core_names=core_names,
+                   post_names=post, framer=framer, deframer=deframer,
+                   frame=frame, hop=hop, context=context,
+                   out_length=out_length, output=out)
 
-    # -- core block graph ---------------------------------------------------
-    def _core_graph(self, n_frames: int) -> CompiledSignalGraph:
-        if n_frames not in self._core_cache:
+    # -- length bookkeeping (used by bucketed serving) ----------------------
+    @property
+    def min_length(self) -> int:
+        """Shortest input the graph compiles for."""
+        return self.frame if self.framer is not None else 1
+
+    def valid_frames(self, length: int) -> int:
+        """Frames computed entirely from the first ``length`` samples."""
+        if length < self.frame:
+            return 0
+        return 1 + (length - self.frame) // self.hop
+
+    def out_count(self, valid_len: int) -> int:
+        """Valid output extent along the output's leading suffix axis for
+        a request of true length ``valid_len``: samples for deframed /
+        sample-chain graphs, frame rows for frames-domain outputs."""
+        if self.framer is None:
+            return valid_len
+        vf = self.valid_frames(valid_len)
+        if self.deframer is None:
+            return vf
+        if self.out_length is not None:
+            return self.out_length
+        return (vf - 1) * self.hop + self.frame
+
+    # -- per-block core graph (shared compile/jit cache) --------------------
+    def core_graph(self, n_frames: int,
+                   fuse: FuseLevel = FuseLevel.STREAM) -> CompiledSignalGraph:
+        key = (n_frames, int(fuse))
+        if key not in self._core_cache:
             g = SignalGraph(f"{self.graph.name}_core")
             for s in self.core_names:
                 st = self.graph.stages[s]
@@ -240,96 +401,205 @@ class StreamingRunner:
                     g.add(st.kind, s, st.inputs, **st.params)
             g.output(self.deframer)
             block_len = (n_frames - 1) * self.hop + self.frame
-            self._core_cache[n_frames] = g.compile(block_len, fuse=self.fuse)
-        return self._core_cache[n_frames]
+            self._core_cache[key] = g.compile(block_len, fuse=fuse)
+        return self._core_cache[key]
 
-    def _run_core(self, block: jax.Array, n_frames: int) -> jax.Array:
-        compiled = self._core_graph(n_frames)
-        if not self.jit_blocks:
-            return compiled(block, self.params)
-        if n_frames not in self._core_jit_cache:
-            self._core_jit_cache[n_frames] = compiled.jit()
-        return self._core_jit_cache[n_frames](block, self.params)
+    def core_jit(self, n_frames: int, fuse: FuseLevel = FuseLevel.STREAM):
+        key = (n_frames, int(fuse))
+        if key not in self._core_jit_cache:
+            self._core_jit_cache[key] = self.core_graph(n_frames, fuse).jit()
+        return self._core_jit_cache[key]
+
+
+# --------------------------------------------------------------------------
+# Pure step functions over (structure, state)
+# --------------------------------------------------------------------------
+
+def push_chunk(struct: StreamStructure, state: StreamState, chunk):
+    """Apply the pre-chain and append to the ring buffer.  Returns
+    ``(state, out)`` where ``out`` is the chunk's final samples for pure
+    sample-chain graphs (no core => no latency) and ``None`` otherwise."""
+    x = jnp.asarray(chunk)
+    pre, x = _apply_chain(struct.pre_stages, state.pre, x)
+    if struct.framer is None:
+        state = dataclasses.replace(state, pre=pre,
+                                    batch_shape=x.shape[:-1])
+        return state, x
+    buf = x if state.buf is None else jnp.concatenate([state.buf, x],
+                                                      axis=-1)
+    state = dataclasses.replace(state, pre=pre, buf=buf,
+                                total=state.total + x.shape[-1])
+    return state, None
+
+
+def ready_spec(struct: StreamStructure, state: StreamState,
+               block_frames: int, final: bool) -> Optional[BlockSpec]:
+    """The next core block to execute, or None if no frames are ready.
+    Non-final drains hold back ``context`` frames of lookahead so DNN
+    receptive fields see the same neighbors they would offline."""
+    if struct.framer is None:
+        return None
+    frame, hop, C = struct.frame, struct.hop, struct.context
+    f_avail = 0 if state.total < frame else \
+        1 + (state.total - frame) // hop
+    f_ready = f_avail if final else max(state.f_next, f_avail - C)
+    if state.f_next >= f_ready:
+        return None
+    count = min(block_frames, f_ready - state.f_next)
+    f_lo, f_hi = state.f_next, state.f_next + count
+    g0 = max(0, f_lo - C)
+    g1 = min(f_avail - 1, f_hi - 1 + C)
+    return BlockSpec(f_lo, f_hi, g0, g1,
+                     lo=g0 * hop - state.buf_start,
+                     hi=g1 * hop + frame - state.buf_start,
+                     f_avail=f_avail)
+
+
+def take_block(state: StreamState, spec: BlockSpec) -> jax.Array:
+    """The ring-buffer slice feeding one core execution."""
+    return state.buf[..., spec.lo:spec.hi]
+
+
+def commit_frames(struct: StreamStructure, state: StreamState,
+                  spec: BlockSpec, frames: jax.Array, final: bool):
+    """Overlap-add the core's output frames for one block, merge the
+    carried tail, advance the frame cursor and trim the ring buffer.
+    Returns ``(state, piece)`` with ``piece`` the newly-final samples
+    (before the length cap / post-chain — see :func:`finalize_piece`)."""
+    frame, hop, C = struct.frame, struct.hop, struct.context
+    sel = frames[..., spec.f_lo - spec.g0:spec.f_hi - spec.g0, :]
+    acc = overlap_add(sel, hop)              # count*hop + frame-hop samples
+    tail = state.tail
+    if tail is None:
+        tail = jnp.zeros((*acc.shape[:-1], frame - hop), dtype=acc.dtype)
+    acc = acc.at[..., :frame - hop].add(tail)
+    last = final and spec.f_hi == spec.f_avail
+    if last:
+        piece, tail = acc, None              # includes the natural tail
+    else:
+        piece, tail = acc[..., :spec.count * hop], acc[..., spec.count * hop:]
+    buf, buf_start = state.buf, state.buf_start
+    keep = max(0, spec.f_hi - C) * hop
+    if keep > buf_start:
+        buf = buf[..., keep - buf_start:]
+        buf_start = keep
+    state = dataclasses.replace(state, tail=tail, f_next=spec.f_hi,
+                                buf=buf, buf_start=buf_start)
+    return state, piece
+
+
+def drain_state(struct: StreamStructure, state: StreamState,
+                block_frames: int, run_core, final: bool):
+    """The shared drain loop: execute ready blocks through ``run_core``
+    (``(block, n_frames) -> frames``), overlap-add and finalize.
+    Returns ``(state, out)`` with ``out`` None when nothing became
+    final.  Both :class:`StreamingRunner` and the service's
+    :class:`~repro.serving.signal_service.StreamSession` flush path use
+    this single implementation — that is what keeps their outputs
+    bit-identical to each other."""
+    pieces: List[jax.Array] = []
+    while True:
+        spec = ready_spec(struct, state, block_frames, final)
+        if spec is None:
+            break
+        frames = run_core(take_block(state, spec), spec.n_frames)
+        state, piece = commit_frames(struct, state, spec, frames, final)
+        pieces.append(piece)
+    if final and not pieces and state.tail is not None:
+        pieces.append(state.tail)            # everything already OLA'd
+        state = dataclasses.replace(state, tail=None)
+    if not pieces:
+        return state, None
+    out = pieces[0] if len(pieces) == 1 else jnp.concatenate(pieces,
+                                                             axis=-1)
+    return finalize_piece(struct, state, out, final)
+
+
+def finalize_piece(struct: StreamStructure, state: StreamState,
+                   out: jax.Array, final: bool):
+    """Apply the istft length cap (a running budget across the whole
+    stream) and the sample post-chain to newly-final samples."""
+    if struct.out_length is not None:
+        allowed = struct.out_length - state.emitted
+        if out.shape[-1] > allowed:
+            out = out[..., :max(0, allowed)]
+        elif final and out.shape[-1] < allowed:
+            pad = [(0, 0)] * (out.ndim - 1) + \
+                [(0, allowed - out.shape[-1])]
+            out = jnp.pad(out, pad)
+    post, out = _apply_chain(struct.post_stages, state.post, out)
+    state = dataclasses.replace(state, post=post,
+                                emitted=state.emitted + out.shape[-1])
+    return state, out
+
+
+# --------------------------------------------------------------------------
+# Runner (single-connection wrapper)
+# --------------------------------------------------------------------------
+
+class StreamingRunner:
+    """Push chunks with :meth:`process`, finish with :meth:`flush`.
+
+    ``graph`` must be a streamable pipeline: a linear chain of sample-domain
+    stages (fir / iir_biquad), optionally wrapped around one
+    stft -> framewise-stages -> istft core (any DAG of framewise stages in
+    between, e.g. the Fig-9 mask DNN with fan-out).  ``params`` is the same
+    per-stage dict the compiled graph takes.  Chunks may have leading batch
+    / channel axes; the last axis is time and chunk lengths may vary.
+
+    ``block_frames`` sets how many new frames each drain compiles/executes
+    at once (one jitted core program per distinct block size);
+    ``fuse`` is forwarded to :meth:`SignalGraph.compile` for the per-block
+    core (``FuseLevel.STREAM`` = full v2 cross-einsum folding);
+    ``jit_blocks=False`` runs the core eagerly (debugging).
+
+    The carried state lives in ``self.state`` (a :class:`StreamState`
+    pytree); the graph analysis and compile caches in ``self.struct`` (a
+    :class:`StreamStructure`, shareable across runners of one graph).
+    """
+
+    def __init__(self, graph: SignalGraph, params=None,
+                 block_frames: int = 8,
+                 fuse: "FuseLevel | int" = FuseLevel.STREAM,
+                 jit_blocks: bool = True,
+                 struct: Optional[StreamStructure] = None):
+        self.graph = graph
+        self.params = params
+        self.block_frames = int(block_frames)
+        self.fuse = FuseLevel.coerce(fuse)
+        self.jit_blocks = jit_blocks
+        self.struct = struct if struct is not None \
+            else StreamStructure.analyze(graph)
+        if self.struct.framer is not None and self.struct.deframer is None:
+            raise ValueError("stft and istft must appear together")
+        self.state = StreamState()
 
     # -- streaming ----------------------------------------------------------
     def process(self, chunk: jax.Array) -> jax.Array:
         """Feed one chunk; returns the samples that became final."""
-        x = jnp.asarray(chunk)
-        for st in self.pre:
-            x = st(x)
-        if self.framer is None:
-            self._batch_shape = x.shape[:-1]
-            return x                           # pure sample chain: no latency
-
-        self._buf = x if self._buf is None else jnp.concatenate(
-            [self._buf, x], axis=-1)
-        self._total += x.shape[-1]
+        self.state, out = push_chunk(self.struct, self.state, chunk)
+        if out is not None:
+            return out                         # pure sample chain: no latency
         return self._drain(final=False)
 
     def flush(self) -> jax.Array:
         """Process remaining frames and emit the overlap-add tail."""
-        if self.framer is None:
-            return jnp.zeros((*self._batch_shape, 0))
+        if self.struct.framer is None:
+            return jnp.zeros((*self.state.batch_shape, 0))
         return self._drain(final=True)
 
-    def _avail_frames(self) -> int:
-        if self._total < self.frame:
-            return 0
-        return 1 + (self._total - self.frame) // self.hop
+    def _run_core(self, block: jax.Array, n_frames: int) -> jax.Array:
+        if not self.jit_blocks:
+            return self.struct.core_graph(n_frames, self.fuse)(
+                block, self.params)
+        return self.struct.core_jit(n_frames, self.fuse)(block, self.params)
 
     def _drain(self, final: bool) -> jax.Array:
-        frame, hop, C = self.frame, self.hop, self.context
-        f_avail = self._avail_frames()
-        f_ready = f_avail if final else max(self._f_next, f_avail - C)
-        pieces: List[jax.Array] = []
-        while self._f_next < f_ready:
-            count = min(self.block_frames, f_ready - self._f_next)
-            f_lo, f_hi = self._f_next, self._f_next + count
-            g0 = max(0, f_lo - C)
-            g1 = min(f_avail - 1, f_hi - 1 + C)
-            lo = g0 * hop - self._buf_start
-            hi = g1 * hop + frame - self._buf_start
-            block = self._buf[..., lo:hi]
-            frames = self._run_core(block, g1 - g0 + 1)
-            sel = frames[..., f_lo - g0:f_hi - g0, :]
-            acc = overlap_add(sel, hop)          # count*hop + frame-hop
-            if self._tail is None:
-                self._tail = jnp.zeros((*acc.shape[:-1], frame - hop),
-                                       dtype=acc.dtype)
-            acc = acc.at[..., :frame - hop].add(self._tail)
-            last = final and f_hi == f_avail
-            if last:
-                pieces.append(acc)               # includes the natural tail
-            else:
-                pieces.append(acc[..., :count * hop])
-                self._tail = acc[..., count * hop:]
-            self._f_next = f_hi
-            keep = max(0, self._f_next - C) * hop
-            if keep > self._buf_start:
-                self._buf = self._buf[..., keep - self._buf_start:]
-                self._buf_start = keep
-        if final and not pieces and self._tail is not None:
-            pieces.append(self._tail)            # everything already OLA'd
-            self._tail = None
-
-        if not pieces:
-            shape = (0,) if self._buf is None else \
-                (*self._buf.shape[:-1], 0)
+        self.state, out = drain_state(self.struct, self.state,
+                                      self.block_frames, self._run_core,
+                                      final)
+        if out is None:
+            shape = (0,) if self.state.buf is None else \
+                (*self.state.buf.shape[:-1], 0)
             return jnp.zeros(shape)
-        out = pieces[0] if len(pieces) == 1 else jnp.concatenate(
-            pieces, axis=-1)
-        if self.out_length is not None:
-            # istft length cap applies to the stream as a whole: every
-            # drain (not just the last) must stop at the target, and the
-            # final drain zero-pads if the natural output falls short.
-            allowed = self.out_length - self._emitted
-            if out.shape[-1] > allowed:
-                out = out[..., :max(0, allowed)]
-            elif final and out.shape[-1] < allowed:
-                pad = [(0, 0)] * (out.ndim - 1) + \
-                    [(0, allowed - out.shape[-1])]
-                out = jnp.pad(out, pad)
-        self._emitted += out.shape[-1]
-        for st in self.post:
-            out = st(out)
         return out

@@ -1,0 +1,196 @@
+"""Length-bucketing math and masked/padded execution exactness.
+
+Property-style sweeps (tests/_hypothesis_compat.py): any request length
+up to the largest bucket maps to the *smallest admissible* bucket, and
+masked bucketed execution is equal to unpadded offline execution for
+every stage class the StreamingRunner supports (the same class that is
+bucketable — time-local math).  Exactness is bitwise except the FIR
+im2col GEMM, whose XLA lowering is row-count dependent (same caveat and
+tolerance as tests/test_signal_streaming.py).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from _hypothesis_compat import given, settings, st
+
+from repro.serving import SignalRequest, SignalService
+from repro.signal import SignalGraph
+
+FRAME, HOP = 64, 32
+MAXLEN = 512
+
+
+# --------------------------------------------------------------------------
+# Bucket-selection math
+# --------------------------------------------------------------------------
+
+def _svc(graph_builder, **kw):
+    svc = SignalService(**kw)
+    svc.register("g", graph_builder())
+    return svc
+
+
+def _stft_istft():
+    g = SignalGraph("rt")
+    g.stft("spec", frame=FRAME, hop=HOP)
+    g.istft("out", "spec", hop=HOP)
+    g.output("out")
+    return g
+
+
+@settings(max_examples=60, deadline=None)
+@given(st.integers(FRAME, MAXLEN))
+def test_pow2_bucket_is_smallest_admissible(length):
+    svc = _svc(_stft_istft)
+    _, bucket = svc.group_key(
+        SignalRequest(rid=0, graph="g", samples=np.zeros(length,
+                                                         np.float32)))
+    assert bucket >= length >= FRAME
+    assert bucket & (bucket - 1) == 0          # a power of two
+    assert bucket // 2 < length                # the smallest such
+
+
+@settings(max_examples=60, deadline=None)
+@given(st.integers(FRAME, 3 * MAXLEN))
+def test_pinned_buckets_smallest_admissible_or_exact_fallback(length):
+    buckets = [128, 192, 512]
+    svc = _svc(_stft_istft, buckets=buckets)
+    got = svc.bucket_for("g", length)
+    admissible = [b for b in buckets if b >= length]
+    if admissible:
+        assert got == min(admissible)
+    else:
+        assert got is None                     # exact-length fallback
+        _, key_len = svc.group_key(
+            SignalRequest(rid=0, graph="g",
+                          samples=np.zeros(length, np.float32)))
+        assert key_len == length
+
+
+def test_bucket_respects_graph_min_length():
+    svc = _svc(_stft_istft, buckets=[16, 32, FRAME, 256])
+    # frame=64: buckets below the analysis frame are inadmissible
+    assert svc.bucket_for("g", FRAME) == FRAME
+    svc2 = _svc(_stft_istft)
+    assert svc2.bucket_for("g", FRAME) == FRAME  # pow2 path, == frame
+
+
+# --------------------------------------------------------------------------
+# Masked execution == unpadded execution, per supported stage class
+# --------------------------------------------------------------------------
+
+def _conv_mask_fn():
+    rng = np.random.default_rng(99)
+    W = (rng.standard_normal((3, 3, 1, 1)) * 0.2).astype(np.float32)
+
+    def conv_mask(p, z):
+        m = jnp.abs(z)[..., None]
+        squeeze = m.ndim == 3
+        if squeeze:
+            m = m[None]
+        y = jax.lax.conv_general_dilated(
+            m, jnp.asarray(W), (1, 1), "SAME",
+            dimension_numbers=("NHWC", "HWIO", "NHWC"))
+        if squeeze:
+            y = y[0]
+        return jax.nn.sigmoid(y[..., 0])
+    return conv_mask
+
+
+def _build(kind):
+    g = SignalGraph(kind)
+    if kind == "iir_chain":
+        g.iir_biquad("q", "input", b=[0.2, 0.3, 0.2], a=[1.0, -0.5, 0.25])
+        g.iir_biquad("q2", "q", b=[0.5, 0.1, 0.0], a=[1.0, 0.2, 0.1])
+        g.output("q2")
+    elif kind == "fir_chain":
+        g.fir("f", "input", taps=np.hanning(9) / 4)
+        g.output("f")
+    elif kind == "stft_istft":
+        g.stft("spec", frame=FRAME, hop=HOP)
+        g.istft("out", "spec", hop=HOP)
+        g.output("out")
+    elif kind == "conv_dnn":
+        g.stft("spec", frame=FRAME, hop=HOP)
+        g.dnn("mask", "spec", fn=_conv_mask_fn(), frame_context=1)
+        g.mul("enh", "spec", "mask")
+        g.istft("out", "enh", hop=HOP)
+        g.output("out")
+    elif kind == "mel_frontend":                  # frames-domain output
+        g.stft("spec", frame=FRAME, hop=HOP)
+        g.magnitude("mag", "spec", onesided=True)
+        g.mel_filterbank("mel", "mag", sr=16_000, n_mels=8)
+        g.output("mel")
+    elif kind == "full_chain":                    # fir -> core -> iir
+        g.fir("pre", "input", taps=np.hanning(8) / 4)
+        g.stft("spec", "pre", frame=FRAME, hop=HOP)
+        g.dnn("mask", "spec",
+              fn=lambda p, z: jax.nn.sigmoid(jnp.abs(z) - 1.0))
+        g.mul("enh", "spec", "mask")
+        g.istft("mid", "enh", hop=HOP)
+        g.iir_biquad("post", "mid", b=[0.3, 0.2, 0.1], a=[1.0, -0.4, 0.2])
+        g.output("post")
+    else:
+        raise AssertionError(kind)
+    return g
+
+
+_EXACT_KINDS = ("iir_chain", "stft_istft", "conv_dnn", "mel_frontend")
+_CLOSE_KINDS = ("fir_chain", "full_chain")     # FIR GEMM: row-count ULPs
+_SERVICES = {}
+
+
+def _service_for(kind):
+    if kind not in _SERVICES:
+        svc = SignalService(batch_size=4)
+        svc.register("g", _build(kind))
+        _SERVICES[kind] = svc
+    return _SERVICES[kind]
+
+
+@settings(max_examples=6, deadline=None)
+@given(st.sampled_from(_EXACT_KINDS + _CLOSE_KINDS), st.data())
+def test_masked_bucketed_equals_unpadded(kind, data):
+    length = data.draw(st.integers(FRAME, MAXLEN), label="length")
+    svc = _service_for(kind)
+    graph = svc._graphs["g"].graph
+    rng = np.random.default_rng(length * 31 + len(kind))
+    x = rng.standard_normal(length).astype(np.float32)
+    res = svc.serve([SignalRequest(rid=0, graph="g", samples=x)])[0]
+    off = np.asarray(graph.compile(length)(jnp.asarray(x), None))
+    assert res.shape == off.shape
+    if kind in _EXACT_KINDS:
+        np.testing.assert_array_equal(res, off)
+    else:
+        np.testing.assert_allclose(res, off, atol=2e-6, rtol=1e-5)
+
+
+def test_mixed_length_wave_masks_rowwise():
+    """One stacked wave mixing four lengths == four offline runs."""
+    svc = _service_for("conv_dnn")
+    graph = svc._graphs["g"].graph
+    rng = np.random.default_rng(5)
+    lens = [FRAME, 200, 300, MAXLEN]
+    reqs = [SignalRequest(rid=i, graph="g",
+                          samples=rng.standard_normal(t).astype(np.float32))
+            for i, t in enumerate(lens)]
+    res = svc.serve(reqs)
+    assert sorted(res) == [0, 1, 2, 3]
+    for i, t in enumerate(lens):
+        off = np.asarray(graph.compile(t)(jnp.asarray(reqs[i].samples),
+                                          None))
+        np.testing.assert_array_equal(res[i], off)
+
+
+def test_bucketing_disabled_reproduces_exact_grouping():
+    svc = SignalService(batch_size=4, bucketing=False)
+    svc.register("g", _stft_istft())
+    rng = np.random.default_rng(6)
+    x = rng.standard_normal(200).astype(np.float32)
+    res = svc.serve([SignalRequest(rid=0, graph="g", samples=x)])
+    assert svc.stats["exact"] == 1 and svc.stats["bucketed"] == 0
+    g = _stft_istft()
+    np.testing.assert_array_equal(
+        res[0], np.asarray(g.compile(200)(jnp.asarray(x), None)))

@@ -128,7 +128,7 @@ def test_fig9_roundtrip_matches_direct_path():
     def mask_fn(p, z):
         return jax.nn.sigmoid(jnp.abs(z) - 1.0)
 
-    got = np.asarray(_fig9(T, mask_fn).compile(T, fuse=True)(x))
+    got = np.asarray(_fig9(T, mask_fn).compile(T, fuse=2)(x))
     spec = stft(x, FRAME, HOP)
     ref = istft(spec * mask_fn(None, spec).astype(spec.dtype), HOP, length=T)
     np.testing.assert_array_equal(got, np.asarray(ref))
@@ -141,8 +141,8 @@ def test_fused_equals_unfused_bitwise():
     rng = np.random.default_rng(7)
     x = jnp.asarray(rng.standard_normal(T), jnp.float32)
     g = _fig9(T)
-    yu = np.asarray(g.compile(T, fuse=False)(x))
-    for level in (1, 2, True):
+    yu = np.asarray(g.compile(T, fuse=0)(x))
+    for level in (1, 2):
         np.testing.assert_array_equal(
             np.asarray(g.compile(T, fuse=level)(x)), yu)
 
@@ -152,7 +152,7 @@ def test_fig9_fused_fewer_fabric_passes():
     shuffle traffic) at each fusion level than the op-by-op lowering."""
     T = 4096
     g = _fig9(T)
-    v2 = g.compile(T, fuse=True)
+    v2 = g.compile(T, fuse=2)
     v1 = g.compile(T, fuse=1)
     unfused = g.compile(T, fuse=0)
     # v1: framing + interleave + bit-reversal + stage-1 gather collapse
@@ -324,9 +324,11 @@ def test_compile_rejects_bad_fuse_level():
     for bad in (3, -1, 1.5, "full"):
         with pytest.raises(ValueError):
             g.compile(1024, fuse=bad)
-    # numpy bools behave like python bools (True -> full v2)
-    assert g.compile(1024, fuse=np.True_).fuse_level == 2
-    assert g.compile(1024, fuse=np.False_).fuse_level == 0
+    # numpy bools behave like python bools (True -> full v2, deprecated)
+    with pytest.warns(DeprecationWarning):
+        assert g.compile(1024, fuse=np.True_).fuse_level == 2
+    with pytest.warns(DeprecationWarning):
+        assert g.compile(1024, fuse=np.False_).fuse_level == 0
     assert g.compile(1024, fuse=np.int64(1)).fuse_level == 1
 
 
@@ -355,3 +357,23 @@ def test_graph_validation_errors():
     g2.magnitude("m", "input")            # magnitude needs complex input
     with pytest.raises(ValueError):
         g2.compile(64)
+
+
+def test_fuse_level_enum_and_bool_deprecation():
+    """fuse is a proper FuseLevel int enum; the historical True/False
+    spelling still works but warns."""
+    from repro.signal import FuseLevel
+
+    g = _fig9(1024)
+    with pytest.warns(DeprecationWarning, match="deprecated"):
+        c_true = g.compile(1024, fuse=True)
+    with pytest.warns(DeprecationWarning, match="deprecated"):
+        c_false = g.compile(1024, fuse=False)
+    assert c_true.fuse_level == int(FuseLevel.STREAM) == 2
+    assert c_false.fuse_level == int(FuseLevel.NONE) == 0
+    assert g.compile(1024, fuse=FuseLevel.GATHER).fuse_level == 1
+    assert g.compile(1024).fuse_level == 2           # default: STREAM
+    assert FuseLevel.coerce(1) is FuseLevel.GATHER   # plain ints: no warning
+    assert FuseLevel.coerce(FuseLevel.NONE) is FuseLevel.NONE
+    with pytest.raises(ValueError):
+        FuseLevel.coerce(7)

@@ -1,14 +1,17 @@
-"""SignalService batching + CoScheduler LLM/DSP interleaving."""
+"""SignalService continuous batching (length buckets, masked execution),
+streaming sessions, and the policy-driven CoScheduler."""
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
 from repro.configs import get_config
 from repro.models.zoo import get_model
-from repro.serving import (CoScheduler, Request, ServingEngine,
-                           SignalRequest, SignalService)
-from repro.signal import SignalGraph
+from repro.serving import (CoScheduler, CostBalancedPolicy, DecodeWave,
+                           Request, ServingEngine, SignalRequest,
+                           SignalService, get_policy)
+from repro.signal import SignalGraph, StreamingRunner
 
 T = 1024
 
@@ -19,6 +22,16 @@ def _fig9():
     g.dnn("mask", "spec", fn=lambda p, z: jax.nn.sigmoid(jnp.abs(z) - 1.0))
     g.mul("enh", "spec", "mask")
     g.istft("out", "enh", hop=128, length=T)
+    g.output("out")
+    return g
+
+
+def _fig9_natural(name="fig9n"):
+    g = SignalGraph(name)
+    g.stft("spec", frame=256, hop=128)
+    g.dnn("mask", "spec", fn=lambda p, z: jax.nn.sigmoid(jnp.abs(z) - 1.0))
+    g.mul("enh", "spec", "mask")
+    g.istft("out", "enh", hop=128)
     g.output("out")
     return g
 
@@ -105,3 +118,390 @@ def test_coscheduler_interleaves_and_matches_standalone():
     for i, s in enumerate(sigs):
         np.testing.assert_array_equal(
             dsp[100 + i], np.asarray(compiled(jnp.asarray(s), None)))
+
+
+# --------------------------------------------------------------------------
+# Continuous batching: length buckets + masked execution
+# --------------------------------------------------------------------------
+
+def test_mixed_lengths_bucketed_bit_identical():
+    """Acceptance: >= 4 distinct lengths execute via <= 2 bucket
+    compilations, results bit-identical to per-request offline
+    graph.compile(length)(x)."""
+    g = _fig9_natural()
+    svc = SignalService(batch_size=8)
+    svc.register("fig9", g)
+    rng = np.random.default_rng(10)
+    lens = [700, 900, 1024, 1500, 1800]
+    sigs = [rng.standard_normal(t).astype(np.float32) for t in lens]
+    res = svc.serve([SignalRequest(rid=i, graph="fig9", samples=s)
+                     for i, s in enumerate(sigs)])
+    assert sorted(res) == list(range(len(lens)))
+    assert svc.stats["compiles"] <= 2          # buckets 1024 and 2048
+    assert svc.stats["batches"] == 2
+    for i, (t, s) in enumerate(zip(lens, sigs)):
+        off = np.asarray(g.compile(t)(jnp.asarray(s), None))
+        np.testing.assert_array_equal(res[i], off)
+
+
+def test_bucketed_requests_join_next_tick_midflight():
+    """Continuous admission: a request submitted after a step joins the
+    next step's wave for its bucket."""
+    g = _fig9_natural()
+    svc = SignalService(batch_size=4)
+    svc.register("fig9", g)
+    rng = np.random.default_rng(11)
+    a = SignalRequest(rid=0, graph="fig9",
+                      samples=rng.standard_normal(700).astype(np.float32))
+    svc.submit(a)
+    first = svc.step()
+    assert list(first) == [0]
+    # two new mixed-length requests of the same bucket arrive "mid-flight"
+    b = SignalRequest(rid=1, graph="fig9",
+                      samples=rng.standard_normal(800).astype(np.float32))
+    c = SignalRequest(rid=2, graph="fig9",
+                      samples=rng.standard_normal(1024).astype(np.float32))
+    svc.submit(b)
+    svc.submit(c)
+    second = svc.step()
+    assert sorted(second) == [1, 2]            # one batched call, one bucket
+    assert svc.stats["compiles"] == 1          # same 1024 bucket throughout
+
+
+def test_exact_length_fallback_for_non_maskable_graph():
+    """Graphs whose math is global over the input axis (dct on raw
+    samples) cannot be masked; they group by exact length as before."""
+    g = SignalGraph("dct")
+    g.dct("d", "input")
+    g.output("d")
+    svc = SignalService(batch_size=4)
+    svc.register("dct", g)
+    rng = np.random.default_rng(12)
+    x1 = rng.standard_normal(48).astype(np.float32)
+    x2 = rng.standard_normal(64).astype(np.float32)
+    res = svc.serve([SignalRequest(rid=0, graph="dct", samples=x1),
+                     SignalRequest(rid=1, graph="dct", samples=x2)])
+    assert svc.stats["exact"] == 2 and svc.stats["bucketed"] == 0
+    np.testing.assert_array_equal(
+        res[0], np.asarray(g.compile(48)(jnp.asarray(x1), None)))
+    np.testing.assert_array_equal(
+        res[1], np.asarray(g.compile(64)(jnp.asarray(x2), None)))
+
+
+def test_submit_validates_samples_early():
+    svc = SignalService()
+    svc.register("fig9", _fig9_natural())
+    ok = np.zeros(512, np.float32)
+    with pytest.raises(KeyError):
+        svc.submit(SignalRequest(rid=0, graph="nope", samples=ok))
+    with pytest.raises(ValueError, match="1-D"):
+        svc.submit(SignalRequest(rid=1, graph="fig9",
+                                 samples=np.zeros((2, 512), np.float32)))
+    with pytest.raises(TypeError, match="real-valued"):
+        svc.submit(SignalRequest(rid=2, graph="fig9",
+                                 samples=np.zeros(512, np.complex64)))
+    with pytest.raises(ValueError, match="too short"):
+        svc.submit(SignalRequest(rid=3, graph="fig9",
+                                 samples=np.zeros(100, np.float32)))
+    # ints coerce to float32 instead of failing inside the jitted batch
+    r = SignalRequest(rid=4, graph="fig9",
+                      samples=np.arange(512, dtype=np.int32))
+    svc.submit(r)
+    assert r.samples.dtype == np.float32
+    res = svc.step()
+    assert 4 in res
+
+
+def test_reregister_drops_queued_requests():
+    """Regression: re-registering a name while requests are queued must
+    not execute them against the replacement graph."""
+    g1 = _fig9_natural("a")
+    svc = SignalService(batch_size=4)
+    svc.register("g", g1)
+    rng = np.random.default_rng(13)
+    stale = SignalRequest(rid=0, graph="g",
+                          samples=rng.standard_normal(700).astype(np.float32))
+    svc.submit(stale)
+    g2 = SignalGraph("b")                      # different pipeline, same name
+    g2.stft("spec", frame=512, hop=256)
+    g2.istft("out", "spec", hop=256)
+    g2.output("out")
+    svc.register("g", g2)
+    assert svc.pending() == 0                  # stale request dropped...
+    assert stale.error is not None             # ...and told why
+    assert svc.stats["dropped"] == 1
+    fresh = SignalRequest(rid=1, graph="g",
+                          samples=rng.standard_normal(1024).astype(
+                              np.float32))
+    res = svc.serve([fresh])                   # new graph serves cleanly
+    np.testing.assert_array_equal(
+        res[1], np.asarray(g2.compile(1024)(jnp.asarray(fresh.samples),
+                                            None)))
+
+
+# --------------------------------------------------------------------------
+# Streaming sessions
+# --------------------------------------------------------------------------
+
+def test_stream_sessions_bit_identical_one_call_per_tick():
+    """Acceptance: N concurrent sessions over the Fig-9 graph are
+    bit-identical to offline, with ONE jitted core call per tick for
+    same-graph lock-stepped sessions."""
+    g = _fig9_natural()
+    svc = SignalService(block_frames=4)
+    svc.register("fig9", g)
+    rng = np.random.default_rng(14)
+    N, total, chunk = 3, 2048, 256
+    waves = [rng.standard_normal(total).astype(np.float32)
+             for _ in range(N)]
+    sessions = [svc.open_stream("fig9") for _ in range(N)]
+    outs = [[] for _ in range(N)]
+    for lo in range(0, total, chunk):
+        for s, w in zip(sessions, waves):
+            s.feed(jnp.asarray(w[lo:lo + chunk]))
+        calls = svc.stream_step()
+        assert calls <= 1                      # batched, not per-session
+        for i, s in enumerate(sessions):
+            outs[i].append(s.read())
+    for i, s in enumerate(sessions):
+        outs[i].append(s.close())
+    assert svc.stream_sessions() == 0          # all closed
+    for i, w in enumerate(waves):
+        got = np.concatenate([p for p in outs[i] if p.size], axis=-1)
+        off = np.asarray(g.compile(total)(jnp.asarray(w), None))
+        np.testing.assert_array_equal(got, off)
+
+
+def test_stream_session_matches_private_runner():
+    """A service session and a private StreamingRunner see identical
+    streams (same chunking, same block size)."""
+    g = _fig9_natural()
+    svc = SignalService(block_frames=4)
+    svc.register("fig9", g)
+    rng = np.random.default_rng(15)
+    w = rng.standard_normal(1700).astype(np.float32)
+    sess = svc.open_stream("fig9")
+    run = StreamingRunner(g, block_frames=4)
+    got, ref = [], []
+    for lo in (0, 300, 900):
+        hi = {0: 300, 300: 900, 900: 1700}[lo]
+        sess.feed(jnp.asarray(w[lo:hi]))
+        svc.stream_step()
+        got.append(sess.read())
+        ref.append(np.asarray(run.process(jnp.asarray(w[lo:hi]))))
+    got.append(sess.close())
+    ref.append(np.asarray(run.flush()))
+    got = np.concatenate([p for p in got if p.size], axis=-1)
+    ref = np.concatenate([p for p in ref if p.size], axis=-1)
+    np.testing.assert_array_equal(got, ref)
+
+
+def test_open_stream_rejects_non_streamable():
+    g = SignalGraph("dct")
+    g.dct("d", "input")
+    g.output("d")
+    svc = SignalService()
+    svc.register("dct", g)
+    with pytest.raises(ValueError, match="not streamable"):
+        svc.open_stream("dct")
+
+
+# --------------------------------------------------------------------------
+# Scheduling policies
+# --------------------------------------------------------------------------
+
+def test_latency_aware_serves_earliest_deadline_first():
+    g = _fig9_natural()
+    svc = SignalService(batch_size=1)          # one request per batch
+    svc.register("fig9", g)
+    rng = np.random.default_rng(16)
+    done_order = []
+    reqs = []
+    for i, dl in enumerate([5.0, 1.0, 3.0]):   # rid 1 most urgent
+        r = SignalRequest(rid=i, graph="fig9", deadline=dl,
+                          samples=rng.standard_normal(T).astype(np.float32))
+        reqs.append(r)
+        svc.submit(r)
+    pol = get_policy("latency_aware")
+
+    class _Sched:
+        signals = svc
+        def llm_pending(self):
+            return False
+        def llm_earliest_deadline(self):
+            import math
+            return math.inf
+
+    while svc.pending():
+        plan = pol.plan(_Sched())
+        res = svc.step(pick=svc.make_pick(plan.dsp_key, plan.dsp_order))
+        done_order.extend(res)
+    assert done_order == [1, 2, 0]             # earliest deadline first
+
+
+def test_cost_balanced_policy_validates_target():
+    with pytest.raises(ValueError):
+        CostBalancedPolicy(dsp_target=1.5)
+    assert get_policy(CostBalancedPolicy(0.3)).dsp_target == 0.3
+    with pytest.raises(ValueError, match="unknown policy"):
+        get_policy("nope")
+
+
+def test_policies_complete_all_work():
+    eng = _tiny_engine()
+    rng = np.random.default_rng(17)
+    for policy in ("latency_aware", "cost_balanced"):
+        svc = SignalService(batch_size=2)
+        g = _fig9()
+        svc.register("fig9", g)
+        sched = CoScheduler(eng, svc, policy=policy)
+        sigs = [rng.standard_normal(T).astype(np.float32) for _ in range(3)]
+        for i, s in enumerate(sigs):
+            sched.submit_signal(SignalRequest(
+                rid=100 + i, graph="fig9", deadline=float(i), samples=s))
+            sched.submit_llm(Request(rid=i, prompt=[i + 1, i + 2],
+                                     max_new=3, deadline=float(10 + i)))
+        llm, dsp = sched.run()
+        assert sorted(llm) == [0, 1, 2]
+        assert sorted(dsp) == [100, 101, 102]
+        occ = sched.occupancy()
+        assert occ["llm_cycles"] > 0 and occ["dsp_cycles"] > 0
+        # DSP outputs remain bit-identical under any policy
+        compiled = g.compile(T).jit()
+        for i, s in enumerate(sigs):
+            np.testing.assert_array_equal(
+                dsp[100 + i], np.asarray(compiled(jnp.asarray(s), None)))
+
+
+def test_decode_wave_midflight_admission_greedy_identical():
+    """A newcomer admitted into a free slot mid-flight continues exactly
+    like a solo run when padded prefix lengths align (greedy decode is
+    context-deterministic)."""
+    eng = _tiny_engine()                       # batch_size=2, temperature 0
+    short = Request(rid=0, prompt=[1, 2, 3], max_new=2)
+    long = Request(rid=1, prompt=[4, 5, 6], max_new=6)
+    wave = DecodeWave(eng, [short, long])
+    wave.step()
+    wave.step()                                # short done after 2 steps
+    assert wave.free_slots() == 1
+    # newcomer whose prompt length equals the active request's prefix
+    # (3 prompt + 2 generated = 5) so left-padding stays aligned
+    nc_prompt = [7, 8, 9, 10, 11]
+    newcomer = Request(rid=2, prompt=nc_prompt, max_new=3)
+    finished = wave.admit([newcomer])
+    assert list(finished) == [0]
+    while not wave.done:
+        wave.step()
+    res = wave.results()
+    assert len(res[1]) == 6 and len(res[2]) == 3
+    solo1 = eng.serve([Request(rid=1, prompt=[4, 5, 6], max_new=6)])
+    solo2 = eng.serve([Request(rid=2, prompt=nc_prompt, max_new=3)])
+    assert res[1] == solo1[1]
+    assert res[2] == solo2[2]
+
+
+def test_decode_wave_admission_requires_greedy():
+    cfg = get_config("starcoder2-3b").reduced(
+        n_layers=2, d_model=32, n_heads=4, d_ff=64, vocab=128)
+    bundle = get_model(cfg)
+    eng = ServingEngine(bundle, batch_size=2, temperature=0.7)
+    eng.load(bundle.init(jax.random.PRNGKey(0)))
+    wave = DecodeWave(eng, [Request(rid=0, prompt=[1, 2], max_new=2)])
+    with pytest.raises(ValueError, match="greedy"):
+        wave.admit([Request(rid=1, prompt=[3, 4], max_new=2)])
+
+
+def test_decode_step_cost_positive_and_scales():
+    eng = _tiny_engine()
+    c1 = eng.decode_step_cost(1)
+    c4 = eng.decode_step_cost(4)
+    assert c1 > 0 and c4 >= c1
+
+
+def test_latency_aware_streams_ride_along_llm_ticks():
+    """Regression: ready stream blocks must advance even while
+    deadline-bearing LLM traffic wins every EDF comparison (streaming
+    connections are real-time; they ride along on LLM ticks)."""
+    eng = _tiny_engine()
+    svc = SignalService(block_frames=2)
+    g = _fig9_natural()
+    svc.register("fig9", g)
+    sched = CoScheduler(eng, svc, policy="latency_aware")
+    rng = np.random.default_rng(18)
+    sess = svc.open_stream("fig9")
+    sess.feed(jnp.asarray(rng.standard_normal(T).astype(np.float32)))
+    for i in range(4):                         # urgent LLM traffic only
+        sched.submit_llm(Request(rid=i, prompt=[1, 2, 3], max_new=6,
+                                 deadline=1.0))
+    for _ in range(3):
+        sched.tick()
+    assert svc.stats["core_calls"] > 0         # streams advanced
+    got = [sess.read()]
+    got.append(sess.close())
+    assert sum(p.shape[-1] for p in got) > 0
+
+
+def test_reregister_detaches_open_stream_sessions():
+    """Regression: a live session's carried state was built under the
+    old graph's frame/hop — replacement must detach it, not let it
+    execute against the new registration."""
+    g1 = _fig9_natural("a")
+    svc = SignalService(block_frames=2)
+    svc.register("g", g1)
+    rng = np.random.default_rng(19)
+    sess = svc.open_stream("g")
+    sess.feed(jnp.asarray(rng.standard_normal(700).astype(np.float32)))
+    g2 = SignalGraph("b")
+    g2.stft("spec", frame=512, hop=256)       # different frame/hop
+    g2.istft("out", "spec", hop=256)
+    g2.output("out")
+    svc.register("g", g2)
+    assert sess.closed and sess.error is not None
+    assert svc.stats["detached_sessions"] == 1
+    with pytest.raises(ValueError, match="re-registered"):
+        sess.feed(np.zeros(128, np.float32))
+    assert svc.stream_step() == 0              # no crash, nothing to run
+    sess2 = svc.open_stream("g")               # new sessions work
+    sess2.feed(np.zeros(1024, np.float32))
+    svc.stream_step()
+    sess2.close()
+
+
+def test_latency_aware_llm_progresses_alongside_streams():
+    """Regression: deadline-less LLM traffic must advance while a
+    continuously-fed stream session has ready blocks (no DSP-tie
+    starvation)."""
+    eng = _tiny_engine()
+    svc = SignalService(block_frames=2)
+    g = _fig9_natural()
+    svc.register("fig9", g)
+    sched = CoScheduler(eng, svc, policy="latency_aware")
+    rng = np.random.default_rng(20)
+    sess = svc.open_stream("fig9")
+    for i in range(2):
+        sched.submit_llm(Request(rid=i, prompt=[1, 2, 3], max_new=4))
+    for _ in range(12):                        # keep the stream fed
+        sess.feed(jnp.asarray(rng.standard_normal(256).astype(np.float32)))
+        sched.tick()
+    assert sorted(sched.llm_results) == [0, 1]  # LLM completed under load
+    assert svc.stats["core_calls"] > 0          # stream advanced too
+    sess.close()
+
+
+def test_latency_aware_deadline_less_degrades_to_round_robin():
+    """Regression: with no deadlines anywhere (inf == inf tie), EDF must
+    not pick DSP forever — both classes advance every tick."""
+    eng = _tiny_engine()
+    svc = SignalService(batch_size=1)
+    g = _fig9_natural()
+    svc.register("fig9", g)
+    sched = CoScheduler(eng, svc, policy="latency_aware")
+    rng = np.random.default_rng(21)
+    sched.submit_llm(Request(rid=0, prompt=[1, 2, 3], max_new=3))
+    for i in range(4):                         # steady deadline-less DSP
+        sched.submit_signal(SignalRequest(
+            rid=100 + i, graph="fig9",
+            samples=rng.standard_normal(T).astype(np.float32)))
+        sched.tick()
+    assert 0 in sched.llm_results              # LLM finished alongside DSP
+    assert len(sched.dsp_results) >= 3

@@ -135,7 +135,7 @@ def test_streaming_v2_fusion_bit_identical_across_levels():
     g.mul("enh", "spec", "mask")
     g.istft("out", "enh", hop=HOP, length=T)
     g.output("out")
-    off_unfused = np.asarray(g.compile(T, fuse=False)(jnp.asarray(x)))
+    off_unfused = np.asarray(g.compile(T, fuse=0)(jnp.asarray(x)))
     off_v2 = np.asarray(g.compile(T, fuse=2)(jnp.asarray(x)))
     got = _stream(g, x, [300, 812, 1500, 3000], block_frames=4, fuse=2)
     assert np.array_equal(off_v2, off_unfused)
@@ -199,3 +199,95 @@ def test_streaming_rejects_non_streamable():
     g2.output("d")
     with pytest.raises(ValueError):
         StreamingRunner(g2)
+
+
+def test_stream_state_is_stackable_pytree():
+    """Lock-stepped connections' carried states stack/unstack across a
+    leading batch axis (what the service's batched sessions rely on)."""
+    from repro.signal.streaming import stack_states, unstack_states
+
+    T, chunk = 1024, 256
+    rng = np.random.default_rng(8)
+    g = SignalGraph("rt")
+    g.fir("pre", "input", taps=np.hanning(8) / 4)
+    g.stft("spec", "pre", frame=FRAME, hop=HOP)
+    g.istft("out", "spec", hop=HOP)
+    g.output("out")
+    runners = [StreamingRunner(g, block_frames=4) for _ in range(2)]
+    waves = [rng.standard_normal(T).astype(np.float32) for _ in range(2)]
+    for r, w in zip(runners, waves):
+        r.process(jnp.asarray(w[:chunk]))
+        r.process(jnp.asarray(w[chunk:2 * chunk]))
+    stacked = stack_states([r.state for r in runners])
+    assert stacked.buf.shape[0] == 2           # new leading batch axis
+    back = unstack_states(stacked, 2)
+    for r, s in zip(runners, back):
+        assert s.total == r.state.total and s.f_next == r.state.f_next
+        np.testing.assert_array_equal(np.asarray(s.buf),
+                                      np.asarray(r.state.buf))
+        for a, b in zip(s.pre, r.state.pre):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    # out-of-step states refuse to stack
+    runners[0].process(jnp.asarray(waves[0][2 * chunk:3 * chunk]))
+    with pytest.raises(ValueError, match="lock-step"):
+        stack_states([r.state for r in runners])
+
+
+def test_stream_structure_analysis_fields():
+    from repro.signal import StreamStructure
+
+    g = SignalGraph("chain")
+    g.fir("pre", "input", taps=[1.0, 0.5])
+    g.stft("spec", "pre", frame=FRAME, hop=HOP)
+    g.dnn("mask", "spec", fn=lambda p, z: z, frame_context=2)
+    g.mul("enh", "spec", "mask")
+    g.istft("mid", "enh", hop=HOP, length=1000)
+    g.iir_biquad("post", "mid", b=[0.3, 0.2, 0.1], a=[1.0, -0.4, 0.2])
+    g.output("post")
+    s = StreamStructure.analyze(g)
+    assert s.pre_names == ["pre"] and s.post_names == ["post"]
+    assert s.framer == "spec" and s.deframer == "mid"
+    assert (s.frame, s.hop, s.context, s.out_length) == (FRAME, HOP, 2,
+                                                         1000)
+    assert s.min_length == FRAME
+    assert s.valid_frames(FRAME) == 1
+    assert s.out_count(2048) == 1000           # declared istft length wins
+
+    # frames-domain frontend: analyzable (bucketable) but not streamable
+    f = SignalGraph("mel")
+    f.stft("spec", frame=FRAME, hop=HOP)
+    f.magnitude("mag", "spec", onesided=True)
+    f.mel_filterbank("mel", "mag", sr=16_000, n_mels=8)
+    f.output("mel")
+    fs = StreamStructure.analyze(f)
+    assert fs.deframer is None
+    assert fs.out_count(FRAME + 3 * HOP) == 4  # valid frame rows
+    with pytest.raises(ValueError):
+        StreamingRunner(f)                     # no istft: cannot stream
+
+    bad = SignalGraph("dct")
+    bad.dct("d", "input")
+    bad.output("d")
+    with pytest.raises(ValueError):
+        StreamStructure.analyze(bad)
+
+
+def test_shared_structure_core_cache_across_runners():
+    """Runners built on one StreamStructure share compiled core programs
+    (what keeps N sessions at one compile per block shape)."""
+    from repro.signal import StreamStructure
+
+    g = SignalGraph("rt")
+    g.stft("spec", frame=FRAME, hop=HOP)
+    g.istft("out", "spec", hop=HOP)
+    g.output("out")
+    struct = StreamStructure.analyze(g)
+    r1 = StreamingRunner(g, block_frames=4, struct=struct)
+    r2 = StreamingRunner(g, block_frames=4, struct=struct)
+    rng = np.random.default_rng(9)
+    w = rng.standard_normal(1024).astype(np.float32)
+    r1.process(jnp.asarray(w))
+    r2.process(jnp.asarray(w))
+    assert len(struct._core_cache) >= 1
+    assert r1.struct is r2.struct
