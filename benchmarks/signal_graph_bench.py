@@ -48,14 +48,14 @@ def _graphs(length: int):
              fn=lambda p, z: jax.nn.sigmoid(jnp.abs(z) - 1.0))
     fig9.mul("enh", "spec", "mask")
     fig9.istft("out", "enh", hop=128, length=length)
-    fig9.output("out")
+    fig9.outputs("out")
 
     front = SignalGraph("fir_stft_mel")
     front.fir("pre", "input", taps=np.hanning(16) / 8.0)
     front.stft("spec", "pre", frame=256, hop=128)
     front.magnitude("mag", "spec", onesided=True)
     front.mel_filterbank("mel", "mag", sr=16_000, n_mels=40)
-    front.output("mel")
+    front.outputs("mel")
 
     return [fig9, front]
 
@@ -96,10 +96,101 @@ def format_row(row: Tuple) -> str:
             f"{cycles},{us:.1f}")
 
 
+# -- multi-output SigProgram: shared-prefix reuse vs two single compiles --
+
+def _fig9_multi(length: int, outputs):
+    from repro.signal import SignalGraph
+
+    g = SignalGraph("fig9_multi")
+    g.stft("spec", frame=256, hop=128)
+    g.dnn("mask", "spec",
+          fn=lambda p, z: jax.nn.sigmoid(jnp.abs(z) - 1.0))
+    g.mul("enh", "spec", "mask")
+    g.istft("out", "enh", hop=128, length=length)
+    g.magnitude("mag", "enh", onesided=True)
+    g.mel_filterbank("mel", "mag", sr=16_000, n_mels=40)
+    g.outputs(*outputs)
+    return g
+
+
+MULTI_HEADER = ("graph,variant,fabric_passes,shuffle_words,shared_passes,"
+                "us_per_call")
+
+
+def multi_output_rows(length: int = 4096, batch: int = 4) -> List[Tuple]:
+    """One compiled program with outputs('out', 'mel') vs the SAME
+    pipeline compiled twice with a single output each: the multi-output
+    program lowers the shared prefix (stft -> mask -> mul) once, so its
+    pass/word totals and wall clock sit well under the two-compile sum."""
+    from repro.core.perf_model import signal_graph_report
+
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.standard_normal((batch, length)), jnp.float32)
+    out = []
+
+    multi = _fig9_multi(length, ("out", "mel")).compile(length)
+    rep = signal_graph_report(multi)
+    us = _bench(multi.jit(), x, None)
+    out.append(("fig9_multi", "multi[out+mel]", rep["fabric_passes"],
+                rep["shuffle_words"],
+                rep["per_output"]["shared"]["fabric_passes"], us))
+
+    singles = [_fig9_multi(length, (o,)).compile(length)
+               for o in ("out", "mel")]
+    reps = [signal_graph_report(c) for c in singles]
+    us2 = sum(_bench(c.jit(), x, None) for c in singles)
+    out.append(("fig9_multi", "2x single",
+                sum(r["fabric_passes"] for r in reps),
+                sum(r["shuffle_words"] for r in reps), 0, us2))
+    return out
+
+
+GRAD_HEADER = "graph,variant,us_per_step"
+
+
+def grad_rows(length: int = 4096, batch: int = 4) -> List[Tuple]:
+    """value_and_grad step time of a learned-FIR + dnn-mask Fig-9
+    variant (the SigProgram training surface) next to its forward pass."""
+    from repro.signal import SignalGraph
+
+    g = SignalGraph("fig9_learned")
+    taps = np.zeros(9, np.float32)
+    taps[0] = 1.0
+    g.fir("front", "input", taps=taps)
+    g.stft("spec", "front", frame=256, hop=128)
+    g.dnn("mask", "spec",
+          fn=lambda p, z: jax.nn.sigmoid(jnp.abs(z) - 1.0))
+    g.mul("enh", "spec", "mask")
+    g.istft("out", "enh", hop=128, length=length)
+    g.outputs("out")
+    c = g.compile(length)
+    params = c.init_params()
+    rng = np.random.default_rng(1)
+    x = jnp.asarray(rng.standard_normal((batch, length)), jnp.float32)
+
+    fwd = jax.jit(lambda p, x: c(x, p)["out"])
+    us_fwd = _bench(fwd, params, x)
+
+    def loss(outs, target):
+        return jnp.mean((outs["out"] - target) ** 2)
+    vag = jax.jit(c.value_and_grad(loss, wrt=("front",)))
+    us_vag = _bench(vag, params, x, jnp.zeros_like(x))
+    return [("fig9_learned", "forward", us_fwd),
+            ("fig9_learned", "value_and_grad", us_vag)]
+
+
 def main() -> None:
     print(HEADER)
     for row in rows():
         print(format_row(row))
+    print()
+    print(MULTI_HEADER)
+    for name, variant, passes, words, shared, us in multi_output_rows():
+        print(f"{name},{variant},{passes},{words},{shared},{us:.1f}")
+    print()
+    print(GRAD_HEADER)
+    for name, variant, us in grad_rows():
+        print(f"{name},{variant},{us:.1f}")
 
 
 if __name__ == "__main__":

@@ -47,7 +47,7 @@ def _graph():
     g.dnn("mask", "spec", fn=lambda p, z: jax.nn.sigmoid(jnp.abs(z) - 1.0))
     g.mul("enh", "spec", "mask")
     g.istft("out", "enh", hop=HOP)
-    g.output("out")
+    g.outputs("out")
     return g
 
 
@@ -153,10 +153,11 @@ def simulate_sessions(n_sessions: int, n_ticks: int,
             s.feed(jnp.asarray(rng.standard_normal(chunk).astype(
                 np.float32)))
         calls.append(svc.stream_step())
+        empty = np.zeros(0, np.float32)
         for s in sessions:
-            emitted += s.read().shape[-1]
+            emitted += s.read().get("out", empty).shape[-1]
     for s in sessions:
-        emitted += s.close().shape[-1]
+        emitted += s.close().get("out", np.zeros(0, np.float32)).shape[-1]
     active = [c for c in calls if c]
     return {
         "sessions": n_sessions,

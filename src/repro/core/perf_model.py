@@ -222,9 +222,11 @@ def signal_graph_report(compiled, aw: int = 16, ww: int = 16,
     """
     shuffles = list(compiled.shuffle_passes())
     layers = list(compiled.conv_layers())
+    out_elems = getattr(compiled, "out_elems",
+                        lambda: compiled.out_type.elems)()
     w = Workload(getattr(compiled, "name", "signal_graph"), layers, shuffles,
                  dram_in_elems=compiled.in_type.elems,
-                 dram_out_elems=compiled.out_type.elems)
+                 dram_out_elems=out_elems)
     rep = sigdla_cycles(w, aw, ww, hw, weights_resident=weights_resident)
     rep["fabric_passes"] = len(shuffles)
     rep["shuffle_words"] = sum(s.words for s in shuffles)
@@ -235,6 +237,16 @@ def signal_graph_report(compiled, aw: int = 16, ww: int = 16,
     rep["folded_passes"] = len(
         getattr(compiled, "folded_pass_names", lambda: [])())
     rep["macs"] = w.macs
+    # multi-output SigPrograms: bucket the pass/word/MAC counts by which
+    # output each lowered stage feeds (``shared`` = stages feeding 2+
+    # outputs).  Because every live stage is lowered exactly once, the
+    # shared prefix appears once here — compiling the outputs separately
+    # would pay the shared bucket per compile.
+    attribution = getattr(compiled, "output_attribution", None)
+    if attribution is not None:
+        rep["outputs"] = list(getattr(compiled, "outputs",
+                                      [compiled.output]))
+        rep["per_output"] = attribution()
     rep["time_s"] = rep["total"] / hw.freq_hz
     rep["energy_j"] = rep["time_s"] * hw.power_w
     return rep

@@ -23,6 +23,14 @@ keeps its deep-learning duties).  This module is the serving counterpart:
     in per-connection :class:`~repro.signal.streaming.StreamState`
     pytrees, and every :meth:`SignalService.stream_step` stacks the
     ready blocks of same-graph sessions into ONE jitted core call.
+
+Both paths carry the SigProgram multi-output contract: graphs declared
+with ``outputs()``/``tap()`` return per-output dicts from
+:meth:`SignalService.step`/``serve`` (each output trimmed back to the
+request's true length along its own frames/time axis) and from
+:meth:`StreamSession.read`/``close`` (frame taps emitted per block) —
+one compiled core program per graph, no second registration for a
+monitoring tap.
   * :class:`CoScheduler` — drives a :class:`~repro.serving.engine.
     ServingEngine` and a :class:`SignalService` on one step loop, with a
     pluggable :class:`SchedulePolicy` deciding what runs each tick:
@@ -51,12 +59,18 @@ import numpy as np
 from ..signal.graph import CompiledSignalGraph, FuseLevel, SignalGraph
 from ..signal.streaming import (StreamState, StreamStructure, commit_frames,
                                 drain_state, finalize_piece, push_chunk,
-                                ready_spec, take_block)
+                                ready_spec, take_block, tap_rows)
 from .engine import DecodeWave, Request, ServingEngine
 
 __all__ = ["SignalRequest", "SignalService", "StreamSession", "CoScheduler",
            "SchedulePolicy", "RoundRobinPolicy", "LatencyAwarePolicy",
            "CostBalancedPolicy", "get_policy", "TickPlan"]
+
+
+def _to_host(out):
+    """Device results -> numpy, preserving the per-output dict of
+    multi-output SigPrograms."""
+    return jax.tree_util.tree_map(np.asarray, out)
 
 
 @dataclasses.dataclass
@@ -319,23 +333,36 @@ class SignalService:
         else:
             if key not in self._jitted:
                 self._jitted[key] = compiled.jit()
-            out = np.asarray(self._jitted[key](batch, reg.params))
+            out = _to_host(self._jitted[key](batch, reg.params))
             self.stats["exact"] += 1
 
         self.stats["batches"] += 1
         self.est_cycles += self.group_cost(key, batch=len(wave))
-        suffix_rank = len(compiled.out_type.suffix)
         results: Dict[int, np.ndarray] = {}
         for i, r in enumerate(wave):
-            res = out[i]
-            if reg.struct is not None:
-                cnt = reg.struct.out_count(lens[i])
-                sl = [slice(None)] * res.ndim
-                sl[res.ndim - suffix_rank] = slice(0, cnt)
-                res = res[tuple(sl)]
             r.done = True
-            results[r.rid] = res
+            results[r.rid] = self._request_result(compiled, reg, out, i,
+                                                  lens[i])
         return results
+
+    def _request_result(self, compiled, reg, out, i, true_len):
+        """Row ``i``'s result, trimmed back to the request's true
+        length.  Multi-output graphs yield the ordered per-output dict
+        (the SigProgram contract), each output trimmed along its own
+        leading suffix axis (frame rows for frames-domain outputs,
+        samples otherwise)."""
+        def trim(res, name):
+            if reg.struct is None:
+                return res
+            cnt = reg.struct.out_count_for(name, true_len)
+            rank = len(compiled.out_types[name].suffix)
+            sl = [slice(None)] * res.ndim
+            sl[res.ndim - rank] = slice(0, cnt)
+            return res[tuple(sl)]
+        if compiled.single:
+            return trim(out[i], compiled.output)
+        return {name: trim(np.asarray(out[name])[i], name)
+                for name in compiled.outputs}
 
     def _run_masked(self, key, compiled, reg, batch, lens) -> np.ndarray:
         """Masked/padded execution: valid-frame counts per row are traced
@@ -346,11 +373,11 @@ class SignalService:
             # valid prefix, so padding needs no masking — only trimming.
             if key not in self._jitted:
                 self._jitted[key] = compiled.jit()
-            return np.asarray(self._jitted[key](batch, reg.params))
+            return _to_host(self._jitted[key](batch, reg.params))
         if key not in self._masked_jitted:
             self._masked_jitted[key] = compiled.masked_jit()
         vf = jnp.asarray([struct.valid_frames(t) for t in lens], jnp.int32)
-        return np.asarray(self._masked_jitted[key](batch, vf, reg.params))
+        return _to_host(self._masked_jitted[key](batch, vf, reg.params))
 
     def serve(self, requests: List[SignalRequest]) -> Dict[int, np.ndarray]:
         """Drain a request list without an LLM co-tenant."""
@@ -420,17 +447,31 @@ class SignalService:
                 groups.setdefault(gkey, []).append((sess, spec, block))
             for (n_frames, _, _), members in groups.items():
                 stacked = jnp.stack([b for _, _, b in members])
-                frames = struct.core_jit(n_frames, self.fuse)(
+                res = struct.core_jit(n_frames, self.fuse)(
                     stacked, reg.params)
                 calls += 1
                 self.est_cycles += self._stream_cost(name, n_frames) \
                     * len(members)
-                for i, (sess, spec, _) in enumerate(members):
+                for i, (sess, spec, block) in enumerate(members):
+                    if isinstance(res, dict):
+                        frames = res[struct.deframer][i]
+                        taps = {t: tap_rows(res[t][i], spec,
+                                            block.ndim - 1)
+                                for t in struct.frame_outputs}
+                    else:
+                        frames, taps = res[i], {}
                     st, piece = commit_frames(struct, sess.state, spec,
-                                              frames[i], final=False)
-                    st, out = finalize_piece(struct, st, piece, final=False)
+                                              frames, final=False)
+                    st, out = finalize_piece(struct, st, piece,
+                                             final=False,
+                                             params=reg.params)
                     sess.state = st
-                    sess._push_out(out)
+                    if struct.single:
+                        sess._push_out(out)
+                    else:
+                        merged = dict(out) if isinstance(out, dict) else {}
+                        merged.update(taps)
+                        sess._push_outs(merged)
         if calls:
             self.stats["core_calls"] += calls
         self.stats["stream_ticks"] += 1
@@ -477,23 +518,49 @@ class StreamSession:
         self.closed = False
         self.error: Optional[str] = None      # set when force-detached
         self._out: List[np.ndarray] = []
+        self._outs: Dict[str, List[np.ndarray]] = {}
 
     @property
     def _reg(self) -> _Registration:
         return self.service._graphs[self.graph_name]
 
+    @property
+    def single(self) -> bool:
+        """True when the graph uses the deprecated single-output
+        contract (``read``/``close`` return bare arrays)."""
+        return self._reg.struct.single
+
     def feed(self, chunk) -> None:
         """Push one chunk (last axis = time; chunk lengths may vary)."""
         if self.closed:
             raise ValueError(self.error or f"session {self.sid} is closed")
-        self.state, out = push_chunk(self._reg.struct, self.state, chunk)
-        if out is not None:              # pure sample chain: no latency
+        self.state, out = push_chunk(self._reg.struct, self.state, chunk,
+                                     self._reg.params)
+        if isinstance(out, dict):        # multi-output: chain taps emit now
+            self._push_outs(out)
+        elif out is not None:            # pure sample chain: no latency
             self._push_out(out)
 
     def _push_out(self, out) -> None:
         arr = np.asarray(out)
         if arr.shape[-1]:
             self._out.append(arr)
+
+    def _push_outs(self, outs: Dict) -> None:
+        for name, piece in outs.items():
+            arr = np.asarray(piece)
+            axis = self._frames_axis(name, arr)
+            if arr.shape[axis]:
+                self._outs.setdefault(name, []).append(arr)
+
+    def _frames_axis(self, name: str, arr: np.ndarray) -> int:
+        """Concatenation axis for an output's pieces: the frames axis
+        for frame taps (right after the connection's batch axes, whose
+        rank the ring buffer knows), the time axis otherwise."""
+        struct = self._reg.struct
+        if name in struct.frame_outputs and self.state.buf is not None:
+            return self.state.buf.ndim - 1
+        return arr.ndim - 1
 
     def frames_ready(self) -> int:
         """Frames currently executable without more input (lookahead
@@ -504,18 +571,30 @@ class StreamSession:
         spec = ready_spec(struct, self.state, 10 ** 9, final=False)
         return 0 if spec is None else spec.count
 
-    def read(self) -> np.ndarray:
-        """Pop the output samples that became final so far."""
-        if not self._out:
-            shape = (*self.state.batch_shape, 0) if self.state.buf is None \
-                else (*self.state.buf.shape[:-1], 0)
-            return np.zeros(shape, np.float32)
-        out = self._out[0] if len(self._out) == 1 else np.concatenate(
-            self._out, axis=-1)
-        self._out = []
-        return out
+    def read(self):
+        """Pop the output data that became final so far.  Single-output
+        sessions return the bare sample array; multi-output sessions
+        return a dict of the outputs with new data (per-output pieces
+        concatenated along their frames/time axis)."""
+        if self.single:
+            if not self._out:
+                shape = (*self.state.batch_shape, 0) \
+                    if self.state.buf is None \
+                    else (*self.state.buf.shape[:-1], 0)
+                return np.zeros(shape, np.float32)
+            out = self._out[0] if len(self._out) == 1 else np.concatenate(
+                self._out, axis=-1)
+            self._out = []
+            return out
+        outs = {}
+        for name, pieces in self._outs.items():
+            axis = self._frames_axis(name, pieces[0])
+            outs[name] = pieces[0] if len(pieces) == 1 \
+                else np.concatenate(pieces, axis=axis)
+        self._outs = {}
+        return outs
 
-    def close(self) -> np.ndarray:
+    def close(self):
         """Flush: run the remaining frames (per-session — tails have
         irregular shapes), emit the overlap-add tail, detach from the
         service, and return everything unread."""
@@ -530,13 +609,16 @@ class StreamSession:
                 svc.est_cycles += svc._stream_cost(self.graph_name,
                                                    n_frames)
                 svc.stats["flush_core_calls"] += 1
-                return struct.core_jit(n_frames, svc.fuse)(
-                    block[None], reg.params)[0]
+                res = struct.core_jit(n_frames, svc.fuse)(
+                    block[None], reg.params)
+                return jax.tree_util.tree_map(lambda a: a[0], res)
 
             self.state, out = drain_state(struct, self.state,
                                           self.block_frames, run_core,
-                                          final=True)
-            if out is not None:
+                                          final=True, params=reg.params)
+            if isinstance(out, dict):
+                self._push_outs(out)
+            elif out is not None:
                 self._push_out(out)
         self.service._close_stream(self)
         return self.read()

@@ -8,8 +8,6 @@ speech-enhancement pipeline (Fig 9).
 
 from __future__ import annotations
 
-import functools
-
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -29,27 +27,69 @@ __all__ = ["fft", "ifft", "fir", "fir_phased", "dct", "dct2", "dwt",
            "complex_to_interleaved", "interleaved_to_complex",
            "SignalGraph", "CompiledSignalGraph", "SigType", "FuseLevel",
            "biquad_apply", "overlap_add", "mel_filterbank_matrix",
-           "StreamingRunner", "StreamStructure"]
+           "StreamingRunner", "StreamStructure", "clear_plan_caches",
+           "plan_cache_info"]
 
 
-@functools.lru_cache(maxsize=64)
+# One keyed plan cache for every functional-API plan kind (formerly four
+# ad-hoc ``functools.lru_cache`` s).  Keys are ``(kind, *args)``; entries
+# are the static numpy plan artifacts, never traced values, so clearing
+# is always safe.  ``clear_plan_caches()`` lets property tests bound
+# memory across thousands of generated shapes; ``_PLAN_CACHE_MAX``
+# keeps the old LRU eviction so long-lived services over many distinct
+# signal lengths cannot grow the cache without bound.
+
+_PLAN_BUILDERS = {
+    "fft": lambda n, fused=True: _sm.make_fft_plan(n, fuse_adjacent=fused),
+    "fir": _sm.make_fir_plan,
+    "fir_phase": _sm.make_fir_phase_plan,
+    "dwt": _sm.make_dwt_plan,
+}
+_PLAN_CACHE: dict = {}
+_PLAN_CACHE_MAX = 256
+
+
+def _plan(kind: str, *args):
+    key = (kind, *args)
+    hit = _PLAN_CACHE.pop(key, None)
+    if hit is None:
+        hit = _PLAN_BUILDERS[kind](*args)
+        while len(_PLAN_CACHE) >= _PLAN_CACHE_MAX:      # LRU eviction
+            _PLAN_CACHE.pop(next(iter(_PLAN_CACHE)))
+    _PLAN_CACHE[key] = hit          # (re-)insert as most recently used
+    return hit
+
+
+def clear_plan_caches() -> None:
+    """Drop every cached shuffle plan built by the functional API
+    (``fft``/``ifft``/``fir``/``fir_phased``/``dwt``).  Plans are static
+    compile artifacts keyed by shape; the next call simply rebuilds."""
+    _PLAN_CACHE.clear()
+
+
+def plan_cache_info() -> dict:
+    """Entry count per plan kind (observability for tests/benchmarks)."""
+    info: dict = {kind: 0 for kind in _PLAN_BUILDERS}
+    for key in _PLAN_CACHE:
+        info[key[0]] += 1
+    info["total"] = len(_PLAN_CACHE)
+    return info
+
+
 def _fft_plan(n: int, fused: bool = True) -> _sm.FFTPlan:
-    return _sm.make_fft_plan(n, fuse_adjacent=fused)
+    return _plan("fft", n, fused)
 
 
-@functools.lru_cache(maxsize=64)
 def _fir_plan(n: int, taps: int) -> _sm.FIRPlan:
-    return _sm.make_fir_plan(n, taps)
+    return _plan("fir", n, taps)
 
 
-@functools.lru_cache(maxsize=64)
 def _fir_phase_plan(n: int, taps: int, phases: int) -> _sm.FIRPhasePlan:
-    return _sm.make_fir_phase_plan(n, taps, phases)
+    return _plan("fir_phase", n, taps, phases)
 
 
-@functools.lru_cache(maxsize=64)
 def _dwt_plan(n: int, wavelet: str) -> _sm.DWTPlan:
-    return _sm.make_dwt_plan(n, wavelet)
+    return _plan("dwt", n, wavelet)
 
 
 def fft(x: jax.Array, fused: bool = True) -> jax.Array:

@@ -52,6 +52,24 @@ The result is a single jittable callable plus per-graph fabric-pass /
 shuffle-word / cycle accounting consumed by
 :func:`repro.core.perf_model.signal_graph_report`, which attributes the
 passes and words saved by each fusion level.
+
+**The SigProgram contract.**  A graph declares plural, ordered, named
+outputs (:meth:`SignalGraph.outputs`, plus :meth:`SignalGraph.tap` for
+diagnostic taps); the compiled callable returns an ordered
+``dict[str, Array]``, dead stages are pruned, and stages shared by
+several outputs are lowered once
+(:meth:`CompiledSignalGraph.output_attribution` exposes the split).
+Learnable stage parameters — FIR taps, biquad ``b``/``a``, the mel
+matrix, dnn hooks — form a first-class params pytree
+(:meth:`CompiledSignalGraph.init_params`) accepted per call (hot-swap,
+no recompile) and differentiated by
+:meth:`CompiledSignalGraph.value_and_grad` through the fabric lowering.
+The same contract rides the streaming runtime
+(:mod:`repro.signal.streaming`) and the serving layer
+(:mod:`repro.serving.signal_service`): one compiled core program per
+pipeline, per-output chunk emission and per-request results.  The
+historical single-``output()`` spelling still works (bare-array
+results) with a ``DeprecationWarning``.
 """
 
 from __future__ import annotations
@@ -160,6 +178,13 @@ class EinsumStep:
     conjugation / 1/n patterns) inherited from a folded gather.
     ``folded`` records the names of the absorbed passes for the perf
     report's attribution.
+
+    ``param_key`` marks a *learnable* operand: when the stage's params
+    entry is a dict containing that key, its value replaces ``operand``
+    at run time (same shape/meaning — FIR taps, the mel matrix), so the
+    operand participates in autodiff instead of being baked into the
+    trace.  ``operand`` stays the static default and seeds
+    :meth:`CompiledSignalGraph.init_params`.
     """
     name: str
     spec: str
@@ -173,14 +198,19 @@ class EinsumStep:
     pre_diag: Optional[np.ndarray] = None
     post: Optional[ShufflePlan] = None   # stream-out permutation (v2 fold)
     folded: Tuple[str, ...] = ()
+    param_key: Optional[str] = None      # learnable-operand params key
 
 
 @dataclasses.dataclass
 class LambdaStep:
-    """Glue with no fabric traffic (repacking, OLA, DNN hook)."""
+    """Glue with no fabric traffic (repacking, OLA, DNN hook).
+    ``param_init`` is the stage's default learnable-params entry, when
+    the lambda consumes one (biquad ``b``/``a``, a dnn hook's declared
+    ``init``) — collected by :meth:`CompiledSignalGraph.init_params`."""
     name: str
     fn: Callable
     takes_params: bool = False
+    param_init: Optional[object] = None
 
 
 Step = object  # GatherStep | EinsumStep | LambdaStep
@@ -198,7 +228,11 @@ def _run_steps(steps: Sequence[Step], x: jax.Array, params) -> jax.Array:
                 if s.pre_diag is not None:
                     x = x * jnp.asarray(s.pre_diag, dtype=x.dtype)
             h = x.reshape(*x.shape[:-1], *s.reshape_in)
-            y = jnp.einsum(s.spec, h, jnp.asarray(s.operand, dtype=h.dtype))
+            op = s.operand
+            if s.param_key is not None and isinstance(params, dict) \
+                    and s.param_key in params:
+                op = params[s.param_key]
+            y = jnp.einsum(s.spec, h, jnp.asarray(op, dtype=h.dtype))
             x = y.reshape(*y.shape[:-s.out_rank], -1)
             if s.post is not None:
                 x = apply_plan(x, s.post)
@@ -397,6 +431,16 @@ def _fuse_steps(steps: List[Step], level: int,
 # Reference DSP helpers shared with the streaming runtime
 # --------------------------------------------------------------------------
 
+def _biquad_coeffs(sp, b_static, a_static):
+    """Resolve a biquad stage's (b, a): per-call learnable coefficients
+    from a params dict (keys ``b`` / ``a``) with the compile-time taps as
+    the fallback.  Shared by the offline lowering and the streaming
+    :class:`~repro.signal.streaming._IIRStage`."""
+    if isinstance(sp, dict) and ("b" in sp or "a" in sp):
+        return sp.get("b", b_static), sp.get("a", a_static)
+    return b_static, a_static
+
+
 def biquad_apply(x: jax.Array, b, a, zi: Optional[jax.Array] = None):
     """Second-order IIR (transposed direct-form II), last axis = time.
 
@@ -576,7 +620,14 @@ class SignalGraph:
         self.name = name
         self.stages: Dict[str, Stage] = {}
         self._order: List[str] = []
-        self._output: Optional[str] = None
+        self._outputs: Optional[List[str]] = None
+        self._plural = False          # True once outputs() was used
+        self._taps: List[str] = []
+
+    @property
+    def _output(self) -> Optional[str]:
+        """Primary declared output (back-compat spelling)."""
+        return self._outputs[0] if self._outputs else None
 
     # -- construction -------------------------------------------------------
     def add(self, kind: str, name: str, inputs, **params) -> str:
@@ -620,14 +671,18 @@ class SignalGraph:
     def fir(self, name, inp, taps, phases=1):
         """Causal FIR filter over real samples (im2col gather + tap GEMM;
         Fig 3b).  ``phases > 1`` uses the multi-phase mapping that keeps
-        all 8 PEs busy (offline only — streaming needs ``phases=1``)."""
+        all 8 PEs busy (offline only — streaming needs ``phases=1``).
+        With ``phases=1`` the taps are a learnable params-pytree entry
+        (``{name: {"taps": ...}}``); the declared taps seed
+        :meth:`CompiledSignalGraph.init_params`."""
         return self.add("fir", name, inp,
                         taps=np.asarray(taps, np.float64), phases=phases)
 
     def iir_biquad(self, name, inp, b, a):
         """Second-order IIR section, ``scipy.signal.lfilter(b, a, x)``
         semantics with 3-tap ``b`` and ``a`` (normalized by ``a[0]``).
-        Runs as a ``lax.scan`` on the scalar path."""
+        Runs as a ``lax.scan`` on the scalar path.  ``b``/``a`` are a
+        learnable params entry (``{name: {"b": ..., "a": ...}}``)."""
         b = np.asarray(b, np.float64)
         a = np.asarray(a, np.float64)
         if b.shape != (3,) or a.shape != (3,):
@@ -652,7 +707,9 @@ class SignalGraph:
 
     def mel_filterbank(self, name, inp, sr, n_mels):
         """Triangular HTK-mel filterbank GEMM over one-sided magnitude
-        bins: ``(..., F, bins)`` -> ``(..., F, n_mels)``."""
+        bins: ``(..., F, bins)`` -> ``(..., F, n_mels)``.  The matrix is
+        a learnable params entry (``{name: {"weights": ...}}``); the HTK
+        triangles seed :meth:`CompiledSignalGraph.init_params`."""
         return self.add("mel_filterbank", name, inp, sr=sr, n_mels=n_mels)
 
     def mul(self, name, a, b):
@@ -660,24 +717,101 @@ class SignalGraph:
         a real operand is cast to the complex operand's dtype."""
         return self.add("mul", name, (a, b))
 
-    def dnn(self, name, inp, fn, frame_context=0, layers=()):
+    def dnn(self, name, inp, fn, frame_context=0, layers=(), init=None):
         """Model hook: ``fn(params, x)`` with ``x`` the input stage's value.
         ``frame_context`` declares the across-frame receptive field (for
         streaming); ``layers`` optionally lists perf_model.ConvLayer
-        descriptors so the cycle report covers the DNN too."""
+        descriptors so the cycle report covers the DNN too; ``init``
+        optionally declares the hook's initial params so
+        :meth:`CompiledSignalGraph.init_params` includes this stage."""
         return self.add("dnn", name, inp, fn=fn,
-                        frame_context=frame_context, layers=tuple(layers))
+                        frame_context=frame_context, layers=tuple(layers),
+                        init=init)
 
     def overlap_add(self, name, inp, hop=128, length=None):
         """Overlap-add real frames ``(..., F, frame)`` back to samples at
         ``hop`` (the iSTFT tail without the inverse FFT)."""
         return self.add("overlap_add", name, inp, hop=hop, length=length)
 
+    def outputs(self, *names: str) -> None:
+        """Declare the graph outputs: plural, ordered, named.  The
+        compiled graph returns an ordered ``dict`` mapping each name to
+        its value (the SigProgram contract shared by offline execution,
+        :class:`~repro.signal.streaming.StreamingRunner` chunks, and
+        :class:`~repro.serving.signal_service.SignalService` results).
+        Stages feeding no declared output (or tap) are pruned from the
+        compiled program; stages shared by several outputs are lowered
+        once."""
+        if not names:
+            raise ValueError("outputs() needs at least one stage name")
+        for n in names:
+            if n not in self.stages:
+                raise ValueError(f"unknown output stage {n!r}")
+        if len(set(names)) != len(names):
+            raise ValueError(f"duplicate output names in {names!r}")
+        self._outputs = list(names)
+        self._plural = True
+
+    def tap(self, stage: str) -> str:
+        """Mark ``stage`` as a diagnostic tap: its value is appended to
+        the compiled outputs (after the declared ones) under the stage's
+        own name, without changing the primary outputs.  Tapping makes
+        the result a ``dict`` even for graphs declared via the single
+        ``output()`` spelling.  Returns ``stage`` for chaining."""
+        if stage not in self.stages:
+            raise ValueError(f"unknown tap stage {stage!r}")
+        if stage not in self._taps:
+            self._taps.append(stage)
+        return stage
+
     def output(self, name: str) -> None:
-        """Declare the graph output stage (defaults to the last added)."""
+        """Deprecated single-output spelling of :meth:`outputs`.  The
+        compiled graph returns a bare array (not a dict) for graphs
+        declared this way, preserving the pre-SigProgram contract."""
         if name not in self.stages:
             raise ValueError(f"unknown output stage {name!r}")
-        self._output = name
+        warnings.warn(
+            "SignalGraph.output(name) is deprecated; use "
+            "SignalGraph.outputs(name, ...) — compiled graphs then "
+            "return an ordered dict of named outputs",
+            DeprecationWarning, stacklevel=2)
+        self._set_outputs([name], plural=False)
+
+    # -- output bookkeeping (shared with the streaming analysis) ------------
+    def _set_outputs(self, names: List[str], plural: bool) -> None:
+        """Internal, warning-free output declaration (the streaming
+        runtime re-builds core graphs through this)."""
+        for n in names:
+            if n not in self.stages:
+                raise ValueError(f"unknown output stage {n!r}")
+        self._outputs = list(names)
+        self._plural = plural
+
+    def _declared_outputs(self) -> List[str]:
+        """Ordered output names: declared outputs (default: the last
+        added stage) followed by any taps not already declared."""
+        outs = list(self._outputs) if self._outputs else (
+            [self._order[-1]] if self._order else [])
+        outs.extend(t for t in self._taps if t not in outs)
+        return outs
+
+    def _single_output(self) -> bool:
+        """True when the compiled graph returns a bare array (the
+        deprecated ``output()`` / default-last-stage contract)."""
+        return not self._plural and not self._taps
+
+    def _live_stages(self, out_names: Sequence[str]) -> set:
+        """Stages reachable (as ancestors) from the declared outputs —
+        everything else is dead code the compiler prunes."""
+        live: set = set()
+        stack = list(out_names)
+        while stack:
+            n = stack.pop()
+            if n in live or n == self.INPUT:
+                continue
+            live.add(n)
+            stack.extend(self.stages[n].inputs)
+        return live
 
     # -- compilation --------------------------------------------------------
     def compile(self, length: int, fuse: "FuseLevel | int" = FuseLevel.STREAM,
@@ -701,14 +835,17 @@ class SignalGraph:
         ``DeprecationWarning``.)
         """
         level = int(FuseLevel.coerce(fuse))
-        out_name = self._output or (self._order[-1] if self._order else None)
-        if out_name is None:
+        out_names = self._declared_outputs()
+        if not out_names:
             raise ValueError("empty graph")
+        live = self._live_stages(out_names)
         types: Dict[str, SigType] = {
             self.INPUT: SigType((length,), False, "samples")}
         compiled: List[CompiledStage] = []
 
         for sname in self._order:
+            if sname not in live:
+                continue                      # multi-output DAG pruning
             st = self.stages[sname]
             in_types = [types[i] for i in st.inputs]
             combine, steps, out_t = _lower_stage(st, in_types, level > 0,
@@ -724,9 +861,11 @@ class SignalGraph:
                 sname, st.inputs, combine, steps, out_t,
                 extra_layers=tuple(st.params.get("layers", ()))))
 
-        return CompiledSignalGraph(self.name, compiled, out_name,
-                                   types[self.INPUT], types[out_name],
-                                   fuse=level)
+        return CompiledSignalGraph(self.name, compiled, tuple(out_names),
+                                   types[self.INPUT],
+                                   {n: types[n] for n in out_names},
+                                   fuse=level,
+                                   single=self._single_output())
 
 
 # --------------------------------------------------------------------------
@@ -910,17 +1049,22 @@ def _lower_stage(st: Stage, in_types: List[SigType], fuse: bool,
                 GatherStep(f"{st.name}.im2col", plan.im2col),
                 EinsumStep(f"{st.name}.taps", "...nt,t->...n",
                            h.astype(np.float32), reshape_in=(n, taps),
-                           out_rank=1, rows=n, cin=taps, cout=1)]
+                           out_rank=1, rows=n, cin=taps, cout=1,
+                           param_key="taps")]
         return None, steps, t
 
     if kind == "iir_biquad":
         _require_real(st, t)
         b, a = p["b"], p["a"]
 
-        def iir(x):
-            y, _ = biquad_apply(x, b, a)
+        def iir(sp, x):
+            bb, aa = _biquad_coeffs(sp, b, a)
+            y, _ = biquad_apply(x, bb, aa)
             return y
-        return None, [LambdaStep(f"{st.name}.scan", iir)], t
+        return None, [LambdaStep(
+            f"{st.name}.scan", iir, takes_params=True,
+            param_init={"b": np.asarray(b, np.float32),
+                        "a": np.asarray(a, np.float32)})], t
 
     if kind == "dct":
         _require_real(st, t)
@@ -973,7 +1117,8 @@ def _lower_stage(st: Stage, in_types: List[SigType], fuse: bool,
                        lambda x: x.reshape(*x.shape[:-len(t.suffix)], -1)),
             EinsumStep(f"{st.name}.mel", "...rb,mb->...rm", M,
                        reshape_in=(rows, bins), out_rank=2,
-                       rows=rows, cin=bins, cout=p["n_mels"]),
+                       rows=rows, cin=bins, cout=p["n_mels"],
+                       param_key="weights"),
             LambdaStep(f"{st.name}.pack",
                        lambda x: x.reshape(*x.shape[:-1], *out_suffix))]
         return None, steps, dataclasses.replace(t, suffix=out_suffix)
@@ -981,7 +1126,8 @@ def _lower_stage(st: Stage, in_types: List[SigType], fuse: bool,
     if kind == "dnn":
         fn = p["fn"]
         return None, [LambdaStep(f"{st.name}.model", fn,
-                                 takes_params=True)], t
+                                 takes_params=True,
+                                 param_init=p.get("init"))], t
 
     raise ValueError(f"unknown stage kind {kind!r}")
 
@@ -1006,29 +1152,49 @@ def _mask_frames(y: jax.Array, valid_frames: jax.Array,
 
 
 class CompiledSignalGraph:
-    """Shape-specialized, lowered, (optionally) fused signal graph.
+    """Shape-specialized, lowered, (optionally) fused signal graph — the
+    **SigProgram** artifact shared by offline execution, the streaming
+    runtime and the serving layer.
 
     Calling it runs the whole pipeline as one jittable function of
     ``(x, params)``; all plans and operands are static, so under ``jax.jit``
     every gather folds into the XLA program exactly like the fabric folds
-    into the array's stream-in path.
+    into the array's stream-in path.  Graphs declared with
+    :meth:`SignalGraph.outputs` / :meth:`SignalGraph.tap` return an
+    ordered ``dict`` mapping output name -> value; the deprecated
+    single-``output()`` spelling returns the bare array (``single``).
+
+    Learnable stage parameters (FIR taps, biquad ``b``/``a``, the mel
+    matrix, dnn hooks with a declared ``init``) form a first-class params
+    pytree: :meth:`init_params` yields the compile-time defaults, every
+    call accepts overrides per stage, and :meth:`value_and_grad`
+    differentiates a loss on the outputs with respect to any subset of
+    stages — through the fabric lowering (gathers are
+    gradient-transparent ``take``s; einsum diags carry cotangents).
     """
 
     def __init__(self, name: str, stages: List[CompiledStage],
-                 output: str, in_type: SigType, out_type: SigType,
-                 fuse: int):
+                 outputs: Tuple[str, ...], in_type: SigType,
+                 out_types: Dict[str, SigType], fuse: int,
+                 single: bool = True):
         self.name = name
         self.stages = stages
-        self.output = output
+        self.outputs = tuple(outputs)
+        self.output = self.outputs[0]     # primary (back-compat spelling)
         self.in_type = in_type
-        self.out_type = out_type
+        self.out_types = dict(out_types)
+        self.out_type = self.out_types[self.output]
+        self.single = bool(single)
         self.fuse_level = int(fuse)   # 0 = unfused, 1 = gathers, 2 = v2
         self.fused = self.fuse_level > 0
 
     # -- execution ----------------------------------------------------------
     def __call__(self, x: jax.Array, params=None, *,
-                 valid_frames=None) -> jax.Array:
-        """Run the pipeline.  ``valid_frames`` enables the masked /
+                 valid_frames=None):
+        """Run the pipeline.  Returns an ordered ``dict[str, Array]``
+        (declaration order: outputs then taps) unless the graph used the
+        deprecated single-``output()`` spelling, which returns the bare
+        array.  ``valid_frames`` enables the masked /
         padded execution path used by length-bucketed serving: ``x`` is
         zero-padded past each row's true length, ``valid_frames`` is the
         per-row count of frames computed from real samples (an int array
@@ -1048,7 +1214,77 @@ class CompiledSignalGraph:
             if valid_frames is not None and st.out_type.domain == "frames":
                 y = _mask_frames(y, valid_frames, len(st.out_type.suffix))
             env[st.name] = y
-        return env[self.output]
+        if self.single:
+            return env[self.output]
+        return {name: env[name] for name in self.outputs}
+
+    # -- the params pytree ---------------------------------------------------
+    def init_params(self) -> Dict[str, object]:
+        """The compile-time defaults of every learnable stage, as the
+        params pytree :meth:`__call__` accepts: ``{stage_name: entry}``
+        where the entry is a field dict for DSP stages (``{"taps": ...}``
+        for fir, ``{"b": ..., "a": ...}`` for iir_biquad, ``{"weights":
+        ...}`` for mel_filterbank) and the hook's declared ``init`` for
+        dnn stages.  Stages without learnable parameters are absent;
+        merge your own model params over the result."""
+        params: Dict[str, object] = {}
+        for st in self.stages:
+            entry = None
+            fields: Dict[str, np.ndarray] = {}
+            for s in st.steps:
+                if isinstance(s, EinsumStep) and s.param_key is not None:
+                    fields[s.param_key] = np.array(s.operand)
+                elif isinstance(s, LambdaStep) and s.param_init is not None:
+                    entry = s.param_init
+            if fields:
+                entry = fields
+            if entry is not None:
+                params[st.name] = entry
+        return params
+
+    def value_and_grad(self, loss_fn: Callable, wrt=None,
+                       has_aux: bool = False) -> Callable:
+        """Autodiff surface of the SigProgram: returns
+        ``fn(params, x, *args) -> (loss, grads)`` where ``loss_fn``
+        receives this graph's outputs (the ordered dict, or the bare
+        array for single-output graphs) plus ``*args`` and returns a
+        scalar.  ``wrt`` restricts differentiation to the named stages
+        (default: every entry present in ``params``); gradients come
+        back as a params pytree of the same structure.  The gradient
+        flows through the whole fabric lowering — gather plans are
+        ``jnp.take`` s (gradient-transparent scatters on the reverse
+        pass) and folded ``diag`` scales carry their cotangents — so a
+        learned FIR front-end or mel matrix trains exactly like the dnn
+        hook.  ``has_aux`` follows ``jax.value_and_grad`` semantics for
+        ``loss_fn`` returning ``(scalar, aux)``."""
+        names = None if wrt is None else tuple(wrt)
+
+        def split(params):
+            params = dict(params) if isinstance(params, dict) else \
+                ({} if params is None else params)
+            if not isinstance(params, dict):
+                raise ValueError(
+                    "value_and_grad needs a params dict keyed by stage "
+                    f"name; got {type(params).__name__}")
+            if names is None:
+                return params, {}
+            missing = [n for n in names if n not in params]
+            if missing:
+                raise ValueError(
+                    f"wrt stages {missing!r} have no entry in params; "
+                    f"available: {sorted(params)}")
+            diff = {k: params[k] for k in names}
+            rest = {k: v for k, v in params.items() if k not in names}
+            return diff, rest
+
+        def run(diff, rest, x, *args):
+            return loss_fn(self.__call__(x, {**rest, **diff}), *args)
+
+        def fn(params, x, *args):
+            diff, rest = split(params)
+            return jax.value_and_grad(run, has_aux=has_aux)(
+                diff, rest, x, *args)
+        return fn
 
     def jit(self):
         """``jax.jit`` of :meth:`__call__`; all plans/operands are static
@@ -1128,3 +1364,67 @@ class CompiledSignalGraph:
                                          cin=s.cin, cout=s.cout))
             out.extend(st.extra_layers)
         return out
+
+    def out_elems(self) -> int:
+        """DRAM-stream elements across ALL outputs (the perf model's
+        ``dram_out_elems``)."""
+        return sum(t.elems for t in self.out_types.values())
+
+    # -- per-output attribution ---------------------------------------------
+    def _stage_reach(self) -> Dict[str, frozenset]:
+        """For each compiled stage, the set of declared outputs its value
+        reaches (itself included when it IS an output)."""
+        consumers: Dict[str, List[str]] = {}
+        for st in self.stages:
+            for i in st.inputs:
+                consumers.setdefault(i, []).append(st.name)
+        reach: Dict[str, frozenset] = {}
+        for st in reversed(self.stages):
+            outs = {st.name} if st.name in self.outputs else set()
+            for c in consumers.get(st.name, ()):
+                outs |= reach[c]
+            reach[st.name] = frozenset(outs)
+        return reach
+
+    def output_attribution(self) -> Dict[str, Dict]:
+        """Fabric/array accounting bucketed by which output each lowered
+        stage feeds: one entry per declared output covering the stages
+        *exclusive* to it, plus a ``"shared"`` entry for stages feeding
+        two or more outputs.  Because the compiler lowers every live
+        stage exactly once, the shared prefix of a multi-output program
+        is counted once here — compiling the same outputs separately
+        would pay the shared counts per compile.  Consumed by
+        :func:`repro.core.perf_model.signal_graph_report` (its
+        ``per_output`` field)."""
+        import math as _math
+        if "shared" in self.outputs:
+            raise ValueError(
+                "output_attribution reserves the bucket name 'shared'; "
+                "rename the output stage 'shared' to attribute this graph")
+        reach = self._stage_reach()
+        buckets: Dict[str, Dict] = {
+            name: dict(stages=[], fabric_passes=0, array_passes=0,
+                       shuffle_words=0, streamed_words=0, macs=0)
+            for name in (*self.outputs, "shared")}
+
+        def words(plan) -> int:
+            return _math.ceil(plan.n_out * plan.width / 64)
+
+        for st in self.stages:
+            outs = reach[st.name]
+            b = buckets[next(iter(outs))] if len(outs) == 1 \
+                else buckets["shared"]
+            b["stages"].append(st.name)
+            for s in st.steps:
+                if isinstance(s, GatherStep):
+                    b["fabric_passes"] += 1
+                    b["shuffle_words"] += words(s.plan)
+                elif isinstance(s, EinsumStep):
+                    b["array_passes"] += 1
+                    b["macs"] += s.rows * s.cin * s.cout
+                    if s.pre is not None:
+                        b["streamed_words"] += words(s.pre)
+                    if s.post is not None:
+                        b["streamed_words"] += words(s.post)
+            b["macs"] += sum(l.macs for l in st.extra_layers)
+        return buckets

@@ -8,8 +8,6 @@ speech-enhancement frontend of the paper's Fig 9.
 
 from __future__ import annotations
 
-import functools
-
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -23,17 +21,24 @@ def hann(n: int) -> np.ndarray:
             ).astype(np.float32)
 
 
-@functools.lru_cache(maxsize=32)
-def _frame_plan(length: int, frame: int, hop: int) -> ShufflePlan:
+def _make_frame_plan(length: int, frame: int, hop: int) -> ShufflePlan:
     n_frames = 1 + (length - frame) // hop
     idx = (np.arange(n_frames)[:, None] * hop
            + np.arange(frame)[None, :]).astype(np.int32)
     return ShufflePlan(idx.ravel(), np.zeros(idx.size, np.int64), 16)
 
 
-@functools.lru_cache(maxsize=32)
+def _frame_plan(length: int, frame: int, hop: int) -> ShufflePlan:
+    # routed through the package's unified plan cache (signal/__init__)
+    # so clear_plan_caches() bounds this module's memory too.
+    from . import _PLAN_BUILDERS, _plan
+    _PLAN_BUILDERS.setdefault("stft_frame", _make_frame_plan)
+    return _plan("stft_frame", length, frame, hop)
+
+
 def _fft_plan(n: int) -> _sm.FFTPlan:
-    return _sm.make_fft_plan(n, fuse_adjacent=True)
+    from . import _plan
+    return _plan("fft", n, True)
 
 
 def frame_signal(x: jax.Array, frame: int, hop: int) -> jax.Array:

@@ -24,6 +24,18 @@ has three layers:
     (``process`` / ``flush``) over those pieces, API-compatible with the
     original per-instance runner.
 
+The runtime carries the **SigProgram multi-output contract**: graphs
+declared with :meth:`SignalGraph.outputs` / :meth:`SignalGraph.tap`
+stream a dict per call — the deframed sample stream, frame taps on the
+framewise core (emitted as their block's frames become final, the DNN
+``context`` of lookahead held back), and causal chain taps on the
+pre-chain (zero latency).  :meth:`StreamStructure.output_latencies`
+reports the per-output delay; one per-block core program serves the
+deframed stream and every frame tap (the shared prefix is lowered
+once).  Per-call ``params`` (learnable FIR taps / biquad coefficients /
+mel matrices / dnn params) thread through both the sample chains and
+the jitted core.
+
 The per-stage state the DSP math needs:
 
   * FIR stages carry the last ``taps-1`` input samples (ring-buffer frame
@@ -64,7 +76,7 @@ from .graph import (CompiledSignalGraph, FuseLevel, SignalGraph,
                     biquad_apply, overlap_add)
 
 __all__ = ["StreamingRunner", "StreamState", "StreamStructure", "BlockSpec",
-           "stack_states", "unstack_states", "drain_state"]
+           "stack_states", "unstack_states", "drain_state", "tap_rows"]
 
 _SAMPLE_KINDS = ("fir", "iir_biquad")
 _FRAMEWISE_KINDS = ("dnn", "magnitude", "mel_filterbank", "mul", "dct",
@@ -76,7 +88,9 @@ _FRAMEWISE_KINDS = ("dnn", "magnitude", "mel_filterbank", "mul", "dct",
 # --------------------------------------------------------------------------
 
 class _FIRStage:
-    """Causal FIR over chunks: the carry is the last ``taps-1`` inputs."""
+    """Causal FIR over chunks: the carry is the last ``taps-1`` inputs.
+    Per-call params (``{"taps": ...}``) override the compile-time taps,
+    matching the offline graph's learnable-operand contract."""
 
     def __init__(self, stage):
         if stage.params.get("phases", 1) != 1:
@@ -87,7 +101,8 @@ class _FIRStage:
         taps = self.h.shape[0]
         return jnp.zeros((*x.shape[:-1], taps - 1), dtype=x.dtype)
 
-    def apply(self, carry, x):
+    def apply(self, carry, x, sp=None):
+        h = sp["taps"] if isinstance(sp, dict) and "taps" in sp else self.h
         taps = self.h.shape[0]
         block = jnp.concatenate([carry, x], axis=-1) if taps > 1 else x
         n = x.shape[-1]
@@ -97,13 +112,15 @@ class _FIRStage:
                - np.arange(taps)[None, :])
         cols = jnp.take(block, jnp.asarray(idx), axis=-1)
         y = jnp.einsum("...nt,t->...n", cols,
-                       jnp.asarray(self.h, dtype=cols.dtype))
+                       jnp.asarray(h, dtype=cols.dtype))
         carry = block[..., -(taps - 1):] if taps > 1 else carry
         return carry, y
 
 
 class _IIRStage:
-    """Second-order IIR: the carry is the 2-element scan state."""
+    """Second-order IIR: the carry is the 2-element scan state.
+    Per-call params (``{"b": ..., "a": ...}``) override the compile-time
+    coefficients."""
 
     def __init__(self, stage):
         self.b = stage.params["b"]
@@ -112,8 +129,10 @@ class _IIRStage:
     def init(self, x: jax.Array) -> jax.Array:
         return jnp.zeros((*x.shape[:-1], 2), dtype=x.dtype)
 
-    def apply(self, carry, x):
-        y, zf = biquad_apply(x, self.b, self.a, carry)
+    def apply(self, carry, x, sp=None):
+        from .graph import _biquad_coeffs
+        b, a = _biquad_coeffs(sp, self.b, self.a)
+        y, zf = biquad_apply(x, b, a, carry)
         return zf, y
 
 
@@ -121,16 +140,29 @@ def _make_sample_stage(stage):
     return _FIRStage(stage) if stage.kind == "fir" else _IIRStage(stage)
 
 
-def _apply_chain(stages: Sequence, carries: Tuple, x: jax.Array):
+def _stage_params(params, name):
+    """The per-stage params entry, mirroring the compiled graph's
+    lookup: dict params index by stage name, anything else passes
+    through whole (the legacy single-model spelling)."""
+    return (params or {}).get(name) if isinstance(params, dict) else params
+
+
+def _apply_chain(stages: Sequence, names: Sequence[str], carries: Tuple,
+                 x: jax.Array, params=None, collect=()):
     """Run a sample-domain chain, threading (and lazily initializing)
-    the per-stage carries."""
+    the per-stage carries.  ``params`` supplies per-stage learnable
+    overrides; stages named in ``collect`` have their output captured
+    (chain taps) and returned as a dict."""
     if stages and not carries:
         carries = tuple(s.init(x) for s in stages)
     new = []
-    for s, c in zip(stages, carries):
-        c, x = s.apply(c, x)
+    taps: Dict[str, jax.Array] = {}
+    for s, name, c in zip(stages, names, carries):
+        c, x = s.apply(c, x, _stage_params(params, name))
+        if name in collect:
+            taps[name] = x
         new.append(c)
-    return tuple(new), x
+    return tuple(new), x, taps
 
 
 # --------------------------------------------------------------------------
@@ -246,8 +278,14 @@ class StreamStructure:
     context: int
     out_length: Optional[int]
     output: str
+    outputs: List[str] = dataclasses.field(default_factory=list)
+    frame_outputs: List[str] = dataclasses.field(default_factory=list)
+    chain_outputs: List[str] = dataclasses.field(default_factory=list)
+    single: bool = True
 
     def __post_init__(self):
+        if not self.outputs:
+            self.outputs = [self.output]
         stages = self.graph.stages
         self.pre_stages = [_make_sample_stage(stages[s])
                            for s in self.pre_names]
@@ -260,10 +298,13 @@ class StreamStructure:
     @classmethod
     def analyze(cls, graph: SignalGraph) -> "StreamStructure":
         stages = graph.stages
-        order = list(stages)
-        out = graph._output or (order[-1] if order else None)
-        if out is None:
+        out_names = graph._declared_outputs()
+        if not out_names:
             raise ValueError("empty graph")
+        single = graph._single_output()
+        live = graph._live_stages(out_names)
+        order = [s for s in graph._order if s in live]
+        out = out_names[0]
         framers = [s for s in order if stages[s].kind == "stft"]
         deframers = [s for s in order
                      if stages[s].kind in ("istft", "overlap_add")]
@@ -278,7 +319,8 @@ class StreamStructure:
                 consumers.setdefault(i, []).append(s)
 
         if not framers:
-            # pure sample-domain chain input -> ... -> output
+            # pure sample-domain chain input -> ... -> output(s); declared
+            # non-terminal outputs are chain taps (zero added latency).
             cur, seen = SignalGraph.INPUT, []
             while consumers.get(cur):
                 nxts = consumers[cur]
@@ -290,11 +332,13 @@ class StreamStructure:
                         f"stage {cur!r} ({stages[cur].kind}) is not "
                         "streamable in a sample-domain chain")
                 seen.append(cur)
-            if cur != out:
+            if single and cur != out:
                 raise ValueError("output is not the end of the chain")
             return cls(graph, pre_names=seen, core_names=[], post_names=[],
                        framer=None, deframer=None, frame=0, hop=0,
-                       context=0, out_length=None, output=out)
+                       context=0, out_length=None, output=cur,
+                       outputs=out_names, frame_outputs=[],
+                       chain_outputs=list(out_names), single=single)
 
         framer = framers[0]
         deframer = deframers[0] if deframers else None
@@ -319,12 +363,15 @@ class StreamStructure:
             cur = st.inputs[0]
         pre_names = list(reversed(chain))
 
-        # post-chain: walk forward from the deframer to the output.
+        # post-chain: walk forward from the deframer to its chain end
+        # (with multi-output pruning, the end is always a declared
+        # output; mid-chain declared outputs become chain taps).
         post: List[str] = []
+        primary = out
         if deframer is not None:
             cur = deframer
-            while cur != out:
-                nxts = consumers.get(cur, [])
+            while consumers.get(cur):
+                nxts = consumers[cur]
                 if len(nxts) != 1:
                     raise ValueError("post-istft stages must form a chain")
                 cur = nxts[0]
@@ -333,6 +380,9 @@ class StreamStructure:
                     raise ValueError(
                         f"post-istft stage {cur!r} not streamable")
                 post.append(cur)
+            if single and cur != out:
+                raise ValueError("output is not the end of the chain")
+            primary = cur
 
         # interior: everything else must be framewise.
         skip = set(chain) | set(post) | {framer}
@@ -350,15 +400,34 @@ class StreamStructure:
                     raise ValueError(
                         f"framewise stage {s!r} reads outside the core")
             context += st.frame_context
-        if deframer is None and out not in interior and out != framer:
-            raise ValueError(
-                f"output {out!r} is outside the framewise core")
+        if deframer is None:
+            bad = [o for o in out_names
+                   if o not in interior and o != framer
+                   and o not in pre_names]
+            if bad:
+                raise ValueError(
+                    f"output {bad[0]!r} is outside the framewise core")
+            if single:
+                primary = out
+            elif out in interior or out == framer:
+                primary = out
+            else:
+                primary = next(o for o in out_names
+                               if o in interior or o == framer)
         core_names = [s for s in order
                       if s == framer or s == deframer or s in interior]
+        frame_outputs = [o for o in out_names
+                         if o in interior or o == framer]
+        chain_outputs = [o for o in out_names
+                         if o in pre_names
+                         or (o in post and o != primary)
+                         or (o == deframer and post)]
         return cls(graph, pre_names=pre_names, core_names=core_names,
                    post_names=post, framer=framer, deframer=deframer,
                    frame=frame, hop=hop, context=context,
-                   out_length=out_length, output=out)
+                   out_length=out_length, output=primary,
+                   outputs=out_names, frame_outputs=frame_outputs,
+                   chain_outputs=chain_outputs, single=single)
 
     # -- length bookkeeping (used by bucketed serving) ----------------------
     @property
@@ -385,7 +454,43 @@ class StreamStructure:
             return self.out_length
         return (vf - 1) * self.hop + self.frame
 
+    def out_count_for(self, name: str, valid_len: int) -> int:
+        """Per-output :meth:`out_count` (the SigProgram multi-output
+        contract): frames-domain outputs count valid frame rows;
+        sample-domain outputs on the pre-chain count input samples; the
+        deframed side counts output samples (capped by a declared istft
+        length)."""
+        if self.framer is None or name in self.pre_names:
+            return valid_len
+        if name in self.frame_outputs:
+            return self.valid_frames(valid_len)
+        return self.out_count(valid_len)
+
+    def output_latencies(self) -> Dict[str, Dict]:
+        """Streaming delay of each output: how far behind the fed input
+        an output's emission runs.  Sample-domain outputs report samples
+        (``frame - hop`` for OLA finality plus ``context * hop`` DNN
+        lookahead; pre-chain taps are causal: 0); frames-domain taps
+        report ``context`` frames of held-back lookahead."""
+        out: Dict[str, Dict] = {}
+        for name in self.outputs:
+            if self.framer is None or name in self.pre_names:
+                out[name] = {"domain": "samples", "latency": 0}
+            elif name in self.frame_outputs:
+                out[name] = {"domain": "frames", "latency": self.context}
+            else:
+                out[name] = {"domain": "samples",
+                             "latency": (self.frame - self.hop
+                                         + self.context * self.hop)}
+        return out
+
     # -- per-block core graph (shared compile/jit cache) --------------------
+    @property
+    def core_multi(self) -> bool:
+        """True when the per-block core emits a dict (frame taps ride
+        along with the deframed output)."""
+        return bool(self.frame_outputs)
+
     def core_graph(self, n_frames: int,
                    fuse: FuseLevel = FuseLevel.STREAM) -> CompiledSignalGraph:
         key = (n_frames, int(fuse))
@@ -399,7 +504,13 @@ class StreamStructure:
                     g.add("istft_frames", s, st.inputs[0], hop=self.hop)
                 else:
                     g.add(st.kind, s, st.inputs, **st.params)
-            g.output(self.deframer)
+            if self.core_multi:
+                # one core program serves the deframed stream AND the
+                # frame taps — the shared prefix is lowered once.
+                g._set_outputs([self.deframer, *self.frame_outputs],
+                               plural=True)
+            else:
+                g._set_outputs([self.deframer], plural=False)
             block_len = (n_frames - 1) * self.hop + self.frame
             self._core_cache[key] = g.compile(block_len, fuse=fuse)
         return self._core_cache[key]
@@ -415,21 +526,30 @@ class StreamStructure:
 # Pure step functions over (structure, state)
 # --------------------------------------------------------------------------
 
-def push_chunk(struct: StreamStructure, state: StreamState, chunk):
+def push_chunk(struct: StreamStructure, state: StreamState, chunk,
+               params=None):
     """Apply the pre-chain and append to the ring buffer.  Returns
-    ``(state, out)`` where ``out`` is the chunk's final samples for pure
-    sample-chain graphs (no core => no latency) and ``None`` otherwise."""
+    ``(state, out)``.  For single-output graphs ``out`` is the chunk's
+    final samples for pure sample-chain graphs (no core => no latency)
+    and ``None`` otherwise.  For multi-output graphs ``out`` is a dict
+    holding the chain outputs that emitted with this chunk (pre-chain
+    taps are causal: zero latency)."""
     x = jnp.asarray(chunk)
-    pre, x = _apply_chain(struct.pre_stages, state.pre, x)
+    collect = () if struct.single else tuple(struct.chain_outputs)
+    pre, x, taps = _apply_chain(struct.pre_stages, struct.pre_names,
+                                state.pre, x, params, collect)
     if struct.framer is None:
         state = dataclasses.replace(state, pre=pre,
                                     batch_shape=x.shape[:-1])
-        return state, x
+        if struct.single:
+            return state, x
+        taps[struct.output] = x
+        return state, {o: taps[o] for o in struct.outputs if o in taps}
     buf = x if state.buf is None else jnp.concatenate([state.buf, x],
                                                       axis=-1)
     state = dataclasses.replace(state, pre=pre, buf=buf,
                                 total=state.total + x.shape[-1])
-    return state, None
+    return state, (None if struct.single else taps)
 
 
 def ready_spec(struct: StreamStructure, state: StreamState,
@@ -488,37 +608,75 @@ def commit_frames(struct: StreamStructure, state: StreamState,
     return state, piece
 
 
+def tap_rows(arr: jax.Array, spec: BlockSpec, axis: int) -> jax.Array:
+    """The newly-final frame rows ``[f_lo, f_hi)`` of one core tap
+    output for a block (context rows trimmed); ``axis`` is the frames
+    axis (the batch rank of the fed block).  Shared with the serving
+    layer's batched :meth:`SignalService.stream_step`."""
+    sl = [slice(None)] * arr.ndim
+    sl[axis] = slice(spec.f_lo - spec.g0, spec.f_hi - spec.g0)
+    return arr[tuple(sl)]
+
+
 def drain_state(struct: StreamStructure, state: StreamState,
-                block_frames: int, run_core, final: bool):
+                block_frames: int, run_core, final: bool, params=None):
     """The shared drain loop: execute ready blocks through ``run_core``
-    (``(block, n_frames) -> frames``), overlap-add and finalize.
-    Returns ``(state, out)`` with ``out`` None when nothing became
-    final.  Both :class:`StreamingRunner` and the service's
+    (``(block, n_frames) -> frames``, or ``-> dict`` when the core
+    carries frame taps), overlap-add and finalize.  Returns
+    ``(state, out)`` with ``out`` None when nothing became final; for
+    multi-output graphs ``out`` is a dict of the outputs that emitted
+    (frame taps concatenate along the frames axis).  Both
+    :class:`StreamingRunner` and the service's
     :class:`~repro.serving.signal_service.StreamSession` flush path use
     this single implementation — that is what keeps their outputs
     bit-identical to each other."""
     pieces: List[jax.Array] = []
+    tap_pieces: Dict[str, List[jax.Array]] = \
+        {t: [] for t in struct.frame_outputs}
     while True:
         spec = ready_spec(struct, state, block_frames, final)
         if spec is None:
             break
-        frames = run_core(take_block(state, spec), spec.n_frames)
+        axis = state.buf.ndim - 1            # frames axis of core outputs
+        res = run_core(take_block(state, spec), spec.n_frames)
+        if isinstance(res, dict):
+            frames = res[struct.deframer]
+            for t in struct.frame_outputs:
+                tap_pieces[t].append(tap_rows(res[t], spec, axis))
+        else:
+            frames = res
         state, piece = commit_frames(struct, state, spec, frames, final)
         pieces.append(piece)
     if final and not pieces and state.tail is not None:
         pieces.append(state.tail)            # everything already OLA'd
         state = dataclasses.replace(state, tail=None)
-    if not pieces:
-        return state, None
-    out = pieces[0] if len(pieces) == 1 else jnp.concatenate(pieces,
-                                                             axis=-1)
-    return finalize_piece(struct, state, out, final)
+    sample_out = None
+    if pieces:
+        out = pieces[0] if len(pieces) == 1 else jnp.concatenate(pieces,
+                                                                 axis=-1)
+        state, sample_out = finalize_piece(struct, state, out, final,
+                                           params)
+    if struct.single:
+        return state, sample_out
+    outs: Dict[str, jax.Array] = {}
+    if isinstance(sample_out, dict):
+        outs.update(sample_out)
+    elif sample_out is not None:
+        outs[struct.output] = sample_out
+    for t, ps in tap_pieces.items():
+        if not ps:
+            continue
+        ax = state.buf.ndim - 1 if state.buf is not None else 0
+        outs[t] = ps[0] if len(ps) == 1 else jnp.concatenate(ps, axis=ax)
+    return state, (outs or None)
 
 
 def finalize_piece(struct: StreamStructure, state: StreamState,
-                   out: jax.Array, final: bool):
+                   out: jax.Array, final: bool, params=None):
     """Apply the istft length cap (a running budget across the whole
-    stream) and the sample post-chain to newly-final samples."""
+    stream) and the sample post-chain to newly-final samples.  For
+    multi-output graphs returns a dict: the primary sample output plus
+    any post-chain / deframer taps that emitted."""
     if struct.out_length is not None:
         allowed = struct.out_length - state.emitted
         if out.shape[-1] > allowed:
@@ -527,10 +685,20 @@ def finalize_piece(struct: StreamStructure, state: StreamState,
             pad = [(0, 0)] * (out.ndim - 1) + \
                 [(0, allowed - out.shape[-1])]
             out = jnp.pad(out, pad)
-    post, out = _apply_chain(struct.post_stages, state.post, out)
+    collect = () if struct.single else tuple(struct.chain_outputs)
+    taps: Dict[str, jax.Array] = {}
+    if not struct.single and struct.deframer in collect:
+        taps[struct.deframer] = out
+    post, out, post_taps = _apply_chain(struct.post_stages,
+                                        struct.post_names, state.post,
+                                        out, params, collect)
     state = dataclasses.replace(state, post=post,
                                 emitted=state.emitted + out.shape[-1])
-    return state, out
+    if struct.single:
+        return state, out
+    taps.update(post_taps)
+    taps[struct.output] = out
+    return state, taps
 
 
 # --------------------------------------------------------------------------
@@ -575,20 +743,44 @@ class StreamingRunner:
         self.state = StreamState()
 
     # -- streaming ----------------------------------------------------------
-    def process(self, chunk: jax.Array) -> jax.Array:
-        """Feed one chunk; returns the samples that became final."""
-        self.state, out = push_chunk(self.struct, self.state, chunk)
-        if out is not None:
-            return out                         # pure sample chain: no latency
-        return self._drain(final=False)
+    def process(self, chunk: jax.Array):
+        """Feed one chunk; returns the output data that became final.
 
-    def flush(self) -> jax.Array:
-        """Process remaining frames and emit the overlap-add tail."""
+        Single-output graphs return the bare sample array (possibly
+        empty).  Multi-output graphs return a dict holding the outputs
+        that produced new data this call — pre-chain taps emit with the
+        chunk, frame taps and the deframed stream emit as blocks become
+        ready; absent keys simply emitted nothing yet."""
+        self.state, out = push_chunk(self.struct, self.state, chunk,
+                                     self.params)
+        if self.struct.single:
+            if out is not None:
+                return out                     # pure sample chain: no latency
+            return self._drain(final=False)
+        outs: Dict[str, jax.Array] = dict(out or {})
+        if self.struct.framer is not None:
+            self.state, more = drain_state(self.struct, self.state,
+                                           self.block_frames,
+                                           self._run_core, False,
+                                           self.params)
+            outs.update(more or {})
+        return outs
+
+    def flush(self):
+        """Process remaining frames and emit the overlap-add tail.
+        Multi-output graphs return a dict of the remaining per-output
+        data (possibly empty)."""
         if self.struct.framer is None:
-            return jnp.zeros((*self.state.batch_shape, 0))
-        return self._drain(final=True)
+            return {} if not self.struct.single \
+                else jnp.zeros((*self.state.batch_shape, 0))
+        if self.struct.single:
+            return self._drain(final=True)
+        self.state, out = drain_state(self.struct, self.state,
+                                      self.block_frames, self._run_core,
+                                      True, self.params)
+        return out or {}
 
-    def _run_core(self, block: jax.Array, n_frames: int) -> jax.Array:
+    def _run_core(self, block: jax.Array, n_frames: int):
         if not self.jit_blocks:
             return self.struct.core_graph(n_frames, self.fuse)(
                 block, self.params)
@@ -597,7 +789,7 @@ class StreamingRunner:
     def _drain(self, final: bool) -> jax.Array:
         self.state, out = drain_state(self.struct, self.state,
                                       self.block_frames, self._run_core,
-                                      final)
+                                      final, self.params)
         if out is None:
             shape = (0,) if self.state.buf is None else \
                 (*self.state.buf.shape[:-1], 0)

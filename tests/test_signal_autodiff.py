@@ -1,0 +1,232 @@
+"""Gradient correctness of the SigProgram autodiff surface:
+``CompiledSignalGraph.value_and_grad`` through each differentiable stage
+kind (fir / iir_biquad / mel_filterbank / dnn / mul), checked against
+pure-``jax.numpy`` reference graphs — offline and through
+``StreamingRunner`` (the chunked execution differentiates too: carried
+state is a pytree of traced arrays)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.signal import SignalGraph, StreamingRunner
+from repro.signal.graph import hann_window, overlap_add
+
+FRAME, HOP = 64, 32
+
+
+def _fir_ref(x, taps):
+    """Causal FIR, zero initial state (== the im2col + GEMM lowering)."""
+    return jnp.convolve(x, taps, mode="full")[: x.shape[-1]]
+
+
+def _stft_ref(x, frame=FRAME, hop=HOP):
+    F = 1 + (x.shape[-1] - frame) // hop
+    idx = np.arange(F)[:, None] * hop + np.arange(frame)[None, :]
+    frames = jnp.take(x, jnp.asarray(idx)) \
+        * jnp.asarray(hann_window(frame), jnp.float32)
+    return jnp.fft.fft(frames)
+
+
+def _istft_ref(spec, length, hop=HOP):
+    return overlap_add(jnp.real(jnp.fft.ifft(spec)), hop, length)
+
+
+def test_grad_fir_matches_reference():
+    T = 512
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.standard_normal(T), jnp.float32)
+    taps0 = rng.standard_normal(9).astype(np.float32) * 0.3
+    g = SignalGraph("fir")
+    g.fir("f", "input", taps=taps0)
+    g.outputs("f")
+    c = g.compile(T)
+    vag = c.value_and_grad(lambda o: jnp.mean(o["f"] ** 2))
+    loss, grads = vag(c.init_params(), x)
+    ref_l, ref_g = jax.value_and_grad(
+        lambda h: jnp.mean(_fir_ref(x, h) ** 2))(jnp.asarray(taps0))
+    np.testing.assert_allclose(float(loss), float(ref_l), rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(grads["f"]["taps"]),
+                               np.asarray(ref_g), atol=1e-5, rtol=1e-5)
+
+
+def test_grad_iir_biquad_matches_reference():
+    T = 256
+    rng = np.random.default_rng(1)
+    x = jnp.asarray(rng.standard_normal(T), jnp.float32)
+    b0 = np.array([0.2, 0.3, 0.2], np.float32)
+    a0 = np.array([1.0, -0.5, 0.25], np.float32)
+    g = SignalGraph("iir")
+    g.iir_biquad("q", "input", b=b0, a=a0)
+    g.outputs("q")
+    c = g.compile(T)
+    vag = c.value_and_grad(lambda o: jnp.mean(o["q"] ** 2))
+    loss, grads = vag(c.init_params(), x)
+
+    def ref(p):
+        # lfilter semantics: everything normalizes by a[0] (so a[0]
+        # itself carries a gradient through the normalization)
+        b = p["b"] / p["a"][0]
+        a = p["a"] / p["a"][0]
+
+        def step(z, xn):
+            yn = b[0] * xn + z[0]
+            return (b[1] * xn - a[1] * yn + z[1], b[2] * xn - a[2] * yn), yn
+        _, y = jax.lax.scan(step, (jnp.zeros(()), jnp.zeros(())), x)
+        return jnp.mean(y ** 2)
+    ref_l, ref_g = jax.value_and_grad(ref)(
+        {"b": jnp.asarray(b0), "a": jnp.asarray(a0)})
+    np.testing.assert_allclose(float(loss), float(ref_l), rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(grads["q"]["b"]),
+                               np.asarray(ref_g["b"]), atol=1e-5)
+    np.testing.assert_allclose(np.asarray(grads["q"]["a"]),
+                               np.asarray(ref_g["a"]), atol=1e-5)
+
+
+def test_grad_mel_filterbank_matches_reference():
+    T = 1024
+    rng = np.random.default_rng(2)
+    x = jnp.asarray(rng.standard_normal(T), jnp.float32)
+    g = SignalGraph("mel")
+    g.stft("spec", frame=FRAME, hop=HOP)
+    g.magnitude("mag", "spec", onesided=True)
+    g.mel_filterbank("mel", "mag", sr=16_000, n_mels=6)
+    g.outputs("mel", "mag")
+    c = g.compile(T)
+    p = c.init_params()
+    vag = c.value_and_grad(lambda o: jnp.mean(o["mel"] ** 2), wrt=("mel",))
+    loss, grads = vag(p, x)
+    # reference: mel output is mag @ W.T with mag params-independent
+    mag = jnp.asarray(c(x)["mag"])
+    ref_l, ref_g = jax.value_and_grad(
+        lambda W: jnp.mean((mag @ W.T) ** 2))(
+            jnp.asarray(p["mel"]["weights"]))
+    np.testing.assert_allclose(float(loss), float(ref_l), rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(grads["mel"]["weights"]),
+                               np.asarray(ref_g), atol=1e-5, rtol=1e-5)
+
+
+def test_grad_learned_fir_dnn_mask_fig9_matches_pure_jax():
+    """Acceptance: value_and_grad on a learned-FIR + dnn-mask Fig-9
+    variant matches the pure-JAX (jnp.fft) reference gradient to 1e-5 —
+    gradients flow through framing gathers, fabric FFT butterflies, the
+    mask mul, the inverse FFT and the overlap-add."""
+    T = 1024
+    rng = np.random.default_rng(3)
+    x = jnp.asarray(rng.standard_normal(T), jnp.float32)
+    tgt = jnp.asarray(rng.standard_normal(T), jnp.float32) * 0.1
+    taps0 = np.zeros(9, np.float32)
+    taps0[0] = 1.0
+
+    def mask_fn(p, z):
+        return jax.nn.sigmoid(jnp.abs(z) * p["scale"] - 1.0)
+
+    g = SignalGraph("fig9_learned")
+    g.fir("front", "input", taps=taps0)
+    g.stft("spec", "front", frame=FRAME, hop=HOP)
+    g.dnn("mask", "spec", fn=mask_fn, init={"scale": jnp.asarray(1.3)})
+    g.mul("enh", "spec", "mask")
+    g.istft("out", "enh", hop=HOP, length=T)
+    g.outputs("out")
+    c = g.compile(T)
+    params = c.init_params()
+    assert set(params) == {"front", "mask"}
+
+    def loss(outs, t):
+        return jnp.mean((outs["out"] - t) ** 2)
+    vag = jax.jit(c.value_and_grad(loss, wrt=("front", "mask")))
+    l, grads = vag(params, x, tgt)
+
+    def ref_loss(p):
+        y = _fir_ref(x, p["front"]["taps"])
+        spec = _stft_ref(y)
+        m = jax.nn.sigmoid(jnp.abs(spec) * p["mask"]["scale"] - 1.0)
+        out = _istft_ref(spec * m.astype(spec.dtype), T)
+        return jnp.mean((out - tgt) ** 2)
+    ref_l, ref_g = jax.value_and_grad(ref_loss)(
+        {"front": {"taps": jnp.asarray(taps0)},
+         "mask": {"scale": jnp.asarray(1.3)}})
+    np.testing.assert_allclose(float(l), float(ref_l), rtol=1e-5)
+    np.testing.assert_allclose(np.asarray(grads["front"]["taps"]),
+                               np.asarray(ref_g["front"]["taps"]),
+                               atol=1e-5)
+    np.testing.assert_allclose(float(grads["mask"]["scale"]),
+                               float(ref_g["mask"]["scale"]), atol=1e-5)
+    # one SGD step on the compiled program reduces the loss
+    stepped = jax.tree_util.tree_map(lambda w, gw: w - 0.1 * gw,
+                                     params, grads)
+    l2, _ = vag(stepped, x, tgt)
+    assert float(l2) < float(l)
+
+
+def test_grad_through_streaming_runner_matches_offline():
+    """The chunked execution path differentiates: d loss / d params of
+    the concatenated streamed output equals the offline gradient (FIR
+    chunk windows are the same contraction; mask mul and OLA are
+    identical math)."""
+    T = 1024
+    rng = np.random.default_rng(4)
+    x = np.asarray(rng.standard_normal(T), np.float32)
+    taps0 = (np.hanning(8) / 4).astype(np.float32)
+
+    def build():
+        g = SignalGraph("stream_grad")
+        g.fir("front", "input", taps=taps0)
+        g.stft("spec", "front", frame=FRAME, hop=HOP)
+        g.dnn("mask", "spec",
+              fn=lambda p, z: jax.nn.sigmoid(jnp.abs(z) * p - 1.0),
+              init=jnp.asarray(1.1))
+        g.mul("enh", "spec", "mask")
+        g.istft("out", "enh", hop=HOP, length=T)
+        g.outputs("out")
+        return g
+
+    g = build()
+    c = g.compile(T)
+    params = c.init_params()
+
+    def off_loss(p):
+        return jnp.mean(c(jnp.asarray(x), p)["out"] ** 2)
+
+    def stream_loss(p):
+        r = StreamingRunner(build(), params=p, block_frames=4)
+        pieces = []
+        for ch in np.split(x, [300, 700], axis=-1):
+            outs = r.process(jnp.asarray(ch))
+            if "out" in outs:
+                pieces.append(outs["out"])
+        tail = r.flush()
+        if "out" in tail:
+            pieces.append(tail["out"])
+        return jnp.mean(jnp.concatenate(pieces, axis=-1) ** 2)
+
+    lo, go = jax.value_and_grad(off_loss)(params)
+    ls, gs = jax.value_and_grad(stream_loss)(params)
+    np.testing.assert_allclose(float(ls), float(lo), rtol=1e-5)
+    np.testing.assert_allclose(np.asarray(gs["front"]["taps"]),
+                               np.asarray(go["front"]["taps"]), atol=1e-5)
+    np.testing.assert_allclose(float(gs["mask"]), float(go["mask"]),
+                               atol=1e-5)
+
+
+def test_grad_mul_flows_into_both_branches():
+    """mul is gradient-transparent to both operands: a learnable gain on
+    one branch and a learnable mask on the other both receive
+    cotangents."""
+    T = 512
+    rng = np.random.default_rng(5)
+    x = jnp.asarray(rng.standard_normal(T), jnp.float32)
+    g = SignalGraph("m")
+    g.stft("spec", frame=FRAME, hop=HOP)
+    g.dnn("gain", "spec", fn=lambda p, z: z * p, init=jnp.asarray(0.9))
+    g.dnn("mask", "spec",
+          fn=lambda p, z: jax.nn.sigmoid(jnp.abs(z) - p),
+          init=jnp.asarray(1.0))
+    g.mul("enh", "gain", "mask")
+    g.istft("out", "enh", hop=HOP, length=T)
+    g.outputs("out")
+    c = g.compile(T)
+    vag = c.value_and_grad(lambda o: jnp.mean(o["out"] ** 2))
+    _, grads = vag(c.init_params(), x)
+    assert abs(float(grads["gain"])) > 0
+    assert abs(float(grads["mask"])) > 0

@@ -1,0 +1,361 @@
+"""The SigProgram contract: multi-output SignalGraphs (outputs / tap),
+DAG pruning, per-output results across offline / streaming / serving,
+shared-prefix report attribution, params pytree + value_and_grad, and
+the deprecated single-output() spelling."""
+
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.perf_model import signal_graph_report
+from repro.serving import SignalRequest, SignalService
+from repro.signal import SignalGraph, StreamingRunner
+
+FRAME, HOP = 256, 128
+
+
+def _mask(p, z):
+    return jax.nn.sigmoid(jnp.abs(z) - 1.0)
+
+
+def _fig9_tapped(length=None, n_mels=8):
+    """Fig-9 enhancement with a mel monitoring tap: outputs('out',
+    'mel_tap') — ONE graph, one compiled core program."""
+    g = SignalGraph("fig9_tapped")
+    g.stft("spec", frame=FRAME, hop=HOP)
+    g.dnn("mask", "spec", fn=_mask)
+    g.mul("enh", "spec", "mask")
+    g.istft("out", "enh", hop=HOP, length=length)
+    g.magnitude("mag", "enh", onesided=True)
+    g.mel_filterbank("mel_tap", "mag", sr=16_000, n_mels=n_mels)
+    g.outputs("out", "mel_tap")
+    return g
+
+
+def _fig9_single(output, length=None, n_mels=8, name="fig9_single"):
+    """The same pipeline compiled with ONE declared output."""
+    g = SignalGraph(name)
+    g.stft("spec", frame=FRAME, hop=HOP)
+    g.dnn("mask", "spec", fn=_mask)
+    g.mul("enh", "spec", "mask")
+    g.istft("out", "enh", hop=HOP, length=length)
+    g.magnitude("mag", "enh", onesided=True)
+    g.mel_filterbank("mel_tap", "mag", sr=16_000, n_mels=n_mels)
+    g.outputs(output)
+    return g
+
+
+# --------------------------------------------------------------------------
+# Offline contract
+# --------------------------------------------------------------------------
+
+def test_outputs_returns_ordered_dict_and_prunes_dead_stages():
+    T = 1024
+    g = SignalGraph("p")
+    g.stft("spec", frame=FRAME, hop=HOP)
+    g.magnitude("mag", "spec", onesided=True)
+    g.mel_filterbank("mel", "mag", sr=16_000, n_mels=4)
+    g.dct("dead", "mel")                  # consumes mel but feeds nothing
+    g.outputs("mel", "mag")
+    c = g.compile(T)
+    assert c.outputs == ("mel", "mag")
+    assert [s.name for s in c.stages] == ["spec", "mag", "mel"]  # pruned
+    x = jnp.asarray(np.random.default_rng(0).standard_normal(T), jnp.float32)
+    res = c(x)
+    assert list(res) == ["mel", "mag"]    # declaration order
+    assert res["mel"].shape[-1] == 4
+
+
+def test_multi_output_bit_identical_to_two_single_compiles():
+    """Acceptance: the Fig-9 graph compiled with outputs('out',
+    'mel_tap') matches two independent single-output compiles bitwise,
+    offline."""
+    T = 2048
+    rng = np.random.default_rng(1)
+    x = jnp.asarray(rng.standard_normal(T), jnp.float32)
+    multi = _fig9_tapped(length=T).compile(T)
+    res = multi(x)
+    out1 = _fig9_single("out", length=T).compile(T)(x)
+    out2 = _fig9_single("mel_tap", length=T).compile(T)(x)
+    np.testing.assert_array_equal(np.asarray(res["out"]),
+                                  np.asarray(out1["out"]))
+    np.testing.assert_array_equal(np.asarray(res["mel_tap"]),
+                                  np.asarray(out2["mel_tap"]))
+
+
+def test_shared_prefix_lowered_once_in_report():
+    """Acceptance: signal_graph_report shows the shared prefix is
+    lowered once — the shared bucket's passes appear once in the
+    multi-output totals, and the totals sit strictly under two
+    single-output compiles."""
+    T = 2048
+    multi = _fig9_tapped(length=T).compile(T)
+    rep = signal_graph_report(multi)
+    assert rep["outputs"] == ["out", "mel_tap"]
+    per = rep["per_output"]
+    assert set(per) == {"out", "mel_tap", "shared"}
+    # stft + mask + mul are shared; mel's GEMM is exclusive to the tap
+    assert "spec" in per["shared"]["stages"]
+    assert "mel_tap" in per["mel_tap"]["stages"]
+    # buckets partition the totals: every pass is counted exactly once
+    assert sum(b["fabric_passes"] for b in per.values()) \
+        == rep["fabric_passes"]
+    assert sum(b["shuffle_words"] for b in per.values()) \
+        == rep["shuffle_words"]
+    # two single-output compiles pay the shared prefix twice
+    s1 = signal_graph_report(_fig9_single("out", length=T).compile(T))
+    s2 = signal_graph_report(_fig9_single("mel_tap", length=T).compile(T))
+    assert rep["fabric_passes"] < s1["fabric_passes"] + s2["fabric_passes"]
+    assert rep["shuffle_words"] < s1["shuffle_words"] + s2["shuffle_words"]
+    assert rep["macs"] < s1["macs"] + s2["macs"]
+
+
+def test_tap_appends_diagnostic_output():
+    T = 1024
+    g = SignalGraph("t")
+    g.stft("spec", frame=FRAME, hop=HOP)
+    g.dnn("mask", "spec", fn=_mask)
+    g.mul("enh", "spec", "mask")
+    g.istft("out", "enh", hop=HOP, length=T)
+    g.outputs("out")
+    g.tap("mask")
+    g.tap("mask")                          # idempotent
+    c = g.compile(T)
+    assert c.outputs == ("out", "mask")
+    x = jnp.asarray(np.random.default_rng(2).standard_normal(T), jnp.float32)
+    res = c(x)
+    assert set(res) == {"out", "mask"}
+    assert res["mask"].shape == (7, FRAME)
+    with pytest.raises(ValueError, match="zzz"):
+        g.tap("zzz")
+
+
+def test_deprecated_output_warns_and_returns_bare_array():
+    T = 1024
+    g = SignalGraph("d")
+    g.stft("spec", frame=FRAME, hop=HOP)
+    g.istft("out", "spec", hop=HOP, length=T)
+    with pytest.warns(DeprecationWarning, match="outputs"):
+        g.output("out")
+    c = g.compile(T)
+    x = jnp.asarray(np.random.default_rng(3).standard_normal(T), jnp.float32)
+    y = c(x)
+    assert not isinstance(y, dict) and y.shape == (T,)
+    # the plural spelling of the same single output returns a dict
+    g2 = SignalGraph("d2")
+    g2.stft("spec", frame=FRAME, hop=HOP)
+    g2.istft("out", "spec", hop=HOP, length=T)
+    g2.outputs("out")
+    res = g2.compile(T)(x)
+    assert isinstance(res, dict) and list(res) == ["out"]
+    np.testing.assert_array_equal(np.asarray(res["out"]), np.asarray(y))
+
+
+def test_add_and_outputs_validation_name_the_offender():
+    g = SignalGraph("v")
+    g.fft("a", "input")
+    with pytest.raises(ValueError, match="'a'"):
+        g.add("fft", "a", "input")         # duplicate stage name
+    with pytest.raises(ValueError, match="'nope'"):
+        g.add("fft", "b", "nope")          # undefined input reference
+    with pytest.raises(ValueError, match="'input'|duplicate"):
+        g.add("fft", "input", "a")         # reserved graph-input name
+    with pytest.raises(ValueError, match="'ghost'"):
+        g.outputs("a", "ghost")
+    with pytest.raises(ValueError, match="at least one"):
+        g.outputs()
+    with pytest.raises(ValueError, match="duplicate"):
+        g.outputs("a", "a")
+
+
+# --------------------------------------------------------------------------
+# Streaming + serving contract
+# --------------------------------------------------------------------------
+
+def test_streaming_runner_multi_output_matches_offline():
+    T = 4096
+    rng = np.random.default_rng(4)
+    x = rng.standard_normal(T).astype(np.float32)
+    g = _fig9_tapped(length=T)
+    off = g.compile(T)(jnp.asarray(x))
+    r = StreamingRunner(g, block_frames=4)
+    acc = {}
+    for c in np.split(x, [300, 812, 1500, 3000], axis=-1):
+        for k, v in r.process(jnp.asarray(c)).items():
+            acc.setdefault(k, []).append(np.asarray(v))
+    for k, v in r.flush().items():
+        acc.setdefault(k, []).append(np.asarray(v))
+    got_out = np.concatenate([p for p in acc["out"] if p.size], axis=-1)
+    got_mel = np.concatenate([p for p in acc["mel_tap"] if p.size], axis=0)
+    # deframed stream: bit-identical; frame tap: the mel GEMM's XLA
+    # lowering is row-count dependent (the documented FIR-GEMM ULP
+    # caveat at block scope)
+    np.testing.assert_array_equal(got_out, np.asarray(off["out"]))
+    np.testing.assert_allclose(got_mel, np.asarray(off["mel_tap"]),
+                               rtol=1e-5, atol=1e-4)
+    lat = r.struct.output_latencies()
+    assert lat["out"] == {"domain": "samples", "latency": FRAME - HOP}
+    assert lat["mel_tap"] == {"domain": "frames", "latency": 0}
+
+
+def test_stream_session_multi_output_one_core_call_per_tick():
+    """Acceptance: the Fig-9 tapped graph served via StreamSession emits
+    per-output results matching offline, still ONE jitted core call per
+    tick for lock-stepped sessions."""
+    g = _fig9_tapped()                     # natural istft length
+    svc = SignalService(block_frames=4)
+    svc.register("fig9", g)
+    rng = np.random.default_rng(5)
+    N, total, chunk = 3, 2048, 256
+    waves = [rng.standard_normal(total).astype(np.float32)
+             for _ in range(N)]
+    sessions = [svc.open_stream("fig9") for _ in range(N)]
+    accs = [{} for _ in range(N)]
+    for lo in range(0, total, chunk):
+        for s, w in zip(sessions, waves):
+            s.feed(jnp.asarray(w[lo:lo + chunk]))
+        assert svc.stream_step() <= 1      # batched, not per-session
+        for i, s in enumerate(sessions):
+            for k, v in s.read().items():
+                accs[i].setdefault(k, []).append(v)
+    for i, s in enumerate(sessions):
+        for k, v in s.close().items():
+            accs[i].setdefault(k, []).append(v)
+    assert svc.stream_sessions() == 0
+    for i, w in enumerate(waves):
+        off = g.compile(total)(jnp.asarray(w))
+        got_out = np.concatenate(accs[i]["out"], axis=-1)
+        got_mel = np.concatenate(accs[i]["mel_tap"], axis=0)
+        np.testing.assert_array_equal(got_out, np.asarray(off["out"]))
+        np.testing.assert_allclose(got_mel, np.asarray(off["mel_tap"]),
+                                   rtol=1e-5, atol=1e-4)
+
+
+def test_service_submit_multi_output_per_request_results():
+    """Acceptance: SignalService.submit returns per-output dicts, each
+    output trimmed to the request's true length, equal to per-length
+    offline compiles (bucketed masked execution underneath)."""
+    g = _fig9_tapped()                     # natural istft length
+    svc = SignalService(batch_size=8)
+    svc.register("fig9", g)
+    rng = np.random.default_rng(6)
+    lens = [700, 900, 1024, 1500]
+    sigs = [rng.standard_normal(t).astype(np.float32) for t in lens]
+    res = svc.serve([SignalRequest(rid=i, graph="fig9", samples=s)
+                     for i, s in enumerate(sigs)])
+    assert svc.stats["compiles"] <= 2      # buckets 1024 and 2048
+    for i, (t, s) in enumerate(zip(lens, sigs)):
+        off = g.compile(t)(jnp.asarray(s))
+        assert set(res[i]) == {"out", "mel_tap"}
+        np.testing.assert_array_equal(res[i]["out"],
+                                      np.asarray(off["out"]))
+        np.testing.assert_allclose(res[i]["mel_tap"],
+                                   np.asarray(off["mel_tap"]),
+                                   rtol=1e-5, atol=1e-4)
+
+
+def test_sample_chain_taps_stream_with_zero_latency():
+    """Multi-output pure sample chains: mid-chain taps emit with every
+    chunk (causal, no core, no latency)."""
+    T = 1024
+    rng = np.random.default_rng(7)
+    x = rng.standard_normal(T).astype(np.float32)
+    g = SignalGraph("chain")
+    g.fir("f1", "input", taps=[1.0, 0.5, 0.25])
+    g.iir_biquad("q", "f1", b=[0.2, 0.3, 0.2], a=[1.0, -0.5, 0.25])
+    g.outputs("q", "f1")
+    off = g.compile(T)(jnp.asarray(x))
+    r = StreamingRunner(g)
+    acc = {}
+    for c in np.split(x, [300, 700], axis=-1):
+        outs = r.process(jnp.asarray(c))
+        assert set(outs) == {"q", "f1"}    # both emit immediately
+        for k, v in outs.items():
+            acc.setdefault(k, []).append(np.asarray(v))
+    for k in ("q", "f1"):
+        got = np.concatenate(acc[k], axis=-1)
+        np.testing.assert_allclose(got, np.asarray(off[k]),
+                                   atol=1e-6, rtol=1e-6)
+    lat = r.struct.output_latencies()
+    assert lat["q"]["latency"] == 0 and lat["f1"]["latency"] == 0
+
+
+# --------------------------------------------------------------------------
+# Params pytree
+# --------------------------------------------------------------------------
+
+def test_init_params_collects_learnable_stages():
+    g = SignalGraph("lp")
+    g.fir("front", "input", taps=np.hanning(8) / 4)
+    g.stft("spec", "front", frame=FRAME, hop=HOP)
+    g.dnn("mask", "spec", fn=_mask, init={"w": np.ones(3, np.float32)})
+    g.mul("enh", "spec", "mask")
+    g.istft("out", "enh", hop=HOP)
+    g.magnitude("mag", "enh", onesided=True)
+    g.mel_filterbank("mel", "mag", sr=16_000, n_mels=6)
+    g.outputs("out", "mel")
+    c = g.compile(1024)
+    p = c.init_params()
+    assert set(p) == {"front", "mask", "mel"}
+    assert p["front"]["taps"].shape == (8,)
+    assert p["mel"]["weights"].shape == (6, FRAME // 2 + 1)
+    np.testing.assert_array_equal(p["mask"]["w"], np.ones(3, np.float32))
+    # defaults reproduce the no-params execution exactly
+    x = jnp.asarray(np.random.default_rng(8).standard_normal(1024),
+                    jnp.float32)
+    res_default = c(x)
+    res_params = c(x, p)
+    for k in res_default:
+        np.testing.assert_array_equal(np.asarray(res_default[k]),
+                                      np.asarray(res_params[k]))
+
+
+def test_hot_swapped_fir_taps_change_output_without_recompile():
+    T = 512
+    g = SignalGraph("hs")
+    g.fir("f", "input", taps=[1.0, 0.0, 0.0])
+    g.outputs("f")
+    c = g.compile(T)
+    run = c.jit()
+    x = jnp.asarray(np.random.default_rng(9).standard_normal(T), jnp.float32)
+    y_id = run(x, c.init_params())["f"]
+    np.testing.assert_allclose(np.asarray(y_id), np.asarray(x), atol=1e-6)
+    swapped = {"f": {"taps": jnp.asarray([0.0, 1.0, 0.0])}}  # pure delay
+    y_del = np.asarray(run(x, swapped)["f"])
+    np.testing.assert_allclose(y_del[1:], np.asarray(x)[:-1], atol=1e-6)
+
+
+def test_value_and_grad_wrt_validation():
+    g = SignalGraph("vw")
+    g.fir("f", "input", taps=[1.0, 0.5])
+    g.outputs("f")
+    c = g.compile(128)
+    vag = c.value_and_grad(lambda outs: jnp.mean(outs["f"] ** 2),
+                           wrt=("nope",))
+    with pytest.raises(ValueError, match="nope"):
+        vag(c.init_params(), jnp.zeros(128))
+
+
+def test_unified_plan_cache_clear():
+    import repro.signal as sig
+
+    sig.clear_plan_caches()
+    assert sig.plan_cache_info()["total"] == 0
+    x = jnp.asarray(np.random.default_rng(10).standard_normal(64),
+                    jnp.float32)
+    sig.fft(x)
+    sig.fir(x, jnp.asarray(np.ones(5, np.float32)))
+    sig.dwt(x)
+    sig.stft(x, frame=32, hop=16)
+    info = sig.plan_cache_info()
+    assert info["fft"] >= 1 and info["fir"] >= 1 and info["dwt"] >= 1
+    assert info.get("stft_frame", 0) >= 1    # spectrogram rides the cache
+    assert info["total"] >= 4
+    sig.clear_plan_caches()
+    assert sig.plan_cache_info()["total"] == 0
+    # rebuilt transparently on the next call
+    sig.fft(x)
+    assert sig.plan_cache_info()["fft"] >= 1
