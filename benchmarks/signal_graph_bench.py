@@ -12,12 +12,23 @@ shuffle-traffic accounting at pipeline scope).  Variants:
     pure-permutation passes ride the array passes' stream-in/out path,
     reported in the ``streamed_words`` column.
 
-    PYTHONPATH=src python -m benchmarks.signal_graph_bench
+A per-**backend** section executes the same compiled programs through
+each registered execution backend (``reference`` jnp interpretation vs
+``pallas`` fused fabric+array kernels, interpret mode on CPU) and
+reports step time plus the lowering report's fused-vs-emulated pass
+counts.  ``--json PATH`` writes the full table set as JSON (the CI smoke
+step uploads it); ``--smoke`` shrinks sizes/iters for CI.
+
+    PYTHONPATH=src python -m benchmarks.signal_graph_bench [--smoke]
+        [--json artifacts/signal_graph_bench.json]
 """
 
 from __future__ import annotations
 
+import argparse
+import json
 import os
+import pathlib
 import sys
 import time
 from typing import List, Tuple
@@ -145,6 +156,38 @@ def multi_output_rows(length: int = 4096, batch: int = 4) -> List[Tuple]:
     return out
 
 
+# -- execution backends: reference vs pallas on the same programs ---------
+
+BACKENDS = ("reference", "pallas")
+
+BACKEND_HEADER = ("graph,backend,fabric_fused,fabric_emulated,"
+                  "array_fused,array_int,array_emulated,us_per_call")
+
+
+def backend_rows(length: int = 4096, batch: int = 4,
+                 iters: int = 10) -> List[Tuple]:
+    """(graph, backend, fabric fused/emulated, array fused/int/emulated,
+    us_per_call) per graph x backend: the same fuse=2 program bound to
+    each execution backend (pallas in interpret mode on CPU — the
+    interesting number there is the fused-pass attribution; compiled
+    wall-clock needs a real device)."""
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.standard_normal((batch, length)), jnp.float32)
+    out = []
+    for g in _graphs(length):
+        for backend in BACKENDS:
+            compiled = g.compile(length, backend=backend)
+            rep = compiled.lowering_report()
+            us = _bench(compiled.jit(), x, None, iters=iters)
+            out.append((g.name, backend,
+                        rep["fabric_passes"]["fused"],
+                        rep["fabric_passes"]["emulated"],
+                        rep["array_passes"]["fused"],
+                        rep["array_passes"]["int_routed"],
+                        rep["array_passes"]["emulated"], us))
+    return out
+
+
 GRAD_HEADER = "graph,variant,us_per_step"
 
 
@@ -179,18 +222,60 @@ def grad_rows(length: int = 4096, batch: int = 4) -> List[Tuple]:
             ("fig9_learned", "value_and_grad", us_vag)]
 
 
-def main() -> None:
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI mode: small sizes, few iters, hard asserts")
+    ap.add_argument("--json", type=str, default=None,
+                    help="write all tables as JSON to this path")
+    args = ap.parse_args(argv)
+    length = 1024 if args.smoke else 4096
+    batch = 2 if args.smoke else 4
+    iters = 3 if args.smoke else 10
+
+    fusion = rows(length, batch)
     print(HEADER)
-    for row in rows():
+    for row in fusion:
         print(format_row(row))
     print()
+    backend = backend_rows(length, batch, iters)
+    print(BACKEND_HEADER)
+    for name, be, ff, fe, af, ai, ae, us in backend:
+        print(f"{name},{be},{ff},{fe},{af},{ai},{ae},{us:.1f}")
+    if args.smoke:
+        # the pallas backend must actually fuse the array passes (and
+        # at least one fabric pass) on the Fig-9 pipeline — a lowering
+        # regression fails CI here, not just in unit tests.
+        by = {(r[0], r[1]): r for r in backend}
+        for g in {r[0] for r in backend}:
+            assert by[(g, "pallas")][4] > 0, f"{g}: no fused array passes"
+            assert by[(g, "reference")][4] == 0
+        assert by[("fig9_enhance", "pallas")][2] >= 1, \
+            "fig9: framing gather should fuse into the butterfly kernel"
+    print()
+    multi = multi_output_rows(length, batch)
     print(MULTI_HEADER)
-    for name, variant, passes, words, shared, us in multi_output_rows():
+    for name, variant, passes, words, shared, us in multi:
         print(f"{name},{variant},{passes},{words},{shared},{us:.1f}")
     print()
+    grad = grad_rows(length, batch)
     print(GRAD_HEADER)
-    for name, variant, us in grad_rows():
+    for name, variant, us in grad:
         print(f"{name},{variant},{us:.1f}")
+
+    if args.json:
+        payload = {
+            "fusion": [dict(zip(HEADER.split(","), r)) for r in fusion],
+            "backends": [dict(zip(BACKEND_HEADER.split(","), r))
+                         for r in backend],
+            "multi_output": [dict(zip(MULTI_HEADER.split(","), r))
+                             for r in multi],
+            "grad": [dict(zip(GRAD_HEADER.split(","), r)) for r in grad],
+        }
+        path = pathlib.Path(args.json)
+        path.parent.mkdir(parents=True, exist_ok=True)
+        path.write_text(json.dumps(payload, indent=2))
+        print(f"\nwrote {path}")
 
 
 if __name__ == "__main__":

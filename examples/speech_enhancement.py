@@ -143,11 +143,17 @@ def main():
 
     vag = jax.jit(fused.value_and_grad(loss_fn, wrt=("front", "mask")))
 
+    # AdamW on the trainable subset of the params pytree (front taps +
+    # mask CNN); the frozen entries (mel weights) ride along untouched.
+    from repro.optim.adamw import adamw_init, adamw_update
+    trainable = ("front", "mask")
+    opt_state = adamw_init({k: params[k] for k in trainable})
+
     @jax.jit
-    def apply(p, g):
-        upd = jax.tree_util.tree_map(lambda w, gw: w - 0.05 * gw,
-                                     {k: p[k] for k in g}, g)
-        return {**p, **upd}
+    def apply(p, g, opt):
+        sub = {k: p[k] for k in trainable}
+        sub, opt, _ = adamw_update(g, opt, sub, lr=1e-2, weight_decay=0.0)
+        return {**p, **sub}, opt
 
     b0 = stream.batch_at(10_000)
     noisy0 = jnp.asarray(b0["noisy"]); clean0 = jnp.asarray(b0["clean"])
@@ -161,7 +167,7 @@ def main():
         b = stream.batch_at(i)
         l, grads = vag(params, jnp.asarray(b["noisy"]),
                        jnp.asarray(b["clean"]))
-        params = apply(params, grads)
+        params, opt_state = apply(params, grads, opt_state)
         if i % 20 == 0:
             print(f"step {i:4d} loss {float(l):.4f}")
     eval_loss_after, _ = vag(params, noisy0, clean0)

@@ -1,0 +1,262 @@
+"""The executable-program IR of a compiled SignalGraph.
+
+``signal/graph.py`` lowers a declared pipeline DAG into per-stage lists of
+three primitive step kinds and fuses them; this module is where those
+steps live **as data**, together with the program container the execution
+backends (:mod:`repro.signal.backends`) consume:
+
+  * :class:`GatherStep` — one standalone pass through the shuffling
+    fabric (a static :class:`~repro.core.fabric.ShufflePlan` plus an
+    optional constant per-element ``diag`` scale);
+  * :class:`EinsumStep` — one computing-array pass (reshape, contract
+    against a static operand, flatten back), optionally carrying the
+    v2-folded ``pre``/``pre_diag``/``post`` stream shuffles and a
+    ``param_key`` marking a learnable operand slot;
+  * :class:`LambdaStep` — host/array glue that moves no data through the
+    fabric (complex repacking, overlap-add, the DNN hook).
+
+A :class:`StageProgram` is one lowered stage (steps + DAG wiring + output
+type); an :class:`ExecProgram` is the whole pipeline: the ordered stage
+list, the declared outputs, and the input/output types.  Everything a
+backend needs to execute — plans, operands, masks, param slots — is
+reachable from the program without consulting the builder graph, which is
+what makes the execution strategy pluggable: the ``reference`` backend
+interprets the steps with ``jnp`` ops (:func:`run_steps_reference`, the
+pre-backend semantics verbatim), while the ``pallas`` backend lowers
+gather∘einsum groups onto the fused fabric+array kernels.
+
+:func:`execute_program` is the shared program walker (environment
+threading, multi-input ``combine``, per-stage valid-frame masking, output
+collection); backends plug in only the per-stage step executor, so every
+backend agrees on graph-level semantics by construction.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .fabric import ShufflePlan, apply_plan
+
+__all__ = ["GatherStep", "EinsumStep", "LambdaStep", "Step",
+           "StageProgram", "ExecProgram", "run_steps_reference",
+           "execute_program", "mask_frames", "INPUT"]
+
+INPUT = "input"     # the reserved graph-input name (SignalGraph.INPUT)
+
+
+# --------------------------------------------------------------------------
+# Primitive steps (the compiled artifact)
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class GatherStep:
+    """One shuffling-fabric pass: ``out = in[plan] (* diag)``.  ``diag`` is
+    a static per-element scale folded into the consuming array pass (window
+    functions, 1/n iFFT normalization, conjugation sign patterns)."""
+    name: str
+    plan: ShufflePlan
+    diag: Optional[np.ndarray] = None
+
+
+@dataclasses.dataclass
+class EinsumStep:
+    """One computing-array pass: reshape the flat last axis to
+    ``reshape_in``, einsum against the static operand, flatten back.
+
+    ``pre`` / ``post`` are optional pure-permutation shuffle plans the
+    fabric applies on the buffer->array stream-in and array->buffer
+    stream-out of the SAME pass (the v2 fusion target): they move words
+    in lock-step with the array and cost no standalone fabric pass.
+    ``pre_diag`` is the constant per-element stream-in scale (window /
+    conjugation / 1/n patterns) inherited from a folded gather.
+    ``folded`` records the names of the absorbed passes for the perf
+    report's attribution.
+
+    ``param_key`` marks a *learnable* operand: when the stage's params
+    entry is a dict containing that key, its value replaces ``operand``
+    at run time (same shape/meaning — FIR taps, the mel matrix), so the
+    operand participates in autodiff instead of being baked into the
+    trace.  ``operand`` stays the static default and seeds
+    ``CompiledSignalGraph.init_params``.
+    """
+    name: str
+    spec: str
+    operand: np.ndarray
+    reshape_in: Tuple[int, ...]
+    out_rank: int                 # rank of the einsum-result suffix to flatten
+    rows: int                     # output positions  (perf: ConvLayer.h)
+    cin: int                      # contraction size  (perf: ConvLayer.cin)
+    cout: int                     # output features   (perf: ConvLayer.cout)
+    pre: Optional[ShufflePlan] = None    # stream-in permutation (v2 fold)
+    pre_diag: Optional[np.ndarray] = None
+    post: Optional[ShufflePlan] = None   # stream-out permutation (v2 fold)
+    folded: Tuple[str, ...] = ()
+    param_key: Optional[str] = None      # learnable-operand params key
+
+
+@dataclasses.dataclass
+class LambdaStep:
+    """Glue with no fabric traffic (repacking, OLA, DNN hook).
+    ``param_init`` is the stage's default learnable-params entry, when
+    the lambda consumes one (biquad ``b``/``a``, a dnn hook's declared
+    ``init``) — collected by ``CompiledSignalGraph.init_params``."""
+    name: str
+    fn: Callable
+    takes_params: bool = False
+    param_init: Optional[object] = None
+
+
+Step = object  # GatherStep | EinsumStep | LambdaStep
+
+
+# --------------------------------------------------------------------------
+# The reference step semantics (the pre-backend jnp interpreter, verbatim)
+# --------------------------------------------------------------------------
+
+def run_steps_reference(steps: Sequence[Step], x: jax.Array,
+                        params) -> jax.Array:
+    """Interpret a step list with plain ``jnp`` ops.  This IS the
+    execution contract: every backend must match it (the ``reference``
+    backend byte-for-byte; lowered backends to float tolerance, since a
+    fused kernel may re-associate the same multiplies)."""
+    for s in steps:
+        if isinstance(s, GatherStep):
+            x = apply_plan(x, s.plan)
+            if s.diag is not None:
+                x = x * jnp.asarray(s.diag, dtype=x.dtype)
+        elif isinstance(s, EinsumStep):
+            if s.pre is not None:
+                x = apply_plan(x, s.pre)
+            if s.pre_diag is not None:
+                # applied even without a pre plan (identity stream-in):
+                # the lowered backends honor a bare pre_diag too, and
+                # the two must agree on every expressible program.
+                x = x * jnp.asarray(s.pre_diag, dtype=x.dtype)
+            h = x.reshape(*x.shape[:-1], *s.reshape_in)
+            op = resolve_operand(s, params)
+            y = jnp.einsum(s.spec, h, jnp.asarray(op, dtype=h.dtype))
+            x = y.reshape(*y.shape[:-s.out_rank], -1)
+            if s.post is not None:
+                x = apply_plan(x, s.post)
+        else:
+            x = s.fn(params, x) if s.takes_params else s.fn(x)
+    return x
+
+
+def resolve_operand(step: EinsumStep, params):
+    """The einsum operand for one call: the stage's params entry when the
+    step declares a ``param_key`` present there, else the static
+    default."""
+    if step.param_key is not None and isinstance(params, dict) \
+            and step.param_key in params:
+        return params[step.param_key]
+    return step.operand
+
+
+# --------------------------------------------------------------------------
+# Program containers
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class StageProgram:
+    """One lowered stage: its step list plus the DAG wiring the walker
+    needs (``inputs`` name upstream stages or the graph input;
+    ``combine`` merges multiple inputs before the steps run).
+    ``out_type`` is the stage's :class:`~repro.signal.graph.SigType`
+    (duck-typed here — the IR only reads ``domain`` and ``suffix`` for
+    masking and ``elems`` for accounting); ``extra_layers`` carries
+    user-declared perf-model ConvLayer descriptors (dnn hooks)."""
+    name: str
+    inputs: Tuple[str, ...]
+    combine: Optional[Callable]
+    steps: List[Step]
+    out_type: object
+    extra_layers: Tuple = ()
+
+
+@dataclasses.dataclass
+class ExecProgram:
+    """A whole compiled pipeline as data: the ordered stage list, the
+    declared outputs, input/output types and the fuse level it was
+    compiled at.  Consumed by :class:`repro.signal.backends.ExecBackend`
+    implementations via :func:`execute_program`."""
+    name: str
+    stages: List[StageProgram]
+    outputs: Tuple[str, ...]
+    in_type: object
+    out_types: Dict[str, object]
+    single: bool
+    fuse_level: int
+
+    # -- step queries (accounting + backend lowering) -----------------------
+    def gather_steps(self) -> List[GatherStep]:
+        """The standalone fabric passes (buffer -> fabric -> buffer)."""
+        return [s for st in self.stages for s in st.steps
+                if isinstance(s, GatherStep)]
+
+    def einsum_steps(self) -> List[EinsumStep]:
+        """The computing-array passes, in execution order."""
+        return [s for st in self.stages for s in st.steps
+                if isinstance(s, EinsumStep)]
+
+    def param_slots(self) -> Dict[str, Tuple[str, ...]]:
+        """Learnable-parameter slots per stage: einsum ``param_key`` s
+        plus ``"<lambda>"`` markers for param-consuming lambdas."""
+        slots: Dict[str, Tuple[str, ...]] = {}
+        for st in self.stages:
+            keys = []
+            for s in st.steps:
+                if isinstance(s, EinsumStep) and s.param_key is not None:
+                    keys.append(s.param_key)
+                elif isinstance(s, LambdaStep) and s.takes_params:
+                    keys.append("<lambda>")
+            if keys:
+                slots[st.name] = tuple(keys)
+        return slots
+
+
+# --------------------------------------------------------------------------
+# The shared program walker
+# --------------------------------------------------------------------------
+
+def mask_frames(y: jax.Array, valid_frames: jax.Array,
+                suffix_rank: int) -> jax.Array:
+    """Zero the frame rows at index >= ``valid_frames`` of a frames-domain
+    value.  ``y`` is ``(*batch, F, *rest)`` with ``suffix_rank`` trailing
+    suffix axes (the frames axis leads the suffix); ``valid_frames`` is an
+    int array broadcastable over the batch axes (scalar or one count per
+    batch row).  Valid rows pass through untouched — ``jnp.where`` selects,
+    it never rescales — so the valid region stays bit-identical."""
+    axis = y.ndim - suffix_rank
+    idx = jnp.arange(y.shape[axis]).reshape((-1,) + (1,) * (suffix_rank - 1))
+    vf = jnp.asarray(valid_frames)
+    vf = vf.reshape(vf.shape + (1,) * suffix_rank)
+    return jnp.where(idx < vf, y, jnp.zeros((), y.dtype))
+
+
+def execute_program(program: ExecProgram, stage_fns: Dict[str, Callable],
+                    x: jax.Array, params=None, valid_frames=None):
+    """Run a program: thread the stage environment, combine multi-input
+    stages, execute each stage's steps through ``stage_fns[name]``
+    (``(x, stage_params) -> y``, supplied by the backend), mask
+    frames-domain outputs when ``valid_frames`` is given, and collect the
+    declared outputs (ordered dict, or the bare primary array for
+    ``single`` programs)."""
+    env = {INPUT: x}
+    for st in program.stages:
+        vals = [env[i] for i in st.inputs]
+        h = st.combine(*vals) if st.combine is not None else vals[0]
+        sp = (params or {}).get(st.name) if isinstance(params, dict) \
+            else params
+        y = stage_fns[st.name](h, sp)
+        if valid_frames is not None and st.out_type.domain == "frames":
+            y = mask_frames(y, valid_frames, len(st.out_type.suffix))
+        env[st.name] = y
+    if program.single:
+        return env[program.outputs[0]]
+    return {name: env[name] for name in program.outputs}

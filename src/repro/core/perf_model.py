@@ -247,6 +247,14 @@ def signal_graph_report(compiled, aw: int = 16, ww: int = 16,
         rep["outputs"] = list(getattr(compiled, "outputs",
                                       [compiled.output]))
         rep["per_output"] = attribution()
+    # execution-backend attribution (compiled graphs bound to an
+    # ExecBackend expose ``lowering_report()``): which fabric passes the
+    # backend actually fused into array kernels vs emulated as XLA
+    # gathers, and the kernel route of every array pass — the runtime
+    # counterpart of the static pass/word counts above.
+    lowering = getattr(compiled, "lowering_report", None)
+    if lowering is not None:
+        rep["backend"] = lowering()
     rep["time_s"] = rep["total"] / hw.freq_hz
     rep["energy_j"] = rep["time_s"] * hw.power_w
     return rep

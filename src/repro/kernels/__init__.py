@@ -19,16 +19,42 @@ each ``ref.py``.
 """
 
 from .bitserial_mm.ops import bitserial_matmul
-from .shuffle_gemm.ops import shuffle_gemm
+from .shuffle_gemm.ops import shuffle_gemm, shuffle_gemm_grouped
 from .fft_stage.ops import fft_stage
 from .fir_conv.ops import fir_conv
 from .flash_attention.ops import flash_attention
 
-__all__ = ["bitserial_matmul", "shuffle_gemm", "fft_stage", "fir_conv",
-           "flash_attention"]
+__all__ = ["bitserial_matmul", "shuffle_gemm", "shuffle_gemm_grouped",
+           "fft_stage", "fir_conv", "flash_attention",
+           "interpret_default"]
+
+
+def interpret_default() -> bool:
+    """The Pallas ``interpret=`` default for every kernel wrapper in this
+    package (they resolve ``interpret=None`` through here): interpret
+    mode on CPU (CI / this container), compiled on real devices.
+
+    Override with the ``REPRO_PALLAS_INTERPRET`` environment variable
+    (``1``/``true`` forces interpret everywhere, ``0``/``false`` forces
+    compiled kernels) — e.g. to smoke-test the compiled path in
+    interpret-capable environments or to debug on device."""
+    import os
+    env = os.environ.get("REPRO_PALLAS_INTERPRET", "").strip().lower()
+    if env in ("1", "true", "yes", "on"):
+        return True
+    if env in ("0", "false", "no", "off"):
+        return False
+    import jax
+    return jax.default_backend() != "tpu"
+
+
+def resolve_interpret(interpret):
+    """Shared ``interpret=`` resolution for every kernel wrapper:
+    ``None`` defers to :func:`interpret_default` (per call — never baked
+    into a jit trace), anything else is coerced to bool."""
+    return interpret_default() if interpret is None else bool(interpret)
 
 
 def default_interpret() -> bool:
-    """Pallas interpret mode: True on CPU (this container), False on TPU."""
-    import jax
-    return jax.default_backend() != "tpu"
+    """Deprecated alias of :func:`interpret_default`."""
+    return interpret_default()

@@ -4,6 +4,7 @@ integer operands, pads to MXU-aligned blocks, runs the kernel, un-pads."""
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -21,17 +22,28 @@ def _pad_to(x: jax.Array, axis: int, mult: int) -> jax.Array:
     return jnp.pad(x, pads)
 
 
-@functools.partial(jax.jit, static_argnames=("a_width", "w_width", "bm",
-                                             "bn", "bk", "interpret"))
 def bitserial_matmul(a: jax.Array, w: jax.Array,
                      a_width: int = 8, w_width: int = 8,
                      bm: int = 128, bn: int = 128, bk: int = 128,
-                     interpret: bool = True) -> jax.Array:
+                     interpret: Optional[bool] = None) -> jax.Array:
     """Exact integer matmul a @ w on the variable-bitwidth array.
 
     a: (..., M, K) ints of ``a_width`` bits; w: (K, N) of ``w_width`` bits.
     Returns int32 (..., M, N) == (a.astype(int32) @ w) exactly.
-    """
+    ``interpret=None`` resolves via :func:`repro.kernels.interpret_default`
+    (resolved eagerly, outside the jitted body, so the env override is
+    honored per call rather than baked into a trace)."""
+    from .. import resolve_interpret
+    return _bitserial_matmul(a, w, a_width, w_width, bm, bn, bk,
+                             resolve_interpret(interpret))
+
+
+@functools.partial(jax.jit, static_argnames=("a_width", "w_width", "bm",
+                                             "bn", "bk", "interpret"))
+def _bitserial_matmul(a: jax.Array, w: jax.Array,
+                      a_width: int, w_width: int,
+                      bm: int, bn: int, bk: int,
+                      interpret: bool) -> jax.Array:
     batch = a.shape[:-2]
     m, k = a.shape[-2:]
     n = w.shape[-1]

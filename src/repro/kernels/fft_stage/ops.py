@@ -14,12 +14,15 @@ from .kernel import fft_stage_pallas
 
 
 def fft_stage(x: jax.Array, stage: sm.FFTStagePlan,
-              interpret: bool = True) -> jax.Array:
+              interpret: bool | None = None) -> jax.Array:
     """Apply one fused (gather + butterfly-GEMM) stage.
 
     x: (..., 2n) interleaved real in the layout the stage's gather expects.
     Output is in flat (j, b, o) layout (the next stage's composed input).
+    ``interpret=None`` resolves via :func:`repro.kernels.interpret_default`.
     """
+    from .. import resolve_interpret
+    interpret = resolve_interpret(interpret)
     batch = x.shape[:-1]
     xb = x.reshape(-1, x.shape[-1])
     idx = jnp.asarray(np.clip(stage.gather.gather_idx, 0, None))
@@ -34,7 +37,7 @@ def _plan(n: int) -> sm.FFTPlan:
     return sm.make_fft_plan(n, fuse_adjacent=True)
 
 
-def fft_pallas(x: jax.Array, interpret: bool = True) -> jax.Array:
+def fft_pallas(x: jax.Array, interpret: bool | None = None) -> jax.Array:
     """Full complex FFT along the last axis, every stage through the fused
     kernel.  x complex (..., n) -> complex (..., n)."""
     from ...core.fabric import apply_plan

@@ -18,11 +18,14 @@ def _plan(n: int, taps: int, phases: int) -> sm.FIRPhasePlan:
 
 
 def fir_conv(x: jax.Array, h: jax.Array, phases: int = 8,
-             bm: int = 128, interpret: bool = True) -> jax.Array:
+             bm: int = 128, interpret: bool | None = None) -> jax.Array:
     """Causal FIR along the last axis via the fused Pallas kernel.
 
     x: (..., n); h: (taps,) -> (..., n), equal to convolve(x, h)[..., :n].
+    ``interpret=None`` resolves via :func:`repro.kernels.interpret_default`.
     """
+    from .. import resolve_interpret
+    interpret = resolve_interpret(interpret)
     n = x.shape[-1]
     taps = h.shape[-1]
     plan = _plan(n, taps, phases)

@@ -12,11 +12,15 @@ from .kernel import flash_attention_bhsd
 def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
                     causal: bool = True, window: int = 0,
                     softcap: float = 0.0, bq: int = 128, bk: int = 128,
-                    interpret: bool = True) -> jax.Array:
+                    interpret: bool | None = None) -> jax.Array:
     """q: (B, Sq, H, hd); k/v: (B, Skv, KV, hd) -> (B, Sq, H, hd).
 
     GQA is handled inside the kernel via BlockSpec index maps (query head
-    h reads kv head h // (H/KV)); KV tensors are never expanded."""
+    h reads kv head h // (H/KV)); KV tensors are never expanded.
+    ``interpret=None`` resolves via :func:`repro.kernels.interpret_default`.
+    """
+    from .. import resolve_interpret
+    interpret = resolve_interpret(interpret)
     b, sq, h, hd = q.shape
     _, skv, kv, _ = k.shape
     group = h // kv

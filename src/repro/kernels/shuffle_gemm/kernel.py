@@ -1,17 +1,30 @@
-"""Fused shuffling-fabric + GEMM kernel (paper §V).
+"""Fused shuffling-fabric + GEMM kernels (paper §V).
 
 The ASIC inserts the fabric between SRAM and the MAC array; the TPU
 analogue is performing the gather + constant-padding *in VMEM*, on the
 block already staged for the MXU, so HBM sees only sequential reads:
 
-    out[b, r, :] = (x[b, idx[r, :]] | pad) @ w           for each row block
+    out[b, r, :] = (x[b, idx[r, :]] | pad) (* scale) @ w    per row block
 
 ``idx`` rows are the compiled ShufflePlan (PAD = -1 entries take
-``pad_vals``).  The source vector block is held fully in VMEM (signals are
-KB-scale; the paper's on-chip buffer holds them whole too).
+``pad_vals``); ``scale`` is the plan's optional constant per-element
+``diag`` (window taper, conjugation signs, 1/n) applied on the gathered
+stream — exactly where the fabric applies it on stream-in.  The source
+vector block is held fully in VMEM (signals are KB-scale; the paper's
+on-chip buffer holds them whole too).
 
-Grid = (B, R/br): batch x row-blocks.  idx/pad/w blocks are broadcast
-across batch.
+Two variants:
+
+  * :func:`shuffle_gemm_blocks` — one shared ``(t, n_out)`` operand for
+    every row (FIR taps, DCT matrix, mel filterbank).
+    Grid = (B, R/br): batch x row-blocks; idx/pad/w broadcast over batch.
+  * :func:`shuffle_gemm_grouped_blocks` — a *grouped* operand
+    ``(G, t, n_out)``: row ``r`` (flat layout ``(reps, G, nb)``)
+    contracts against group ``(r // nb) % G``.  This is the FFT
+    butterfly shape — per-twiddle-class (nb, 4) x (4, 4) matmuls — for
+    arbitrary gather plans (the graph compiler's fused/folded stages).
+    Grid = (B,): one program per batch element, the whole signal block
+    plus the (G, t, n_out) operand resident in VMEM (fft_stage-style).
 """
 
 from __future__ import annotations
@@ -23,12 +36,25 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 
-def _kernel(x_ref, idx_ref, pad_ref, w_ref, o_ref):
-    x = x_ref[0]                       # (n_in,)
-    idx = idx_ref[...]                 # (br, t) int32, PAD -> -1
+def _gather_block(x, idx, pad_ref, scale_ref):
+    """Shared VMEM gather: idx (r, t) with PAD -> -1; optional scale."""
     safe = jnp.maximum(idx, 0)
     g = jnp.take(x, safe.reshape(-1), axis=0).reshape(idx.shape)
     g = jnp.where(idx < 0, pad_ref[...].astype(g.dtype), g)
+    if scale_ref is not None:
+        g = g * scale_ref[...].astype(g.dtype)
+    return g
+
+
+def _kernel(x_ref, idx_ref, pad_ref, w_ref, o_ref):
+    g = _gather_block(x_ref[0], idx_ref[...], pad_ref, None)
+    o_ref[0] = jax.lax.dot_general(
+        g, w_ref[...], (((1,), (0,)), ((), ())),
+        preferred_element_type=o_ref.dtype)
+
+
+def _kernel_scaled(x_ref, idx_ref, pad_ref, scale_ref, w_ref, o_ref):
+    g = _gather_block(x_ref[0], idx_ref[...], pad_ref, scale_ref)
     o_ref[0] = jax.lax.dot_general(
         g, w_ref[...], (((1,), (0,)), ((), ())),
         preferred_element_type=o_ref.dtype)
@@ -37,23 +63,95 @@ def _kernel(x_ref, idx_ref, pad_ref, w_ref, o_ref):
 @functools.partial(jax.jit, static_argnames=("br", "interpret"))
 def shuffle_gemm_blocks(x: jax.Array, idx: jax.Array, pad_vals: jax.Array,
                         w: jax.Array, br: int = 256,
-                        interpret: bool = True) -> jax.Array:
-    """x: (B, n_in); idx/pad_vals: (R, t); w: (t, n_out) -> (B, R, n_out).
-    R must be a multiple of ``br`` (ops.py pads)."""
+                        interpret: bool = True,
+                        scale: jax.Array | None = None) -> jax.Array:
+    """x: (B, n_in); idx/pad_vals[/scale]: (R, t); w: (t, n_out) ->
+    (B, R, n_out).  R must be a multiple of ``br`` (ops.py pads)."""
     b, n_in = x.shape
     r, t = idx.shape
     n_out = w.shape[-1]
     grid = (b, r // br)
+    specs = [
+        pl.BlockSpec((1, n_in), lambda bb, rr: (bb, 0)),
+        pl.BlockSpec((br, t), lambda bb, rr: (rr, 0)),
+        pl.BlockSpec((br, t), lambda bb, rr: (rr, 0)),
+    ]
+    args = [x, idx, pad_vals]
+    kernel = _kernel
+    if scale is not None:
+        specs.append(pl.BlockSpec((br, t), lambda bb, rr: (rr, 0)))
+        args.append(scale)
+        kernel = _kernel_scaled
+    specs.append(pl.BlockSpec((t, n_out), lambda bb, rr: (0, 0)))
+    args.append(w)
     return pl.pallas_call(
-        _kernel,
+        kernel,
         grid=grid,
-        in_specs=[
-            pl.BlockSpec((1, n_in), lambda bb, rr: (bb, 0)),
-            pl.BlockSpec((br, t), lambda bb, rr: (rr, 0)),
-            pl.BlockSpec((br, t), lambda bb, rr: (rr, 0)),
-            pl.BlockSpec((t, n_out), lambda bb, rr: (0, 0)),
-        ],
+        in_specs=specs,
         out_specs=pl.BlockSpec((1, br, n_out), lambda bb, rr: (bb, rr, 0)),
         out_shape=jax.ShapeDtypeStruct((b, r, n_out), x.dtype),
         interpret=interpret,
-    )(x, idx, pad_vals, w)
+    )(*args)
+
+
+def _grouped_kernel(x_ref, idx_ref, pad_ref, w_ref, o_ref, *,
+                    reps: int, groups: int, nb: int):
+    g = _gather_block(x_ref[0], idx_ref[...], pad_ref, None)
+    _grouped_body(g, w_ref, o_ref, reps, groups, nb)
+
+
+def _grouped_kernel_scaled(x_ref, idx_ref, pad_ref, scale_ref, w_ref,
+                           o_ref, *, reps: int, groups: int, nb: int):
+    g = _gather_block(x_ref[0], idx_ref[...], pad_ref, scale_ref)
+    _grouped_body(g, w_ref, o_ref, reps, groups, nb)
+
+
+def _grouped_body(g, w_ref, o_ref, reps, groups, nb):
+    t = g.shape[-1]
+    w = w_ref[...]                              # (G, t, n_out)
+    rows = g.reshape(reps, groups, nb, t).transpose(1, 0, 2, 3) \
+        .reshape(groups, reps * nb, t)
+    # y[j, rb, o] = sum_t rows[j, rb, t] * w[j, t, o]
+    y = jax.lax.dot_general(
+        rows, w, (((2,), (1,)), ((0,), (0,))),
+        preferred_element_type=o_ref.dtype)     # (G, reps*nb, n_out)
+    n_out = w.shape[-1]
+    o_ref[0] = y.reshape(groups, reps, nb, n_out).transpose(1, 0, 2, 3) \
+        .reshape(-1)
+
+
+@functools.partial(jax.jit, static_argnames=("reps", "groups", "nb",
+                                             "interpret"))
+def shuffle_gemm_grouped_blocks(x: jax.Array, idx: jax.Array,
+                                pad_vals: jax.Array, w: jax.Array,
+                                reps: int, groups: int, nb: int,
+                                interpret: bool = True,
+                                scale: jax.Array | None = None
+                                ) -> jax.Array:
+    """x: (B, n_in); idx/pad_vals[/scale]: (R, t) with R = reps*G*nb in
+    (reps, G, nb) row order; w: (G, t, n_out) -> (B, R * n_out) flat in
+    the same row order (the einsum's natural ``...fjbo`` layout)."""
+    b, n_in = x.shape
+    r, t = idx.shape
+    n_out = w.shape[-1]
+    specs = [
+        pl.BlockSpec((1, n_in), lambda bb: (bb, 0)),
+        pl.BlockSpec((r, t), lambda bb: (0, 0)),
+        pl.BlockSpec((r, t), lambda bb: (0, 0)),
+    ]
+    args = [x, idx, pad_vals]
+    kernel = _grouped_kernel
+    if scale is not None:
+        specs.append(pl.BlockSpec((r, t), lambda bb: (0, 0)))
+        args.append(scale)
+        kernel = _grouped_kernel_scaled
+    specs.append(pl.BlockSpec(w.shape, lambda bb: (0, 0, 0)))
+    args.append(w)
+    return pl.pallas_call(
+        functools.partial(kernel, reps=reps, groups=groups, nb=nb),
+        grid=(b,),
+        in_specs=specs,
+        out_specs=pl.BlockSpec((1, r * n_out), lambda bb: (bb, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, r * n_out), x.dtype),
+        interpret=interpret,
+    )(*args)

@@ -1,28 +1,47 @@
-"""Public wrapper: run a compiled ShufflePlan + GEMM through the fused
-Pallas kernel.  Accepts the same ShufflePlan objects as core.fabric."""
+"""Public wrappers: run a compiled ShufflePlan + GEMM through the fused
+Pallas kernels.  Accepts the same ShufflePlan objects as core.fabric."""
 
 from __future__ import annotations
+
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from ...core.fabric import ShufflePlan
-from .kernel import shuffle_gemm_blocks
+from .kernel import shuffle_gemm_blocks, shuffle_gemm_grouped_blocks
+
+
+def _resolve_interpret(interpret: Optional[bool]) -> bool:
+    from .. import resolve_interpret
+    return resolve_interpret(interpret)
+
+
+def _plan_blocks(plan: ShufflePlan, diag, rows: int, dtype):
+    """Reshape a flat plan (+ optional diag scale) into the kernels'
+    (rows, t) row-major blocks."""
+    t = plan.n_out // rows
+    idx = np.asarray(plan.gather_idx, np.int32).reshape(rows, t)
+    pads = np.asarray(plan.pad_values).reshape(rows, t)
+    scale = None if diag is None else \
+        np.asarray(diag, dtype).reshape(rows, t)
+    return t, idx, pads, scale
 
 
 def shuffle_gemm(x: jax.Array, plan: ShufflePlan, w: jax.Array,
                  rows: int, br: int = 256,
-                 interpret: bool = True) -> jax.Array:
-    """out = reshape(apply_plan(x), (rows, t)) @ w, fused in one kernel.
+                 interpret: Optional[bool] = None,
+                 diag=None) -> jax.Array:
+    """out = reshape(apply_plan(x) (* diag), (rows, t)) @ w, fused in one
+    kernel.
 
-    x: (..., n_in); plan.n_out == rows * t; w: (t, n_out).
-    Returns (..., rows, n_out).
+    x: (..., n_in); plan.n_out == rows * t; w: (t, n_out); diag is an
+    optional per-element scale of the gathered stream (a GatherStep /
+    EinsumStep ``diag``).  Returns (..., rows, n_out).  ``interpret=None``
+    resolves via :func:`repro.kernels.interpret_default`.
     """
-    t = plan.n_out // rows
-    idx = np.asarray(plan.gather_idx, np.int32).reshape(rows, t)
-    pads = np.asarray(plan.pad_values).reshape(rows, t)
-
+    t, idx, pads, scale = _plan_blocks(plan, diag, rows, x.dtype)
     batch = x.shape[:-1]
     xb = x.reshape(-1, x.shape[-1])
     br_ = min(br, rows)
@@ -30,8 +49,36 @@ def shuffle_gemm(x: jax.Array, plan: ShufflePlan, w: jax.Array,
     if rem:
         idx = np.pad(idx, ((0, rem), (0, 0)), constant_values=0)
         pads = np.pad(pads, ((0, rem), (0, 0)))
-    out = shuffle_gemm_blocks(xb, jnp.asarray(idx),
-                              jnp.asarray(pads, dtype=x.dtype), w,
-                              br=br_, interpret=interpret)
+        if scale is not None:
+            scale = np.pad(scale, ((0, rem), (0, 0)))
+    out = shuffle_gemm_blocks(
+        xb, jnp.asarray(idx), jnp.asarray(pads, dtype=x.dtype), w,
+        br=br_, interpret=_resolve_interpret(interpret),
+        scale=None if scale is None else jnp.asarray(scale))
     out = out[:, :rows]
     return out.reshape(*batch, rows, w.shape[-1])
+
+
+def shuffle_gemm_grouped(x: jax.Array, plan: ShufflePlan, w: jax.Array,
+                         reps: int, groups: int, nb: int,
+                         interpret: Optional[bool] = None,
+                         diag=None) -> jax.Array:
+    """Grouped-operand variant: plan rows have flat layout
+    ``(reps, groups, nb)`` and row ``r`` contracts against
+    ``w[(r // nb) % groups]`` — the FFT-butterfly shape (per-twiddle-class
+    matmuls) behind an arbitrary fused gather plan.
+
+    x: (..., n_in); plan.n_out == reps * groups * nb * t;
+    w: (groups, t, n_out).  Returns the flat (..., R * n_out) result in
+    row order (the consuming einsum's natural layout).
+    """
+    rows = reps * groups * nb
+    _, idx, pads, scale = _plan_blocks(plan, diag, rows, x.dtype)
+    batch = x.shape[:-1]
+    xb = x.reshape(-1, x.shape[-1])
+    out = shuffle_gemm_grouped_blocks(
+        xb, jnp.asarray(idx), jnp.asarray(pads, dtype=x.dtype), w,
+        reps=reps, groups=groups, nb=nb,
+        interpret=_resolve_interpret(interpret),
+        scale=None if scale is None else jnp.asarray(scale))
+    return out.reshape(*batch, rows * w.shape[-1])

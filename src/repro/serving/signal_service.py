@@ -113,15 +113,27 @@ class SignalService:
     ``dwt`` over the raw input axis) cannot be masked and fall back to
     exact-length grouping; ``bucketing=False`` forces that for all
     graphs.
+
+    ``backend`` selects the execution backend for every compiled
+    program the service runs — bucket compiles AND streaming-session
+    cores (:mod:`repro.signal.backends`: ``"reference"`` jnp
+    interpretation, ``"pallas"`` fused fabric+array kernels; same
+    switch as ``SignalGraph.compile`` / ``StreamingRunner``).
     """
 
     def __init__(self, batch_size: int = 8,
                  fuse: "FuseLevel | int" = FuseLevel.STREAM,
                  buckets: Optional[List[int]] = None,
                  bucketing: bool = True,
-                 block_frames: int = 8):
+                 block_frames: int = 8,
+                 backend="reference"):
+        from ..signal.backends import get_backend
         self.batch_size = batch_size
         self.fuse = FuseLevel.coerce(fuse)
+        # one execution backend per service: every bucket compile and
+        # every streaming-session core call goes through it (same
+        # ``backend=`` switch as SignalGraph.compile / StreamingRunner).
+        self.backend = get_backend(backend)
         self.buckets = sorted(int(b) for b in buckets) if buckets else None
         self.bucketing = bucketing
         self.block_frames = int(block_frames)
@@ -182,7 +194,8 @@ class SignalService:
         key = (name, length)
         if key not in self._compiled:
             graph = self._graphs[name].graph
-            self._compiled[key] = graph.compile(length, fuse=self.fuse)
+            self._compiled[key] = graph.compile(length, fuse=self.fuse,
+                                                backend=self.backend)
             self.stats["compiles"] += 1
         return self._compiled[key]
 
@@ -447,7 +460,7 @@ class SignalService:
                 groups.setdefault(gkey, []).append((sess, spec, block))
             for (n_frames, _, _), members in groups.items():
                 stacked = jnp.stack([b for _, _, b in members])
-                res = struct.core_jit(n_frames, self.fuse)(
+                res = struct.core_jit(n_frames, self.fuse, self.backend)(
                     stacked, reg.params)
                 calls += 1
                 self.est_cycles += self._stream_cost(name, n_frames) \
@@ -484,7 +497,7 @@ class SignalService:
         if key not in self._cost_cache:
             struct = self._graphs[name].struct
             self._cost_cache[key] = step_cost_estimate(
-                struct.core_graph(n_frames, self.fuse))
+                struct.core_graph(n_frames, self.fuse, self.backend))
         return self._cost_cache[key]
 
     def _close_stream(self, sess: "StreamSession") -> None:
@@ -609,7 +622,7 @@ class StreamSession:
                 svc.est_cycles += svc._stream_cost(self.graph_name,
                                                    n_frames)
                 svc.stats["flush_core_calls"] += 1
-                res = struct.core_jit(n_frames, svc.fuse)(
+                res = struct.core_jit(n_frames, svc.fuse, svc.backend)(
                     block[None], reg.params)
                 return jax.tree_util.tree_map(lambda a: a[0], res)
 

@@ -21,6 +21,9 @@ from .spectrogram import stft, istft, magnitude_spectrogram
 from .graph import (SignalGraph, CompiledSignalGraph, SigType, FuseLevel,
                     biquad_apply, overlap_add, mel_filterbank_matrix)
 from .streaming import StreamingRunner, StreamStructure
+from .backends import (ExecBackend, ReferenceBackend, PallasBackend,
+                       PrecisionPolicy, get_backend, register_backend,
+                       available_backends)
 
 __all__ = ["fft", "ifft", "fir", "fir_phased", "dct", "dct2", "dwt",
            "stft", "istft", "magnitude_spectrogram",
@@ -28,16 +31,25 @@ __all__ = ["fft", "ifft", "fir", "fir_phased", "dct", "dct2", "dwt",
            "SignalGraph", "CompiledSignalGraph", "SigType", "FuseLevel",
            "biquad_apply", "overlap_add", "mel_filterbank_matrix",
            "StreamingRunner", "StreamStructure", "clear_plan_caches",
-           "plan_cache_info"]
+           "plan_cache_info", "plan_cache_get",
+           "ExecBackend", "ReferenceBackend", "PallasBackend",
+           "PrecisionPolicy", "get_backend", "register_backend",
+           "available_backends"]
 
 
-# One keyed plan cache for every functional-API plan kind (formerly four
-# ad-hoc ``functools.lru_cache`` s).  Keys are ``(kind, *args)``; entries
-# are the static numpy plan artifacts, never traced values, so clearing
-# is always safe.  ``clear_plan_caches()`` lets property tests bound
-# memory across thousands of generated shapes; ``_PLAN_CACHE_MAX``
-# keeps the old LRU eviction so long-lived services over many distinct
-# signal lengths cannot grow the cache without bound.
+# One keyed plan cache for every compiled plan artifact: the functional
+# API's plan kinds (formerly four ad-hoc ``functools.lru_cache`` s) AND
+# the execution backends' lowered kernel groups
+# (:mod:`repro.signal.backends` caches each gather∘einsum lowering here
+# under its backend's name).  Keys are ``(backend, kind, *args)`` with
+# ``backend=None`` for backend-agnostic plans; entries are static
+# compile artifacts, never traced values, so clearing is always safe.
+# ``clear_plan_caches()`` lets property tests bound memory across
+# thousands of generated shapes; ``_PLAN_CACHE_MAX`` keeps the old LRU
+# eviction so long-lived services over many distinct signal lengths
+# cannot grow the cache without bound.  Per-backend hit/miss counters
+# (``plan_cache_info()["by_backend"]``) make cache-key regressions —
+# a backend leaking into, or missing from, the key — directly testable.
 
 _PLAN_BUILDERS = {
     "fft": lambda n, fused=True: _sm.make_fft_plan(n, fuse_adjacent=fused),
@@ -47,32 +59,70 @@ _PLAN_BUILDERS = {
 }
 _PLAN_CACHE: dict = {}
 _PLAN_CACHE_MAX = 256
+_FUNCTIONAL = "functional"          # stats bucket for backend-None plans
+_PLAN_STATS: dict = {}
 
 
-def _plan(kind: str, *args):
-    key = (kind, *args)
+def _stats_bucket(backend) -> dict:
+    label = _FUNCTIONAL if backend is None else str(backend)
+    return _PLAN_STATS.setdefault(label, {"hits": 0, "misses": 0})
+
+
+def plan_cache_get(kind: str, args: tuple, builder, backend=None):
+    """Fetch-or-build a cached plan artifact.
+
+    ``(backend, kind, *args)`` is the cache key — ``backend`` is the
+    execution-backend name for backend-specific lowerings (so two
+    backends never share an entry) and ``None`` for backend-agnostic
+    plans.  ``builder`` is called on a miss.  Hits/misses are counted
+    per backend (:func:`plan_cache_info`)."""
+    key = (backend, kind, *tuple(args))
+    stats = _stats_bucket(backend)
     hit = _PLAN_CACHE.pop(key, None)
     if hit is None:
-        hit = _PLAN_BUILDERS[kind](*args)
+        stats["misses"] += 1
+        hit = builder()
         while len(_PLAN_CACHE) >= _PLAN_CACHE_MAX:      # LRU eviction
             _PLAN_CACHE.pop(next(iter(_PLAN_CACHE)))
+    else:
+        stats["hits"] += 1
     _PLAN_CACHE[key] = hit          # (re-)insert as most recently used
     return hit
 
 
+def _plan(kind: str, *args):
+    return plan_cache_get(kind, args,
+                          lambda: _PLAN_BUILDERS[kind](*args))
+
+
 def clear_plan_caches() -> None:
-    """Drop every cached shuffle plan built by the functional API
-    (``fft``/``ifft``/``fir``/``fir_phased``/``dwt``).  Plans are static
-    compile artifacts keyed by shape; the next call simply rebuilds."""
+    """Drop every cached plan artifact — the functional API's shuffle
+    plans (``fft``/``ifft``/``fir``/``fir_phased``/``dwt``) and the
+    backends' lowered kernel groups — and reset the hit/miss counters.
+    Plans are static compile artifacts keyed by shape; the next call
+    simply rebuilds."""
     _PLAN_CACHE.clear()
+    _PLAN_STATS.clear()
 
 
 def plan_cache_info() -> dict:
-    """Entry count per plan kind (observability for tests/benchmarks)."""
+    """Cache observability for tests/benchmarks: entry count per plan
+    kind, the total, and per-backend-key ``{"entries", "hits",
+    "misses"}`` under ``"by_backend"`` (functional-API plans count
+    under ``"functional"``)."""
     info: dict = {kind: 0 for kind in _PLAN_BUILDERS}
+    by_backend: dict = {label: {"entries": 0, **dict(stats)}
+                        for label, stats in _PLAN_STATS.items()}
     for key in _PLAN_CACHE:
-        info[key[0]] += 1
+        backend, kind = key[0], key[1]
+        info[kind] = info.get(kind, 0) + 1
+        label = _FUNCTIONAL if backend is None else str(backend)
+        bucket = by_backend.setdefault(label,
+                                       {"entries": 0, "hits": 0,
+                                        "misses": 0})
+        bucket["entries"] += 1
     info["total"] = len(_PLAN_CACHE)
+    info["by_backend"] = by_backend
     return info
 
 

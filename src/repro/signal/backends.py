@@ -1,0 +1,576 @@
+"""Pluggable execution backends for compiled SignalGraphs.
+
+A :class:`~repro.core.exec_ir.ExecProgram` says *what* to execute — the
+fused gather/einsum/lambda step sequence with plans, operands, masks and
+param slots as data.  An :class:`ExecBackend` says *how*: it binds a
+program to per-stage step executors once at compile time, and the shared
+walker (:func:`repro.core.exec_ir.execute_program`) threads the stage
+environment, multi-input combines and valid-frame masks identically for
+every backend.
+
+Two backends ship:
+
+  * ``reference`` — interprets the step list with plain ``jnp`` ops
+    (:func:`repro.core.exec_ir.run_steps_reference`): byte-for-byte the
+    pre-backend execution path, differentiable, the parity oracle.
+  * ``pallas`` — lowers each ``gather ∘ einsum (∘ post-shuffle)`` group
+    onto the fused fabric+array kernels, the software analogue of the
+    paper's fabric feeding the computing array:
+
+      - row-uniform einsums (FIR taps, DCT, mel, DWT banks) run through
+        :func:`repro.kernels.shuffle_gemm` — the standalone gather ahead
+        of the einsum AND the v2-folded ``pre``/``pre_diag`` stream
+        shuffle are absorbed into the kernel's in-VMEM gather;
+      - grouped einsums (the FFT butterfly: per-twiddle-class matmuls)
+        run through :func:`repro.kernels.shuffle_gemm_grouped`;
+      - steps named by a :class:`PrecisionPolicy` are *int-routed*: the
+        gathered rows and the operand are symmetrically quantized
+        (:mod:`repro.core.bitwidth`) and contracted exactly on the
+        variable-bitwidth array via
+        :func:`repro.kernels.bitserial_matmul`, then dequantized — the
+        paper's 4/8/16-bit menu per array pass;
+      - everything else (host lambdas, gathers feeding no array pass)
+        is *emulated* on the reference path.
+
+    Kernels run in interpret mode on CPU and compiled on real devices
+    (:func:`repro.kernels.interpret_default`, env-overridable).  Pallas
+    kernels do not define a reverse-mode transpose, so
+    ``CompiledSignalGraph.value_and_grad`` always differentiates through
+    the reference lowering (``ExecBackend.differentiable``).
+
+:meth:`ExecBackend.bind` returns a :class:`BoundProgram` whose
+``report()`` attributes every lowered step to its route — how many
+fabric passes were actually fused into an array kernel vs emulated as an
+XLA gather — surfaced per backend by
+:func:`repro.core.perf_model.signal_graph_report`.
+
+Backend-specific lowering artifacts are cached in the signal package's
+keyed plan cache under the backend's name
+(:func:`repro.signal.plan_cache_get`), so repeated compiles of the same
+pipeline — offline, per-block streaming cores, serving buckets — reuse
+one lowering, and :func:`repro.signal.plan_cache_info` exposes
+per-backend hit/miss counts.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import math
+from typing import Callable, Dict, List, Mapping, Optional, Sequence, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from ..core import bitwidth as bw
+from ..core.exec_ir import (EinsumStep, ExecProgram, GatherStep,
+                            execute_program, resolve_operand,
+                            run_steps_reference)
+from ..core.fabric import (ShufflePlan, apply_plan, compose_into_einsum,
+                           identity_plan)
+
+__all__ = ["ExecBackend", "ReferenceBackend", "PallasBackend",
+           "PrecisionPolicy", "BoundProgram", "StepRoute",
+           "register_backend", "get_backend", "available_backends"]
+
+
+# --------------------------------------------------------------------------
+# Route accounting
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class StepRoute:
+    """Where one lowered step executes under a backend.  ``route`` is one
+    of ``fused_gemm`` / ``fused_grouped`` / ``int_bitserial`` (array
+    kernels), ``jnp`` (emulated), ``host`` (lambda glue);
+    ``absorbed_gathers`` counts standalone fabric passes folded into the
+    kernel's in-VMEM gather."""
+    stage: str
+    step: str
+    kind: str                   # 'gather' | 'einsum' | 'lambda'
+    route: str
+    absorbed_gathers: int = 0
+
+
+def _routes_report(name: str, routes: Sequence[StepRoute]) -> dict:
+    fabric_fused = sum(r.absorbed_gathers for r in routes)
+    fabric_emulated = sum(1 for r in routes
+                          if r.kind == "gather" and r.route == "jnp")
+    array = [r for r in routes if r.kind == "einsum"]
+    by_route: Dict[str, int] = {}
+    for r in routes:
+        by_route[r.route] = by_route.get(r.route, 0) + 1
+    return {
+        "name": name,
+        "fabric_passes": {"fused": fabric_fused,
+                          "emulated": fabric_emulated},
+        "array_passes": {
+            "fused": sum(1 for r in array
+                         if r.route in ("fused_gemm", "fused_grouped")),
+            "int_routed": sum(1 for r in array
+                              if r.route == "int_bitserial"),
+            "emulated": sum(1 for r in array if r.route == "jnp"),
+        },
+        "host_steps": sum(1 for r in routes if r.kind == "lambda"),
+        "routes": by_route,
+    }
+
+
+@dataclasses.dataclass
+class BoundProgram:
+    """A program bound to one backend: callable ``(x, params,
+    valid_frames) -> outputs`` plus the per-step route attribution."""
+    backend: "ExecBackend"
+    program: ExecProgram
+    stage_fns: Dict[str, Callable]
+    routes: List[StepRoute]
+
+    def __call__(self, x, params=None, valid_frames=None):
+        return execute_program(self.program, self.stage_fns, x, params,
+                               valid_frames)
+
+    def report(self) -> dict:
+        return _routes_report(self.backend.name, self.routes)
+
+
+# --------------------------------------------------------------------------
+# Precision policy (int routing through the variable-bitwidth array)
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class PrecisionPolicy:
+    """Per-step operand/activation bitwidths for the ``pallas`` backend.
+
+    ``widths`` maps a stage name (or a fully-qualified step name such as
+    ``"mel.mel"``) to ``(a_width, w_width)``; ``default`` optionally
+    applies to every *row-uniform* einsum not named explicitly.  A
+    matched step is int-routed: activations quantize per contraction row,
+    the operand per output channel (symmetric,
+    :func:`repro.core.bitwidth.quantize`), the integer contraction runs
+    exactly on :func:`repro.kernels.bitserial_matmul`, and the result is
+    dequantized with the product of scales — output error is pure
+    quantization error, bounded by the chosen widths.  Routings whose
+    accumulation could wrap the int32 array accumulator
+    (``aw + ww - 2 + ceil(log2 K) > 31``) are rejected at bind time
+    rather than silently wrapping.  Grouped (butterfly) einsums are
+    never int-routed: their twiddle dynamic range is what the paper
+    keeps in 16-bit."""
+    widths: Mapping[str, Tuple[int, int]] = \
+        dataclasses.field(default_factory=dict)
+    default: Optional[Tuple[int, int]] = None
+
+    def __post_init__(self):
+        for key, (aw, ww) in dict(self.widths).items():
+            if aw not in bw.VALID_WIDTHS or ww not in bw.VALID_WIDTHS:
+                raise ValueError(
+                    f"PrecisionPolicy widths for {key!r} must be from "
+                    f"{bw.VALID_WIDTHS}; got {(aw, ww)}")
+        if self.default is not None and (
+                self.default[0] not in bw.VALID_WIDTHS
+                or self.default[1] not in bw.VALID_WIDTHS):
+            raise ValueError(f"invalid default widths {self.default}")
+
+    def widths_for(self, stage: str,
+                   step: str) -> Optional[Tuple[int, int]]:
+        """Most-specific match: step name, then stage name, then the
+        default."""
+        w = dict(self.widths)
+        if step in w:
+            return tuple(w[step])
+        if stage in w:
+            return tuple(w[stage])
+        return None if self.default is None else tuple(self.default)
+
+    def cache_token(self) -> Tuple:
+        """Hashable identity for lowering-cache keys."""
+        return (tuple(sorted((k, tuple(v))
+                             for k, v in dict(self.widths).items())),
+                None if self.default is None else tuple(self.default))
+
+
+# --------------------------------------------------------------------------
+# Einsum classification (which kernel shape a step maps onto)
+# --------------------------------------------------------------------------
+
+def _spec_axes(spec: str) -> Tuple[str, str, str]:
+    lhs, out = spec.split("->")
+    ins, op = lhs.split(",")
+    return ins.replace("...", ""), op.replace("...", ""), \
+        out.replace("...", "")
+
+
+def _prod(xs) -> int:
+    return int(math.prod(xs)) if xs else 1
+
+
+@dataclasses.dataclass(frozen=True)
+class _EinsumShape:
+    """Canonical GEMM view of an EinsumStep: gathered rows reshape to
+    ``(rows_total, t)`` and contract against a ``(t, cout)`` operand —
+    shared across all rows (``groups == 1``) or per-group
+    (``(groups, t, cout)``, rows in ``(reps, groups, nb)`` layout)."""
+    rows_total: int
+    t: int
+    grouped: bool                # True => per-group operand (butterfly)
+    groups: int
+    reps: int
+    nb: int
+    op_perm: Tuple[int, ...]     # operand transpose to canonical order
+    op_shape: Tuple[int, ...]    # canonical operand shape after reshape
+
+
+def classify_einsum(step: EinsumStep) -> Optional[_EinsumShape]:
+    """Map a step onto a kernel shape, or None when the spec falls
+    outside the supported family (the backend then emulates it).
+
+    Supported: the input reshapes to row axes followed by trailing
+    contracted axes; the output keeps the row axes leading (input
+    order) followed by the operand's output-only axes; the operand
+    indexes the contracted and output-only axes plus at most ONE row
+    axis (the *group* axis — the FFT butterfly's twiddle class)."""
+    ins, op, out = _spec_axes(step.spec)
+    if len(ins) != len(step.reshape_in) or len(set(ins)) != len(ins) \
+            or len(set(op)) != len(op) or len(set(out)) != len(out):
+        return None
+    dims = dict(zip(ins, step.reshape_in))
+    contracted = [c for c in ins if c not in out]
+    if not contracted or list(ins[-len(contracted):]) != contracted:
+        return None
+    if step.out_rank != len(out):
+        # the reference semantics flatten only the last out_rank axes of
+        # the einsum result; the kernels flatten the whole suffix — only
+        # equivalent when out_rank covers every output axis.
+        return None
+    rows_axes = [c for c in ins if c in out]
+    out_only = [c for c in op if c not in ins]
+    group_axes = [c for c in op if c in ins and c in out]
+    if list(out) != rows_axes + out_only:
+        return None
+    if any(c not in op for c in contracted):
+        return None          # contraction without an operand axis
+    t = _prod([dims[c] for c in contracted])
+    rows_total = _prod([dims[c] for c in rows_axes])
+    if not group_axes:
+        desired = contracted + out_only
+        perm = tuple(op.index(c) for c in desired)
+        return _EinsumShape(rows_total, t, False, 1, rows_total, 1,
+                            perm, (t, -1))
+    if len(group_axes) != 1:
+        return None
+    gax = group_axes[0]
+    gi = ins.index(gax)
+    reps = _prod([dims[c] for c in ins[:gi]])
+    nb = _prod([dims[c] for c in ins[gi + 1:len(ins) - len(contracted)]])
+    desired = [gax] + contracted + out_only
+    perm = tuple(op.index(c) for c in desired)
+    return _EinsumShape(rows_total, t, True, dims[gax], reps, nb, perm,
+                        (dims[gax], t, -1))
+
+
+def _operand_to_canonical(op_arr, shape: _EinsumShape, dtype):
+    """Transpose/reshape an einsum operand into the kernel's canonical
+    ``(t, cout)`` / ``(groups, t, cout)`` layout."""
+    w = jnp.asarray(op_arr, dtype=dtype)
+    w = jnp.transpose(w, shape.op_perm)
+    return w.reshape(shape.op_shape)
+
+
+# --------------------------------------------------------------------------
+# Backends
+# --------------------------------------------------------------------------
+
+class ExecBackend:
+    """Base class: subclasses implement :meth:`lower_stage`.  ``bind``
+    lowers every stage once (compile time) and returns the bound
+    program; ``cache_key`` keys compile caches (streaming cores, serving
+    buckets) so two backends never share a compiled program slot."""
+
+    name = "base"
+    differentiable = False
+
+    @property
+    def cache_key(self) -> Tuple:
+        return (self.name,)
+
+    def lower_stage(self, stage) -> Tuple[Callable, List[StepRoute]]:
+        raise NotImplementedError
+
+    def bind(self, program: ExecProgram) -> BoundProgram:
+        stage_fns: Dict[str, Callable] = {}
+        routes: List[StepRoute] = []
+        for st in program.stages:
+            fn, rs = self.lower_stage(st)
+            stage_fns[st.name] = fn
+            routes.extend(rs)
+        return BoundProgram(self, program, stage_fns, routes)
+
+
+class ReferenceBackend(ExecBackend):
+    """The pre-backend jnp interpreter, byte-for-byte: every gather is an
+    XLA ``take``/``where``, every array pass a ``jnp.einsum``.  This is
+    the parity oracle and the differentiation path."""
+
+    name = "reference"
+    differentiable = True
+
+    def lower_stage(self, stage):
+        steps = stage.steps
+        routes = []
+        for s in steps:
+            kind = ("gather" if isinstance(s, GatherStep) else
+                    "einsum" if isinstance(s, EinsumStep) else "lambda")
+            routes.append(StepRoute(stage.name, s.name, kind,
+                                    "host" if kind == "lambda" else "jnp"))
+
+        def run(x, sp):
+            return run_steps_reference(steps, x, sp)
+        return run, routes
+
+
+class PallasBackend(ExecBackend):
+    """Lower gather∘einsum(∘post) groups onto the fused Pallas kernels.
+
+    ``interpret=None`` resolves via
+    :func:`repro.kernels.interpret_default` at bind time (interpret on
+    CPU/CI, compiled on devices); ``precision`` optionally int-routes
+    named steps through :func:`repro.kernels.bitserial_matmul` (see
+    :class:`PrecisionPolicy`)."""
+
+    name = "pallas"
+    differentiable = False
+
+    def __init__(self, interpret: Optional[bool] = None,
+                 precision: Optional[PrecisionPolicy] = None):
+        self.interpret = interpret
+        self.precision = precision or PrecisionPolicy()
+
+    @property
+    def cache_key(self) -> Tuple:
+        return (self.name, self.interpret, self.precision.cache_token())
+
+    def _interpret(self) -> bool:
+        if self.interpret is None:
+            from ..kernels import interpret_default
+            return interpret_default()
+        return bool(self.interpret)
+
+    # -- lowering -----------------------------------------------------------
+    def lower_stage(self, stage):
+        units: List[Callable] = []
+        routes: List[StepRoute] = []
+        steps = stage.steps
+        i = 0
+        while i < len(steps):
+            s = steps[i]
+            nxt = steps[i + 1] if i + 1 < len(steps) else None
+            if isinstance(s, GatherStep) and isinstance(nxt, EinsumStep):
+                unit = self._lower_group(stage.name, nxt, gather=s)
+                if unit is not None:
+                    fn, route = unit
+                    units.append(fn)
+                    if route.route == "int_bitserial":
+                        # the int route gathers via apply_plan (the
+                        # bitserial kernel has no fused gather): the
+                        # absorbed pass is emulated, not fused.
+                        routes.append(StepRoute(stage.name, s.name,
+                                                "gather", "jnp"))
+                        routes.append(route)
+                    else:
+                        routes.append(dataclasses.replace(
+                            route, absorbed_gathers=1))
+                    i += 2
+                    continue
+            if isinstance(s, EinsumStep):
+                unit = self._lower_group(stage.name, s, gather=None)
+                if unit is not None:
+                    fn, route = unit
+                    units.append(fn)
+                    routes.append(route)
+                    i += 1
+                    continue
+            kind = ("gather" if isinstance(s, GatherStep) else
+                    "einsum" if isinstance(s, EinsumStep) else "lambda")
+            routes.append(StepRoute(stage.name, s.name, kind,
+                                    "host" if kind == "lambda" else "jnp"))
+            units.append(_reference_unit(s))
+            i += 1
+
+        def run(x, sp):
+            for u in units:
+                x = u(x, sp)
+            return x
+        return run, routes
+
+    def _lower_group(self, stage_name: str, e: EinsumStep,
+                     gather: Optional[GatherStep]):
+        """One fused kernel call for (gather?) ∘ einsum ∘ (post?), or
+        None when the einsum spec is outside the kernel family (the
+        caller then falls back to the reference path step by step)."""
+        shape = classify_einsum(e)
+        if shape is None:
+            return None
+        n_in_flat = _prod(e.reshape_in)
+        # compose the standalone gather and the v2-folded stream-in
+        # shuffle into ONE plan the kernel gathers in VMEM.
+        if gather is not None:
+            plan, diag = compose_into_einsum(gather.plan, gather.diag,
+                                             e.pre, e.pre_diag)
+        elif e.pre is not None:
+            plan, diag = e.pre, e.pre_diag
+        else:
+            plan, diag = identity_plan(n_in_flat), e.pre_diag
+        if plan.n_out != n_in_flat:
+            return None
+        widths = self.precision.widths_for(stage_name, e.name)
+        if widths is not None and not shape.grouped:
+            _check_int_headroom(e.name, widths, shape.t)
+        interpret = self._interpret()
+
+        def build():
+            if widths is not None and not shape.grouped:
+                return self._int_unit(e, shape, plan, diag, widths,
+                                      interpret), "int_bitserial"
+            if not shape.grouped:
+                return self._gemm_unit(e, shape, plan, diag,
+                                       interpret), "fused_gemm"
+            return self._grouped_unit(e, shape, plan, diag,
+                                      interpret), "fused_grouped"
+
+        key = _group_digest(e, plan, diag, widths, interpret)
+        from . import plan_cache_get
+        fn, route_name = plan_cache_get("exec_group", key, build,
+                                        backend=self.name)
+        return fn, StepRoute(stage_name, e.name, "einsum", route_name)
+
+    # -- unit builders ------------------------------------------------------
+    def _gemm_unit(self, e: EinsumStep, shape: _EinsumShape,
+                   plan: ShufflePlan, diag, interpret: bool):
+        from ..kernels import shuffle_gemm
+        post = e.post
+
+        def unit(x, sp):
+            op = resolve_operand(e, sp)
+            w = _operand_to_canonical(op, shape, x.dtype)
+            y = shuffle_gemm(x, plan, w, rows=shape.rows_total,
+                             interpret=interpret, diag=diag)
+            y = y.reshape(*y.shape[:-2], -1)
+            return apply_plan(y, post) if post is not None else y
+        return unit
+
+    def _grouped_unit(self, e: EinsumStep, shape: _EinsumShape,
+                      plan: ShufflePlan, diag, interpret: bool):
+        from ..kernels import shuffle_gemm_grouped
+        post = e.post
+
+        def unit(x, sp):
+            op = resolve_operand(e, sp)
+            w = _operand_to_canonical(op, shape, x.dtype)
+            y = shuffle_gemm_grouped(x, plan, w, reps=shape.reps,
+                                     groups=shape.groups, nb=shape.nb,
+                                     interpret=interpret, diag=diag)
+            return apply_plan(y, post) if post is not None else y
+        return unit
+
+    def _int_unit(self, e: EinsumStep, shape: _EinsumShape,
+                  plan: ShufflePlan, diag, widths: Tuple[int, int],
+                  interpret: bool):
+        from ..kernels import bitserial_matmul
+        aw, ww = widths
+        post = e.post
+
+        def unit(x, sp):
+            g = apply_plan(x, plan)
+            if diag is not None:
+                g = g * jnp.asarray(diag, dtype=g.dtype)
+            h = g.reshape(*g.shape[:-1], shape.rows_total, shape.t)
+            w = _operand_to_canonical(resolve_operand(e, sp), shape,
+                                      jnp.float32)
+            xq, x_scale = bw.quantize(h, aw, axis=-1)
+            wq, w_scale = bw.quantize(w, ww, axis=0)
+            acc = bitserial_matmul(xq.astype(jnp.int32),
+                                   wq.astype(jnp.int32), aw, ww,
+                                   interpret=interpret)
+            y = (acc.astype(jnp.float32) * x_scale * w_scale
+                 ).astype(x.dtype)
+            y = y.reshape(*y.shape[:-2], -1)
+            return apply_plan(y, post) if post is not None else y
+        return unit
+
+
+def _check_int_headroom(step_name: str, widths: Tuple[int, int],
+                        k: int) -> None:
+    """Reject precision-policy routings whose integer accumulation can
+    wrap the array's 32-bit accumulator: each quantized product is
+    < 2^(aw+ww-2) and ``k`` of them sum per output, so the policy needs
+    ``aw + ww - 2 + ceil(log2 k) <= 31``.  Failing loudly at bind time
+    beats silently wrapped (sign-flipped) outputs."""
+    aw, ww = widths
+    need = aw + ww - 2 + math.ceil(math.log2(max(k, 1)))
+    if need > 31:
+        raise ValueError(
+            f"PrecisionPolicy({aw}, {ww}) on step {step_name!r} with "
+            f"contraction size {k} needs {need} accumulator bits and "
+            f"would overflow the int32 array accumulator; choose "
+            f"narrower widths (aw + ww - 2 + ceil(log2 K) must be "
+            f"<= 31)")
+
+
+def _reference_unit(step):
+    def unit(x, sp):
+        return run_steps_reference([step], x, sp)
+    return unit
+
+
+def _group_digest(e: EinsumStep, plan: ShufflePlan, diag,
+                  widths, interpret: bool) -> Tuple:
+    """Content digest of one lowered group: everything the built unit
+    closure depends on.  Lambdas never reach here, so cached units are
+    pure functions of this key and safe to share across programs."""
+    h = hashlib.sha1()
+    for arr in (plan.gather_idx, plan.pad_values,
+                np.asarray(diag) if diag is not None else np.zeros(0),
+                np.asarray(e.operand),
+                e.post.gather_idx if e.post is not None else np.zeros(0),
+                e.post.pad_values if e.post is not None else np.zeros(0)):
+        a = np.ascontiguousarray(arr)
+        h.update(str(a.dtype).encode())
+        h.update(str(a.shape).encode())
+        h.update(a.tobytes())
+    meta = (e.spec, tuple(e.reshape_in), e.out_rank, e.rows, e.cin,
+            e.cout, e.param_key, widths, bool(interpret))
+    return (h.hexdigest(), meta)
+
+
+# --------------------------------------------------------------------------
+# Registry
+# --------------------------------------------------------------------------
+
+_BACKENDS: Dict[str, Callable[[], ExecBackend]] = {
+    "reference": ReferenceBackend,
+    "pallas": PallasBackend,
+}
+
+
+def register_backend(name: str,
+                     factory: Callable[[], ExecBackend]) -> None:
+    """Register a backend factory under ``name`` (resolved by
+    :func:`get_backend` / ``compile(backend=name)``)."""
+    _BACKENDS[name] = factory
+
+
+def available_backends() -> List[str]:
+    return sorted(_BACKENDS)
+
+
+def get_backend(backend) -> ExecBackend:
+    """Resolve a backend name to a fresh instance, or pass an
+    :class:`ExecBackend` instance through (custom interpret / precision
+    configurations)."""
+    if isinstance(backend, ExecBackend):
+        return backend
+    try:
+        return _BACKENDS[backend]()
+    except KeyError:
+        raise ValueError(
+            f"unknown execution backend {backend!r}; choose from "
+            f"{available_backends()} or pass an ExecBackend instance")

@@ -84,7 +84,12 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..core import signal_mapping as _sm
-from ..core.fabric import (PAD, ShufflePlan, apply_plan, compose_into_einsum,
+from ..core import exec_ir as _exec_ir
+from ..core.exec_ir import (EinsumStep, ExecProgram, GatherStep, LambdaStep,
+                            StageProgram, Step)
+from ..core.exec_ir import mask_frames as _mask_frames          # noqa: F401
+from ..core.exec_ir import run_steps_reference as _run_steps    # noqa: F401
+from ..core.fabric import (PAD, ShufflePlan, compose_into_einsum,
                            is_identity, is_permutation, tile_plan)
 
 __all__ = ["SignalGraph", "CompiledSignalGraph", "SigType", "FuseLevel",
@@ -154,91 +159,12 @@ class SigType:
 # --------------------------------------------------------------------------
 # Primitive steps (the compiled artifact)
 # --------------------------------------------------------------------------
-
-@dataclasses.dataclass
-class GatherStep:
-    """One shuffling-fabric pass: ``out = in[plan] (* diag)``.  ``diag`` is
-    a static per-element scale folded into the consuming array pass (window
-    functions, 1/n iFFT normalization, conjugation sign patterns)."""
-    name: str
-    plan: ShufflePlan
-    diag: Optional[np.ndarray] = None
-
-
-@dataclasses.dataclass
-class EinsumStep:
-    """One computing-array pass: reshape the flat last axis to
-    ``reshape_in``, einsum against the static operand, flatten back.
-
-    ``pre`` / ``post`` are optional pure-permutation shuffle plans the
-    fabric applies on the buffer->array stream-in and array->buffer
-    stream-out of the SAME pass (the v2 fusion target): they move words
-    in lock-step with the array and cost no standalone fabric pass.
-    ``pre_diag`` is the constant per-element stream-in scale (window /
-    conjugation / 1/n patterns) inherited from a folded gather.
-    ``folded`` records the names of the absorbed passes for the perf
-    report's attribution.
-
-    ``param_key`` marks a *learnable* operand: when the stage's params
-    entry is a dict containing that key, its value replaces ``operand``
-    at run time (same shape/meaning — FIR taps, the mel matrix), so the
-    operand participates in autodiff instead of being baked into the
-    trace.  ``operand`` stays the static default and seeds
-    :meth:`CompiledSignalGraph.init_params`.
-    """
-    name: str
-    spec: str
-    operand: np.ndarray
-    reshape_in: Tuple[int, ...]
-    out_rank: int                 # rank of the einsum-result suffix to flatten
-    rows: int                     # output positions  (perf: ConvLayer.h)
-    cin: int                      # contraction size  (perf: ConvLayer.cin)
-    cout: int                     # output features   (perf: ConvLayer.cout)
-    pre: Optional[ShufflePlan] = None    # stream-in permutation (v2 fold)
-    pre_diag: Optional[np.ndarray] = None
-    post: Optional[ShufflePlan] = None   # stream-out permutation (v2 fold)
-    folded: Tuple[str, ...] = ()
-    param_key: Optional[str] = None      # learnable-operand params key
-
-
-@dataclasses.dataclass
-class LambdaStep:
-    """Glue with no fabric traffic (repacking, OLA, DNN hook).
-    ``param_init`` is the stage's default learnable-params entry, when
-    the lambda consumes one (biquad ``b``/``a``, a dnn hook's declared
-    ``init``) — collected by :meth:`CompiledSignalGraph.init_params`."""
-    name: str
-    fn: Callable
-    takes_params: bool = False
-    param_init: Optional[object] = None
-
-
-Step = object  # GatherStep | EinsumStep | LambdaStep
-
-
-def _run_steps(steps: Sequence[Step], x: jax.Array, params) -> jax.Array:
-    for s in steps:
-        if isinstance(s, GatherStep):
-            x = apply_plan(x, s.plan)
-            if s.diag is not None:
-                x = x * jnp.asarray(s.diag, dtype=x.dtype)
-        elif isinstance(s, EinsumStep):
-            if s.pre is not None:
-                x = apply_plan(x, s.pre)
-                if s.pre_diag is not None:
-                    x = x * jnp.asarray(s.pre_diag, dtype=x.dtype)
-            h = x.reshape(*x.shape[:-1], *s.reshape_in)
-            op = s.operand
-            if s.param_key is not None and isinstance(params, dict) \
-                    and s.param_key in params:
-                op = params[s.param_key]
-            y = jnp.einsum(s.spec, h, jnp.asarray(op, dtype=h.dtype))
-            x = y.reshape(*y.shape[:-s.out_rank], -1)
-            if s.post is not None:
-                x = apply_plan(x, s.post)
-        else:
-            x = s.fn(params, x) if s.takes_params else s.fn(x)
-    return x
+#
+# The step dataclasses — GatherStep / EinsumStep / LambdaStep — and the
+# canonical jnp step interpreter live in :mod:`repro.core.exec_ir` (the
+# executable-program IR); they are re-exported here for the builder API
+# and back-compat.  ``_run_steps`` is the reference interpreter
+# (:func:`repro.core.exec_ir.run_steps_reference`).
 
 
 def _compose_gathers(a: GatherStep, b: GatherStep) -> GatherStep:
@@ -600,21 +526,16 @@ class Stage:
         return int(self.params.get("frame_context", 0))
 
 
-@dataclasses.dataclass
-class CompiledStage:
-    name: str
-    inputs: Tuple[str, ...]
-    combine: Optional[Callable]
-    steps: List[Step]
-    out_type: SigType
-    extra_layers: Tuple = ()      # perf_model.ConvLayer descriptors (dnn)
+# One lowered stage of the executable program (steps + DAG wiring +
+# output type) — defined by the IR; the compiler builds these directly.
+CompiledStage = StageProgram
 
 
 class SignalGraph:
     """Builder for a DAG of DSP stages.  ``"input"`` names the graph input;
     every ``add_*`` method returns the stage name for chaining."""
 
-    INPUT = "input"
+    INPUT = _exec_ir.INPUT      # the IR's reserved graph-input name
 
     def __init__(self, name: str = "signal_graph"):
         self.name = name
@@ -815,7 +736,8 @@ class SignalGraph:
 
     # -- compilation --------------------------------------------------------
     def compile(self, length: int, fuse: "FuseLevel | int" = FuseLevel.STREAM,
-                width: int = 16) -> "CompiledSignalGraph":
+                width: int = 16,
+                backend="reference") -> "CompiledSignalGraph":
         """Shape-specialize and lower the graph for input length ``length``.
 
         ``fuse`` selects the fusion level (a :class:`FuseLevel` or the
@@ -833,6 +755,20 @@ class SignalGraph:
         how many standalone fabric passes the step list executes.
         (``True`` / ``False`` still coerce to STREAM / NONE with a
         ``DeprecationWarning``.)
+
+        ``backend`` selects the execution backend consuming the lowered
+        program (:mod:`repro.signal.backends`): ``"reference"``
+        (default) interprets the steps with jnp ops — byte-for-byte the
+        historical execution path; ``"pallas"`` lowers gather∘einsum
+        groups onto the fused fabric+array kernels
+        (:mod:`repro.kernels`), interpret mode on CPU and compiled on
+        real devices.  An :class:`~repro.signal.backends.ExecBackend`
+        instance is accepted for custom interpret / precision-policy
+        configurations.  The same argument threads through
+        :class:`~repro.signal.streaming.StreamingRunner` and
+        :class:`~repro.serving.signal_service.SignalService`, so
+        offline, streamed and served execution pick their backend with
+        one switch.
         """
         level = int(FuseLevel.coerce(fuse))
         out_names = self._declared_outputs()
@@ -865,7 +801,8 @@ class SignalGraph:
                                    types[self.INPUT],
                                    {n: types[n] for n in out_names},
                                    fuse=level,
-                                   single=self._single_output())
+                                   single=self._single_output(),
+                                   backend=backend)
 
 
 # --------------------------------------------------------------------------
@@ -1135,20 +1072,9 @@ def _lower_stage(st: Stage, in_types: List[SigType], fuse: bool,
 # --------------------------------------------------------------------------
 # The compiled graph
 # --------------------------------------------------------------------------
-
-def _mask_frames(y: jax.Array, valid_frames: jax.Array,
-                 suffix_rank: int) -> jax.Array:
-    """Zero the frame rows at index >= ``valid_frames`` of a frames-domain
-    value.  ``y`` is ``(*batch, F, *rest)`` with ``suffix_rank`` trailing
-    suffix axes (the frames axis leads the suffix); ``valid_frames`` is an
-    int array broadcastable over the batch axes (scalar or one count per
-    batch row).  Valid rows pass through untouched — ``jnp.where`` selects,
-    it never rescales — so the valid region stays bit-identical."""
-    axis = y.ndim - suffix_rank
-    idx = jnp.arange(y.shape[axis]).reshape((-1,) + (1,) * (suffix_rank - 1))
-    vf = jnp.asarray(valid_frames)
-    vf = vf.reshape(vf.shape + (1,) * suffix_rank)
-    return jnp.where(idx < vf, y, jnp.zeros((), y.dtype))
+#
+# ``_mask_frames`` (re-exported above) lives in core.exec_ir: masking is
+# part of the shared program-walker semantics every backend inherits.
 
 
 class CompiledSignalGraph:
@@ -1176,7 +1102,8 @@ class CompiledSignalGraph:
     def __init__(self, name: str, stages: List[CompiledStage],
                  outputs: Tuple[str, ...], in_type: SigType,
                  out_types: Dict[str, SigType], fuse: int,
-                 single: bool = True):
+                 single: bool = True, backend="reference"):
+        from .backends import get_backend
         self.name = name
         self.stages = stages
         self.outputs = tuple(outputs)
@@ -1187,11 +1114,36 @@ class CompiledSignalGraph:
         self.single = bool(single)
         self.fuse_level = int(fuse)   # 0 = unfused, 1 = gathers, 2 = v2
         self.fused = self.fuse_level > 0
+        # the executable-program IR + its backend binding: the program is
+        # the step sequence as data; the backend decides how each stage's
+        # steps execute (jnp interpretation vs fused Pallas kernels).
+        self.program = ExecProgram(name, stages, self.outputs, in_type,
+                                   self.out_types, self.single,
+                                   self.fuse_level)
+        self.backend = get_backend(backend)
+        self._exec = self.backend.bind(self.program)
+
+    def with_backend(self, backend) -> "CompiledSignalGraph":
+        """The same lowered program bound to another execution backend
+        (no re-lowering of the graph; plans and operands are shared)."""
+        return CompiledSignalGraph(self.name, self.stages, self.outputs,
+                                   self.in_type, self.out_types,
+                                   fuse=self.fuse_level, single=self.single,
+                                   backend=backend)
+
+    def lowering_report(self) -> Dict:
+        """Per-backend route attribution of the bound program: how many
+        fabric passes were actually fused into array kernels vs emulated
+        as XLA gathers, and which kernel family each array pass took
+        (surfaced by :func:`repro.core.perf_model.signal_graph_report`
+        as the ``backend`` section)."""
+        return self._exec.report()
 
     # -- execution ----------------------------------------------------------
     def __call__(self, x: jax.Array, params=None, *,
                  valid_frames=None):
-        """Run the pipeline.  Returns an ordered ``dict[str, Array]``
+        """Run the pipeline through the bound execution backend.
+        Returns an ordered ``dict[str, Array]``
         (declaration order: outputs then taps) unless the graph used the
         deprecated single-``output()`` spelling, which returns the bare
         array.  ``valid_frames`` enables the masked /
@@ -1204,19 +1156,7 @@ class CompiledSignalGraph:
         the zero padding a SAME-padded conv sees at the signal boundary,
         so the valid region is bit-identical to compiling at the true
         length (tests/test_signal_bucketing.py)."""
-        env = {SignalGraph.INPUT: x}
-        for st in self.stages:
-            vals = [env[i] for i in st.inputs]
-            h = st.combine(*vals) if st.combine is not None else vals[0]
-            sp = (params or {}).get(st.name) if isinstance(params, dict) \
-                else params
-            y = _run_steps(st.steps, h, sp)
-            if valid_frames is not None and st.out_type.domain == "frames":
-                y = _mask_frames(y, valid_frames, len(st.out_type.suffix))
-            env[st.name] = y
-        if self.single:
-            return env[self.output]
-        return {name: env[name] for name in self.outputs}
+        return self._exec(x, params, valid_frames)
 
     # -- the params pytree ---------------------------------------------------
     def init_params(self) -> Dict[str, object]:
@@ -1256,8 +1196,16 @@ class CompiledSignalGraph:
         pass) and folded ``diag`` scales carry their cotangents — so a
         learned FIR front-end or mel matrix trains exactly like the dnn
         hook.  ``has_aux`` follows ``jax.value_and_grad`` semantics for
-        ``loss_fn`` returning ``(scalar, aux)``."""
+        ``loss_fn`` returning ``(scalar, aux)``.
+
+        Differentiation always runs the ``reference`` lowering: Pallas
+        kernels define no reverse-mode transpose, so a program bound to
+        a non-differentiable backend (``backend.differentiable`` False)
+        is transparently re-bound for the gradient path — train on the
+        reference program, serve on the array backend."""
         names = None if wrt is None else tuple(wrt)
+        run_graph = self if self.backend.differentiable \
+            else self.with_backend("reference")
 
         def split(params):
             params = dict(params) if isinstance(params, dict) else \
@@ -1278,7 +1226,7 @@ class CompiledSignalGraph:
             return diff, rest
 
         def run(diff, rest, x, *args):
-            return loss_fn(self.__call__(x, {**rest, **diff}), *args)
+            return loss_fn(run_graph(x, {**rest, **diff}), *args)
 
         def fn(params, x, *args):
             diff, rest = split(params)

@@ -291,8 +291,10 @@ class StreamStructure:
                            for s in self.pre_names]
         self.post_stages = [_make_sample_stage(stages[s])
                             for s in self.post_names]
-        self._core_cache: Dict[Tuple[int, int], CompiledSignalGraph] = {}
-        self._core_jit_cache: Dict[Tuple[int, int], object] = {}
+        # keyed by (n_frames, fuse, backend.cache_key): two execution
+        # backends never share a compiled core program slot.
+        self._core_cache: Dict[Tuple, CompiledSignalGraph] = {}
+        self._core_jit_cache: Dict[Tuple, object] = {}
 
     # -- analysis -----------------------------------------------------------
     @classmethod
@@ -492,8 +494,11 @@ class StreamStructure:
         return bool(self.frame_outputs)
 
     def core_graph(self, n_frames: int,
-                   fuse: FuseLevel = FuseLevel.STREAM) -> CompiledSignalGraph:
-        key = (n_frames, int(fuse))
+                   fuse: FuseLevel = FuseLevel.STREAM,
+                   backend="reference") -> CompiledSignalGraph:
+        from .backends import get_backend
+        backend = get_backend(backend)
+        key = (n_frames, int(fuse), backend.cache_key)
         if key not in self._core_cache:
             g = SignalGraph(f"{self.graph.name}_core")
             for s in self.core_names:
@@ -512,13 +517,18 @@ class StreamStructure:
             else:
                 g._set_outputs([self.deframer], plural=False)
             block_len = (n_frames - 1) * self.hop + self.frame
-            self._core_cache[key] = g.compile(block_len, fuse=fuse)
+            self._core_cache[key] = g.compile(block_len, fuse=fuse,
+                                              backend=backend)
         return self._core_cache[key]
 
-    def core_jit(self, n_frames: int, fuse: FuseLevel = FuseLevel.STREAM):
-        key = (n_frames, int(fuse))
+    def core_jit(self, n_frames: int, fuse: FuseLevel = FuseLevel.STREAM,
+                 backend="reference"):
+        from .backends import get_backend
+        backend = get_backend(backend)
+        key = (n_frames, int(fuse), backend.cache_key)
         if key not in self._core_jit_cache:
-            self._core_jit_cache[key] = self.core_graph(n_frames, fuse).jit()
+            self._core_jit_cache[key] = self.core_graph(
+                n_frames, fuse, backend).jit()
         return self._core_jit_cache[key]
 
 
@@ -719,7 +729,11 @@ class StreamingRunner:
     at once (one jitted core program per distinct block size);
     ``fuse`` is forwarded to :meth:`SignalGraph.compile` for the per-block
     core (``FuseLevel.STREAM`` = full v2 cross-einsum folding);
-    ``jit_blocks=False`` runs the core eagerly (debugging).
+    ``backend`` picks the execution backend for the per-block core
+    (:mod:`repro.signal.backends`: ``"reference"`` jnp interpretation,
+    ``"pallas"`` fused fabric+array kernels — same switch as
+    ``compile(backend=...)``); ``jit_blocks=False`` runs the core
+    eagerly (debugging).
 
     The carried state lives in ``self.state`` (a :class:`StreamState`
     pytree); the graph analysis and compile caches in ``self.struct`` (a
@@ -730,11 +744,14 @@ class StreamingRunner:
                  block_frames: int = 8,
                  fuse: "FuseLevel | int" = FuseLevel.STREAM,
                  jit_blocks: bool = True,
-                 struct: Optional[StreamStructure] = None):
+                 struct: Optional[StreamStructure] = None,
+                 backend="reference"):
+        from .backends import get_backend
         self.graph = graph
         self.params = params
         self.block_frames = int(block_frames)
         self.fuse = FuseLevel.coerce(fuse)
+        self.backend = get_backend(backend)
         self.jit_blocks = jit_blocks
         self.struct = struct if struct is not None \
             else StreamStructure.analyze(graph)
@@ -782,9 +799,10 @@ class StreamingRunner:
 
     def _run_core(self, block: jax.Array, n_frames: int):
         if not self.jit_blocks:
-            return self.struct.core_graph(n_frames, self.fuse)(
-                block, self.params)
-        return self.struct.core_jit(n_frames, self.fuse)(block, self.params)
+            return self.struct.core_graph(n_frames, self.fuse,
+                                          self.backend)(block, self.params)
+        return self.struct.core_jit(n_frames, self.fuse,
+                                    self.backend)(block, self.params)
 
     def _drain(self, final: bool) -> jax.Array:
         self.state, out = drain_state(self.struct, self.state,
