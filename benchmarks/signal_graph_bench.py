@@ -264,7 +264,10 @@ def main(argv=None) -> None:
         print(f"{name},{variant},{us:.1f}")
 
     if args.json:
+        from repro.core.perf_model import PERF_SCHEMA_VERSION
         payload = {
+            "schema_version": 1,
+            "perf_model_schema_version": PERF_SCHEMA_VERSION,
             "fusion": [dict(zip(HEADER.split(","), r)) for r in fusion],
             "backends": [dict(zip(BACKEND_HEADER.split(","), r))
                          for r in backend],

@@ -15,9 +15,14 @@ requests against one :class:`CoScheduler` per policy, measuring
     the batched-chunk-step acceptance number).
 
 Output: one CSV block per section (like the other benches) and, with
-``--json PATH``, a machine-readable summary.
+``--json PATH``, a machine-readable summary.  With ``--trace PATH`` (or
+``REPRO_TRACE=1`` / ``REPRO_TRACE=<path>`` in the environment) the whole
+sweep runs under the SigTrace instrumentation: a Perfetto-loadable
+Chrome trace is exported and validated, and the post-run
+latency/occupancy report is printed after the CSV blocks.
 
     PYTHONPATH=src python -m benchmarks.signal_service_bench [--smoke]
+        [--trace artifacts/service_trace.json]
 """
 
 from __future__ import annotations
@@ -37,6 +42,7 @@ import numpy as np
 FRAME, HOP, MAXLEN = 64, 32, 512
 POLICIES = ("round_robin", "latency_aware", "cost_balanced")
 DSP_TARGET = 0.5
+BENCH_SCHEMA_VERSION = 1
 
 
 def _graph():
@@ -65,9 +71,11 @@ def _engine():
 
 
 def simulate(policy: str, ticks: int, dsp_per_tick: float,
-             llm_per_tick: float, seed: int = 0) -> Dict:
+             llm_per_tick: float, seed: int = 0):
     """Open-loop offered load for ``ticks`` scheduler ticks, then drain.
-    Latency clock = cumulative perf-model cycles of executed work."""
+    Latency clock = cumulative perf-model cycles of executed work.
+    Returns ``(record, scheduler)`` — the scheduler so the tracing path
+    can build the occupancy section of the post-run report."""
     from repro.serving import (CoScheduler, CostBalancedPolicy, Request,
                                SignalRequest, SignalService)
 
@@ -133,7 +141,7 @@ def simulate(policy: str, ticks: int, dsp_per_tick: float,
         "dsp_share_final": sched.occupancy()["dsp_share"],
         "llm_cycles": sched.llm_cycles,
         "dsp_cycles": sched.dsp_cycles,
-    }
+    }, sched
 
 
 def simulate_sessions(n_sessions: int, n_ticks: int,
@@ -192,7 +200,16 @@ def main(argv=None) -> None:
                     help="tiny sweep for CI")
     ap.add_argument("--json", type=str, default=None,
                     help="also write a JSON summary to this path")
+    ap.add_argument("--trace", type=str, default=None,
+                    help="run under SigTrace and export a Chrome trace "
+                         "to this path (REPRO_TRACE=1|<path> also works)")
     args = ap.parse_args(argv)
+
+    from repro import obs
+    if args.trace:
+        obs.enable(trace_path=args.trace)
+    else:
+        obs.enable_from_env()
 
     ticks = 120 if args.smoke else args.ticks
     # offered load (dsp, llm) requests per tick: a balanced point plus a
@@ -201,11 +218,14 @@ def main(argv=None) -> None:
     sweep = [(0.80, 0.20)] if args.smoke else [(0.15, 0.20), (0.80, 0.20)]
 
     load_rows = []
+    last_sched = None
     print(LOAD_HEADER)
     for dsp_rate, llm_rate in sweep:
         for policy in POLICIES:
-            r = simulate(policy, ticks, dsp_rate, llm_rate)
+            r, sched = simulate(policy, ticks, dsp_rate, llm_rate)
             load_rows.append(r)
+            if policy == "cost_balanced":
+                last_sched = sched
             print(format_load_row(r))
 
     sess = simulate_sessions(args.sessions,
@@ -226,9 +246,24 @@ def main(argv=None) -> None:
         raise SystemExit("FAIL: cost_balanced occupancy split drifted "
                          ">10% from target under load")
 
+    report = None
+    if obs.ENABLED:
+        # post-run observability artifacts: the latency/occupancy report
+        # (printed + embedded in --json) and the validated Chrome trace.
+        report = obs.build_report(scheduler=last_sched,
+                                  dsp_target=DSP_TARGET)
+        print("\n" + obs.render_report(report))
+        path = obs.get_tracer().export(obs.default_trace_path())
+        stats = obs.validate_trace(path)
+        print(f"\nwrote trace {path} ({stats['events']} events, "
+              f"{len(stats['lanes'])} lanes)")
+
     if args.json:
-        payload = {"load_sweep": load_rows, "streaming": sess,
+        payload = {"schema_version": BENCH_SCHEMA_VERSION,
+                   "load_sweep": load_rows, "streaming": sess,
                    "dsp_target": DSP_TARGET}
+        if report is not None:
+            payload["report"] = report
         d = os.path.dirname(args.json)
         if d:
             os.makedirs(d, exist_ok=True)

@@ -1,0 +1,151 @@
+"""Benchmark trajectory files: append / load / compare ``BENCH_*.json``.
+
+Each PR checks in one ``BENCH_PR<k>.json`` at the repo root — a list of
+entries, one per bench run::
+
+    [{"schema_version": 1, "pr": 6, "bench": "signal_graph_bench",
+      "metrics": {...the bench's --json payload...}}, ...]
+
+so later PRs (and the re-anchoring reviewer) can see speedups and
+regressions across the whole sequence without re-running old code.
+:func:`load_trajectory` globs every ``BENCH_PR*.json``;
+:func:`compare` diffs a numeric metric between two entries and flags
+regressions beyond a tolerance.
+
+CLI — used by CI and by hand after running the benches with ``--json``::
+
+    PYTHONPATH=src python -m benchmarks.trajectory \
+        --pr 6 --out BENCH_PR6.json \
+        signal_graph_bench=artifacts/signal_graph_bench.json \
+        signal_service_bench=artifacts/signal_service_bench.json
+"""
+
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+import re
+from typing import Dict, List, Optional
+
+TRAJECTORY_SCHEMA_VERSION = 1
+
+
+def make_entry(pr: int, bench: str, metrics: dict) -> dict:
+    return {"schema_version": TRAJECTORY_SCHEMA_VERSION,
+            "pr": int(pr), "bench": str(bench), "metrics": metrics}
+
+
+def append_entry(path: str, entry: dict) -> List[dict]:
+    """Append one entry to a trajectory file (created if missing;
+    replaces an existing entry for the same (pr, bench) so re-runs
+    update in place).  Returns the file's entries."""
+    entries = load(path) if os.path.exists(path) else []
+    entries = [e for e in entries
+               if (e["pr"], e["bench"]) != (entry["pr"], entry["bench"])]
+    entries.append(entry)
+    entries.sort(key=lambda e: (e["pr"], e["bench"]))
+    with open(path, "w") as f:
+        json.dump(entries, f, indent=2)
+        f.write("\n")
+    return entries
+
+
+def load(path: str) -> List[dict]:
+    with open(path) as f:
+        entries = json.load(f)
+    if not isinstance(entries, list):
+        raise ValueError(f"{path}: trajectory files hold a list of "
+                         f"entries, got {type(entries).__name__}")
+    for e in entries:
+        for field in ("pr", "bench", "metrics"):
+            if field not in e:
+                raise ValueError(f"{path}: entry missing {field!r}: {e}")
+    return entries
+
+
+def load_trajectory(root: str = ".") -> List[dict]:
+    """Every entry from every ``BENCH_PR*.json`` under ``root``, sorted
+    by PR number then bench name."""
+    entries: List[dict] = []
+    for path in glob.glob(os.path.join(root, "BENCH_PR*.json")):
+        entries.extend(load(path))
+    entries.sort(key=lambda e: (e["pr"], e["bench"]))
+    return entries
+
+
+def latest(entries: List[dict], bench: str,
+           before_pr: Optional[int] = None) -> Optional[dict]:
+    """The most recent entry for ``bench`` (optionally strictly before
+    ``before_pr`` — i.e. the baseline a new run compares against)."""
+    cand = [e for e in entries if e["bench"] == bench
+            and (before_pr is None or e["pr"] < before_pr)]
+    return cand[-1] if cand else None
+
+
+def _lookup(metrics: dict, dotted: str):
+    """Resolve ``a.b.0.c`` paths through nested dicts/lists."""
+    cur = metrics
+    for part in dotted.split("."):
+        if isinstance(cur, list):
+            cur = cur[int(part)]
+        elif isinstance(cur, dict):
+            cur = cur[part]
+        else:
+            raise KeyError(dotted)
+    return cur
+
+
+def compare(old: dict, new: dict, keys: List[str],
+            tolerance: float = 0.10,
+            higher_is_better: bool = False) -> List[dict]:
+    """Diff dotted metric paths between two entries' ``metrics``.
+    Returns one record per key with ``ratio`` (new/old) and
+    ``regressed`` set when the change exceeds ``tolerance`` in the bad
+    direction.  Missing keys are reported, not raised — schema drift
+    across PRs must not crash the comparison (that is what
+    ``schema_version`` is for)."""
+    out = []
+    for key in keys:
+        rec: Dict = {"key": key, "regressed": False}
+        try:
+            a = float(_lookup(old["metrics"], key))
+            b = float(_lookup(new["metrics"], key))
+        except (KeyError, IndexError, TypeError, ValueError):
+            rec["missing"] = True
+            out.append(rec)
+            continue
+        rec["old"], rec["new"] = a, b
+        rec["ratio"] = b / a if a else float("inf") if b else 1.0
+        worse = rec["ratio"] < (1 - tolerance) if higher_is_better \
+            else rec["ratio"] > (1 + tolerance)
+        rec["regressed"] = bool(worse)
+        out.append(rec)
+    return out
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__.split("\n")[0])
+    ap.add_argument("--pr", type=int, required=True)
+    ap.add_argument("--out", type=str, required=True,
+                    help="trajectory file to append to (BENCH_PR<k>.json)")
+    ap.add_argument("benches", nargs="+",
+                    help="name=path pairs of bench --json payloads")
+    args = ap.parse_args(argv)
+    for spec in args.benches:
+        if "=" not in spec:
+            raise SystemExit(f"expected name=path, got {spec!r}")
+        bench, path = spec.split("=", 1)
+        if not re.fullmatch(r"[A-Za-z0-9_.-]+", bench):
+            raise SystemExit(f"bad bench name {bench!r}")
+        with open(path) as f:
+            metrics = json.load(f)
+        entries = append_entry(args.out, make_entry(args.pr, bench,
+                                                    metrics))
+        print(f"{args.out}: {len(entries)} entries "
+              f"(+ pr={args.pr} bench={bench})")
+
+
+if __name__ == "__main__":
+    main()

@@ -108,10 +108,19 @@ def main():
     ap.add_argument("--length", type=int, default=4096)
     ap.add_argument("--smoke", action="store_true",
                     help="CI mode: few steps, small model, hard asserts")
+    ap.add_argument("--trace", type=str, default=None,
+                    help="record a SigTrace chrome-trace of the serving "
+                         "phase to this path (REPRO_TRACE=... also works)")
     args = ap.parse_args()
     if args.smoke:
         args.steps, args.batch, args.length = 6, 2, 2048
     length = args.length
+
+    from repro import obs
+    if args.trace:
+        obs.enable(trace_path=args.trace)
+    else:
+        obs.enable_from_env()
 
     from repro.core.perf_model import signal_graph_report
     from repro.data import SignalStream
@@ -254,6 +263,11 @@ def main():
           f"requests (per-output results) in {sched.ticks} ticks "
           f"({service.stats['compiles']} bucket compiles, "
           f"dsp share {occ['dsp_share']:.2f})")
+    if obs.ENABLED:
+        path = obs.get_tracer().export(obs.default_trace_path())
+        stats = obs.validate_trace(path)
+        print(obs.render_report(obs.build_report(scheduler=sched)))
+        print(f"wrote trace {path} ({stats['events']} events)")
     print("OK: SigProgram — multi-output, trained, streamed, served")
 
 

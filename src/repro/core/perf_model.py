@@ -29,6 +29,14 @@ import dataclasses
 import math
 from typing import List, Optional, Sequence
 
+# Version stamp carried by every dict this module emits
+# (:func:`signal_graph_report`, :func:`step_cost_report`) so the
+# report/trajectory tooling (repro.obs.report, benchmarks/trajectory.py,
+# the committed BENCH_PR*.json files) can evolve the shapes without
+# breaking consumers of old JSON.  Bump on any key rename/removal or
+# unit change; pure additions keep the version.
+PERF_SCHEMA_VERSION = 1
+
 # --------------------------------------------------------------------------
 # Hardware constants
 # --------------------------------------------------------------------------
@@ -257,6 +265,7 @@ def signal_graph_report(compiled, aw: int = 16, ww: int = 16,
         rep["backend"] = lowering()
     rep["time_s"] = rep["total"] / hw.freq_hz
     rep["energy_j"] = rep["time_s"] * hw.power_w
+    rep["schema_version"] = PERF_SCHEMA_VERSION
     return rep
 
 
@@ -299,6 +308,22 @@ def step_cost_estimate(compiled, batch: int = 1, aw: int = 16,
     target (the paper's §V utilization argument)."""
     rep = signal_graph_report(compiled, aw, ww, hw)
     return int(rep["total"]) * max(1, int(batch))
+
+
+def step_cost_report(compiled, batch: int = 1, aw: int = 16,
+                     ww: int = 16, hw: SigDLAHW = SigDLAHW()) -> dict:
+    """Structured form of :func:`step_cost_estimate` for tooling that
+    serializes costs (the serving report / trajectory files): the same
+    cycle estimate plus its inputs, under a stable ``schema_version``.
+    :func:`step_cost_estimate` stays the scalar fast path the scheduler
+    policies consume."""
+    return {
+        "schema_version": PERF_SCHEMA_VERSION,
+        "cycles": step_cost_estimate(compiled, batch, aw, ww, hw),
+        "batch": max(1, int(batch)),
+        "aw": aw,
+        "ww": ww,
+    }
 
 
 # --------------------------------------------------------------------------

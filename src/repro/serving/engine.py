@@ -27,6 +27,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from .. import obs
 from ..models.zoo import ModelBundle
 
 
@@ -161,6 +162,7 @@ class DecodeWave:
     def _prefill(self) -> None:
         if not self.reqs:
             raise ValueError("DecodeWave needs at least one request")
+        _t0 = obs.now() if obs.ENABLED else 0
         engine = self.engine
         prompts = [list(r.prompt) + o for r, o in zip(self.reqs, self.outs)]
         self.max_new = max(r.max_new - len(o)
@@ -171,6 +173,13 @@ class DecodeWave:
         self.rng = jax.random.PRNGKey(0)
         self.cur = engine._sample(logits[:, -1], self.rng)
         self.steps = 0
+        if obs.ENABLED:
+            obs.complete("DecodeWave", "prefill", _t0,
+                         size=len(self.reqs), prefill_tokens=plen)
+            m = obs.metrics()
+            m.counter("engine.prefills").inc()
+            m.gauge("engine.decode_occupancy").set(
+                len(self.reqs) / max(1, engine.batch_size))
 
     @property
     def done(self) -> bool:
@@ -189,9 +198,12 @@ class DecodeWave:
         return max(0, cap - len(self.reqs)) + finished
 
     def step(self) -> None:
+        _t0 = obs.now() if obs.ENABLED else 0
+        live = 0
         for i, (r, o) in enumerate(zip(self.reqs, self.outs)):
             if len(o) < r.max_new:
                 o.append(int(self.cur[i]))
+                live += 1
         self.steps += 1
         if self.done:
             return
@@ -199,6 +211,14 @@ class DecodeWave:
             self.engine.params, self.cache, {"tokens": self.cur[:, None]})
         self.rng, sub = jax.random.split(self.rng)
         self.cur = self.engine._sample(logits[:, -1], sub)
+        if obs.ENABLED:
+            obs.complete("DecodeWave", "decode_step", _t0,
+                         step=self.steps, size=len(self.reqs), live=live)
+            m = obs.metrics()
+            m.counter("engine.decode_steps").inc()
+            # occupancy = rows still generating / engine batch capacity
+            m.gauge("engine.decode_occupancy").set(
+                live / max(1, self.engine.batch_size))
 
     def pop_done(self) -> Dict[int, List[int]]:
         """Harvest requests that reached their ``max_new`` and were not
@@ -222,6 +242,10 @@ class DecodeWave:
                              "(temperature == 0)")
         if not reqs:
             return self.pop_done()            # nothing to join: no re-prefill
+        if obs.ENABLED:
+            obs.instant("DecodeWave", "admit", joined=len(reqs),
+                        size=len(self.reqs))
+            obs.metrics().counter("engine.admissions").inc(len(reqs))
         finished: Dict[int, List[int]] = {}
         keep_r, keep_o = [], []
         for r, o in zip(self.reqs, self.outs):

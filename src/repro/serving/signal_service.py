@@ -56,6 +56,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from .. import obs
 from ..signal.graph import CompiledSignalGraph, FuseLevel, SignalGraph
 from ..signal.streaming import (StreamState, StreamStructure, commit_frames,
                                 drain_state, finalize_piece, push_chunk,
@@ -193,11 +194,37 @@ class SignalService:
     def compiled_for(self, name: str, length: int) -> CompiledSignalGraph:
         key = (name, length)
         if key not in self._compiled:
+            _t0 = obs.now() if obs.ENABLED else 0
             graph = self._graphs[name].graph
             self._compiled[key] = graph.compile(length, fuse=self.fuse,
                                                 backend=self.backend)
             self.stats["compiles"] += 1
+            if obs.ENABLED:
+                self._record_lowering(name, length, self._compiled[key], _t0)
         return self._compiled[key]
+
+    def _record_lowering(self, name: str, length: int, compiled,
+                         t0_ns: int) -> None:
+        """Trace one bucket compile and accumulate the backend's
+        fused-vs-emulated route counts (``lowering_report``) into the
+        metrics registry — the runtime side of ``signal_graph_report``'s
+        static pass accounting."""
+        args = {"graph": name, "bucket": length,
+                "backend": self.backend.name}
+        lowering = getattr(compiled, "lowering_report", None)
+        if lowering is not None:
+            rep = lowering()
+            m = obs.metrics()
+            pre = f"backend.{rep['name']}"
+            m.counter(f"{pre}.fabric_fused").inc(
+                rep["fabric_passes"]["fused"])
+            m.counter(f"{pre}.fabric_emulated").inc(
+                rep["fabric_passes"]["emulated"])
+            for route, n in rep["array_passes"].items():
+                m.counter(f"{pre}.array_{route}").inc(n)
+            args.update(fabric=rep["fabric_passes"],
+                        array=rep["array_passes"])
+        obs.complete("SignalService", "compile", t0_ns, **args)
 
     # -- length bucketing ---------------------------------------------------
     def bucket_for(self, name: str, length: int) -> Optional[int]:
@@ -265,6 +292,11 @@ class SignalService:
         req._group_key = None          # (re-)keyed by THIS service's buckets
         self.group_key(req)
         self._queue.append(req)
+        if obs.ENABLED:
+            req._admit_ns = obs.now()
+            m = obs.metrics()
+            m.counter("service.submitted").inc()
+            m.gauge("service.queue_depth").set(len(self._queue))
 
     def pending(self) -> int:
         return len(self._queue)
@@ -322,6 +354,7 @@ class SignalService:
         """
         if not self._queue:
             return {}
+        _t0 = obs.now() if obs.ENABLED else 0
         wave = (pick or self._fifo_pick)(list(self._queue))
         if not wave:
             return {}
@@ -337,17 +370,30 @@ class SignalService:
             stack[i, : lens[i]] = r.samples
         batch = jnp.asarray(stack)
         key = (name, length)
+        if obs.ENABLED:
+            # pad waste: the fraction of the stacked (batch, bucket)
+            # array that is zero padding past each row's true length.
+            pad_waste = 1.0 - sum(lens) / float(len(wave) * length)
+            obs.complete("SignalService", "bucket_fill", _t0,
+                         graph=name, bucket=length, batch=len(wave),
+                         pad_waste=round(pad_waste, 4))
+            obs.metrics().histogram("service.pad_waste").record(pad_waste)
+            _t1 = obs.now()
+        else:
+            _t1 = _t0
 
         if padded or (reg.struct is not None
                       and reg.struct.framer is not None
                       and self.bucket_for(name, length) is not None):
             out = self._run_masked(key, compiled, reg, batch, lens)
             self.stats["bucketed"] += 1
+            masked = True
         else:
             if key not in self._jitted:
                 self._jitted[key] = compiled.jit()
             out = _to_host(self._jitted[key](batch, reg.params))
             self.stats["exact"] += 1
+            masked = False
 
         self.stats["batches"] += 1
         self.est_cycles += self.group_cost(key, batch=len(wave))
@@ -356,7 +402,33 @@ class SignalService:
             r.done = True
             results[r.rid] = self._request_result(compiled, reg, out, i,
                                                   lens[i])
+        if obs.ENABLED:
+            obs.complete(f"graph/{name}", "core_call", _t1,
+                         bucket=length, batch=len(wave), masked=masked)
+            self._record_emits(name, compiled, wave)
         return results
+
+    def _record_emits(self, name: str, compiled, wave) -> None:
+        """Admission->emit latency per request, attributed per graph and
+        (for multi-output SigPrograms) per output — all of a request's
+        outputs emit on the same step, so the per-output series differ
+        only once per-output deadlines/taps emit at different times
+        (the streaming path)."""
+        m = obs.metrics()
+        m.gauge("service.queue_depth").set(len(self._queue))
+        t_now = obs.now()
+        outs = [compiled.output] if compiled.single \
+            else list(compiled.outputs)
+        for r in wave:
+            t_adm = getattr(r, "_admit_ns", None)
+            if t_adm is None:
+                continue
+            lat_us = (t_now - t_adm) / 1e3
+            m.histogram(f"service.latency_us.{name}").record(lat_us)
+            if len(outs) > 1:
+                for o in outs:
+                    m.histogram(
+                        f"service.latency_us.{name}/{o}").record(lat_us)
 
     def _request_result(self, compiled, reg, out, i, true_len):
         """Row ``i``'s result, trimmed back to the request's true
@@ -444,6 +516,7 @@ class SignalService:
         core calls issued (the bench asserts <= 1 per tick per graph for
         lock-stepped sessions)."""
         calls = 0
+        _t0 = obs.now() if obs.ENABLED else 0
         for name, sessions in self._sessions.items():
             reg = self._graphs[name]
             struct = reg.struct
@@ -459,10 +532,16 @@ class SignalService:
                 gkey = (spec.n_frames, block.shape, block.dtype.name)
                 groups.setdefault(gkey, []).append((sess, spec, block))
             for (n_frames, _, _), members in groups.items():
+                _tc = obs.now() if obs.ENABLED else 0
                 stacked = jnp.stack([b for _, _, b in members])
                 res = struct.core_jit(n_frames, self.fuse, self.backend)(
                     stacked, reg.params)
                 calls += 1
+                if obs.ENABLED:
+                    obs.complete(f"graph/{name}", "stream_core", _tc,
+                                 n_frames=n_frames, width=len(members))
+                    obs.metrics().histogram(
+                        "service.stream_stack_width").record(len(members))
                 self.est_cycles += self._stream_cost(name, n_frames) \
                     * len(members)
                 for i, (sess, spec, block) in enumerate(members):
@@ -488,6 +567,10 @@ class SignalService:
         if calls:
             self.stats["core_calls"] += calls
         self.stats["stream_ticks"] += 1
+        if obs.ENABLED:
+            obs.complete("Streaming", "stream_tick", _t0,
+                         core_calls=calls,
+                         sessions=self.stream_sessions())
         return calls
 
     def _stream_cost(self, name: str, n_frames: int) -> int:
@@ -840,6 +923,7 @@ class CoScheduler:
                             * max(1, self._wave.prefill_tokens))
 
     def tick(self) -> None:
+        _t0 = obs.now() if obs.ENABLED else 0
         plan = self.policy.plan(self)
 
         # LLM side (gated by the plan — a DSP-only tick must not spend
@@ -880,6 +964,30 @@ class CoScheduler:
             self.signals.stream_step()
         self.dsp_cycles += self.signals.est_cycles - before
         self.ticks += 1
+        if obs.ENABLED:
+            self._record_tick(plan, _t0)
+
+    def _record_tick(self, plan: TickPlan, t0_ns: int) -> None:
+        """One tick's trace footprint: the tick span (with the policy's
+        decisions), the DSP/LLM occupancy counter track, and per-backend
+        plan-cache hit-rate tracks."""
+        obs.complete("CoScheduler", "tick", t0_ns,
+                     tick=self.ticks, policy=self.policy.name,
+                     run_llm=plan.run_llm, run_dsp=plan.run_dsp,
+                     run_streams=plan.run_streams, admit=plan.admit)
+        occ = self.occupancy()
+        tr = obs.tracer()
+        tr.counter("occupancy", {"dsp_cycles": self.dsp_cycles,
+                                 "llm_cycles": self.llm_cycles})
+        tr.counter("dsp_share", {"share": occ["dsp_share"]})
+        m = obs.metrics()
+        m.gauge("sched.dsp_share").set(occ["dsp_share"])
+        m.counter("sched.ticks").inc()
+        from ..signal import plan_cache_info
+        for label, b in plan_cache_info()["by_backend"].items():
+            total = b["hits"] + b["misses"]
+            tr.counter(f"plan_cache/{label}",
+                       {"hit_rate": b["hits"] / total if total else 0.0})
 
     def run(self) -> Tuple[Dict[int, List[int]], Dict[int, np.ndarray]]:
         while not self.idle:

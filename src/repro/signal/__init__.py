@@ -12,6 +12,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from .. import obs as _obs
 from ..core import signal_mapping as _sm
 from ..core.signal_mapping import (complex_to_interleaved,
                                    interleaved_to_complex,
@@ -79,13 +80,21 @@ def plan_cache_get(kind: str, args: tuple, builder, backend=None):
     key = (backend, kind, *tuple(args))
     stats = _stats_bucket(backend)
     hit = _PLAN_CACHE.pop(key, None)
-    if hit is None:
+    was_hit = hit is not None
+    if not was_hit:
         stats["misses"] += 1
         hit = builder()
         while len(_PLAN_CACHE) >= _PLAN_CACHE_MAX:      # LRU eviction
             _PLAN_CACHE.pop(next(iter(_PLAN_CACHE)))
     else:
         stats["hits"] += 1
+    if _obs.ENABLED:
+        # mirror the per-backend hit/miss tally into the metrics
+        # registry so the post-run report and the trajectory entries
+        # see it without reaching into this module's private state.
+        label = _FUNCTIONAL if backend is None else str(backend)
+        _obs.metrics().counter(
+            f"plan_cache.{label}.{'hits' if was_hit else 'misses'}").inc()
     _PLAN_CACHE[key] = hit          # (re-)insert as most recently used
     return hit
 

@@ -96,6 +96,10 @@ __all__ = ["SignalGraph", "CompiledSignalGraph", "SigType", "FuseLevel",
            "GatherStep", "EinsumStep", "LambdaStep",
            "biquad_apply", "overlap_add", "mel_filterbank_matrix"]
 
+# backends already warned about for the value_and_grad reference
+# re-bind (one warning per backend name per process; tests clear it).
+_REBIND_WARNED: set = set()
+
 
 class FuseLevel(enum.IntEnum):
     """Fusion level of the graph compiler (see the module docstring).
@@ -444,26 +448,44 @@ def mel_filterbank_matrix(bins: int, sr: float, n_mels: int,
 # --------------------------------------------------------------------------
 # Small plan builders
 # --------------------------------------------------------------------------
+# All go through the process plan cache (``plan_cache_get``, backend
+# key ``None``): plans are static numpy artifacts fully determined by
+# their arguments and treated as read-only everywhere (``tile_plan``
+# derives, never mutates), so a service compiling many buckets of the
+# same graph — or many graphs sharing a frame size — rebuilds each
+# distinct plan once.  This is also what the plan-cache hit-rate
+# instrumentation on the serving path observes.
+
+def _cached_plan(kind: str, args: tuple, builder):
+    from . import plan_cache_get
+    return plan_cache_get(kind, args, builder)
+
 
 def _frame_plan(length: int, frame: int, hop: int, width: int) -> ShufflePlan:
-    n_frames = 1 + (length - frame) // hop
-    idx = (np.arange(n_frames)[:, None] * hop
-           + np.arange(frame)[None, :]).astype(np.int32)
-    return ShufflePlan(idx.ravel(), np.zeros(idx.size, np.int64), width)
+    def build():
+        n_frames = 1 + (length - frame) // hop
+        idx = (np.arange(n_frames)[:, None] * hop
+               + np.arange(frame)[None, :]).astype(np.int32)
+        return ShufflePlan(idx.ravel(), np.zeros(idx.size, np.int64), width)
+    return _cached_plan("graph_frame", (length, frame, hop, width), build)
 
 
 def _interleave_plan(n: int, width: int) -> ShufflePlan:
     """Real length-n -> interleaved complex [x0, 0, x1, 0, ...]: the zero
     imaginary parts are DPU pad constants."""
-    gi = np.full(2 * n, PAD, np.int32)
-    gi[0::2] = np.arange(n)
-    return ShufflePlan(gi, np.zeros(2 * n, np.int64), width)
+    def build():
+        gi = np.full(2 * n, PAD, np.int32)
+        gi[0::2] = np.arange(n)
+        return ShufflePlan(gi, np.zeros(2 * n, np.int64), width)
+    return _cached_plan("graph_interleave", (n, width), build)
 
 
 def _deinterleave_plan(n: int, width: int) -> ShufflePlan:
     """Interleaved complex -> the n real parts."""
-    gi = (2 * np.arange(n)).astype(np.int32)
-    return ShufflePlan(gi, np.zeros(n, np.int64), width)
+    def build():
+        gi = (2 * np.arange(n)).astype(np.int32)
+        return ShufflePlan(gi, np.zeros(n, np.int64), width)
+    return _cached_plan("graph_deinterleave", (n, width), build)
 
 
 def _fft_steps(name: str, n: int, frames: int, fused: bool, width: int,
@@ -471,7 +493,9 @@ def _fft_steps(name: str, n: int, frames: int, fused: bool, width: int,
     """Batched radix-2 FFT over ``frames`` interleaved length-2n rows
     (flat last axis of size frames*2n).  ``pre_diag`` is an elementwise
     scale applied to the *input* (sunk through the first gather)."""
-    plan = _sm.make_fft_plan(n, fuse_adjacent=fused, width=width)
+    plan = _cached_plan(
+        "fft", (n, fused, width),
+        lambda: _sm.make_fft_plan(n, fuse_adjacent=fused, width=width))
     steps: List[Step] = []
 
     def _gather(tag, p, diag=None):
@@ -973,7 +997,9 @@ def _lower_stage(st: Stage, in_types: List[SigType], fuse: bool,
         taps, phases = h.shape[0], p["phases"]
         n = t.suffix[-1]
         if phases > 1:
-            plan = _sm.make_fir_phase_plan(n, taps, phases, width)
+            plan = _cached_plan(
+                "fir_phase", (n, taps, phases, width),
+                lambda: _sm.make_fir_phase_plan(n, taps, phases, width))
             W = _sm.fir_phase_weights(h, phases)
             steps = [
                 GatherStep(f"{st.name}.window", plan.window),
@@ -981,7 +1007,9 @@ def _lower_stage(st: Stage, in_types: List[SigType], fuse: bool,
                            reshape_in=(n // phases, plan.win_len), out_rank=2,
                            rows=n // phases, cin=plan.win_len, cout=phases)]
         else:
-            plan = _sm.make_fir_plan(n, taps, width)
+            plan = _cached_plan(
+                "fir", (n, taps, width),
+                lambda: _sm.make_fir_plan(n, taps, width))
             steps = [
                 GatherStep(f"{st.name}.im2col", plan.im2col),
                 EinsumStep(f"{st.name}.taps", "...nt,t->...n",
@@ -1016,7 +1044,9 @@ def _lower_stage(st: Stage, in_types: List[SigType], fuse: bool,
         _require_real(st, t)
         _require_flat(st, t)
         rows, n = _rows_last(t)
-        plan = _sm.make_dwt_plan(n, p["wavelet"], width)
+        plan = _cached_plan(
+            "dwt", (n, p["wavelet"], width),
+            lambda: _sm.make_dwt_plan(n, p["wavelet"], width))
         fb = _sm.dwt_filters(p["wavelet"])
         steps = [
             GatherStep(f"{st.name}.window", tile_plan(plan.window, rows, n)),
@@ -1201,11 +1231,25 @@ class CompiledSignalGraph:
         Differentiation always runs the ``reference`` lowering: Pallas
         kernels define no reverse-mode transpose, so a program bound to
         a non-differentiable backend (``backend.differentiable`` False)
-        is transparently re-bound for the gradient path — train on the
-        reference program, serve on the array backend."""
+        is re-bound for the gradient path — train on the reference
+        program, serve on the array backend.  The re-bind warns once
+        per backend (it silently changes which kernels execute) and
+        bumps the ``graph.backend_rebind`` metrics counter."""
         names = None if wrt is None else tuple(wrt)
-        run_graph = self if self.backend.differentiable \
-            else self.with_backend("reference")
+        if self.backend.differentiable:
+            run_graph = self
+        else:
+            from .. import obs
+            obs.get_registry().counter("graph.backend_rebind").inc()
+            if self.backend.name not in _REBIND_WARNED:
+                _REBIND_WARNED.add(self.backend.name)
+                warnings.warn(
+                    f"value_and_grad: backend {self.backend.name!r} is "
+                    f"not differentiable; re-binding this graph to the "
+                    f"'reference' backend for the gradient path (trained "
+                    f"parameters still serve on {self.backend.name!r})",
+                    UserWarning, stacklevel=2)
+            run_graph = self.with_backend("reference")
 
         def split(params):
             params = dict(params) if isinstance(params, dict) else \

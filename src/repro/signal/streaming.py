@@ -72,6 +72,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from .. import obs
 from .graph import (CompiledSignalGraph, FuseLevel, SignalGraph,
                     biquad_apply, overlap_add)
 
@@ -559,6 +560,9 @@ def push_chunk(struct: StreamStructure, state: StreamState, chunk,
                                                       axis=-1)
     state = dataclasses.replace(state, pre=pre, buf=buf,
                                 total=state.total + x.shape[-1])
+    if obs.ENABLED:
+        obs.metrics().histogram(
+            "streaming.chunk_samples").record(x.shape[-1])
     return state, (None if struct.single else taps)
 
 
@@ -587,6 +591,9 @@ def ready_spec(struct: StreamStructure, state: StreamState,
 
 def take_block(state: StreamState, spec: BlockSpec) -> jax.Array:
     """The ring-buffer slice feeding one core execution."""
+    if obs.ENABLED:
+        obs.metrics().histogram(
+            "streaming.block_frames").record(spec.count)
     return state.buf[..., spec.lo:spec.hi]
 
 

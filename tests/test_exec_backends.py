@@ -387,9 +387,12 @@ def test_plan_cache_backend_in_key_no_cross_hits():
     g.compile(length, backend="pallas")
     info = plan_cache_info()["by_backend"]
     # the reference backend caches no lowering groups: nothing from the
-    # pallas compile may appear under any other backend key (a backend
-    # "leaking out of" the key would show up here) ...
-    assert set(info) == {"pallas"}
+    # pallas compile may appear under any other *backend* key (a backend
+    # "leaking out of" the key would show up here).  The graph
+    # compiler's backend-agnostic shuffle plans (frame/fft/interleave)
+    # land in the backend-less "functional" bucket by design.
+    assert "pallas" in info
+    assert set(info) <= {"pallas", "functional"}
     # ... and functional-API plans stay in their own backend-less bucket.
     from repro.signal import fft
     fft(jnp.zeros(16, jnp.complex64))

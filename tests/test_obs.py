@@ -1,0 +1,329 @@
+"""SigTrace observability: tracer, metrics registry, report, hooks.
+
+Covers the PR-6 acceptance invariants:
+
+  * exported Chrome Trace JSON parses, every ``B`` has a matching ``E``
+    (or spans are ``X`` complete events), timestamps are monotonic per
+    ``tid`` in record order for non-``X`` phases, counters non-negative;
+  * histogram p50/p95/p99 on a known distribution;
+  * disabled mode records no events and allocates nothing measurable on
+    the hook fast path;
+  * an end-to-end traced serving run contains the bucket-fill /
+    core-call / DecodeWave spans and the occupancy + plan-cache counter
+    tracks, and the rendered report's percentiles match the histograms
+    they came from;
+  * ``value_and_grad`` on a non-differentiable backend warns once and
+    bumps the ``graph.backend_rebind`` counter.
+"""
+
+import json
+import tracemalloc
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import obs
+from repro.obs.metrics import Histogram, percentile
+from repro.obs.trace import TraceError, Tracer, validate_trace
+
+
+@pytest.fixture(autouse=True)
+def _clean_obs():
+    """Every test starts and ends with instrumentation off and empty."""
+    obs.reset()
+    yield
+    obs.reset()
+
+
+def _graph(frame=64, hop=32):
+    from repro.signal import SignalGraph
+
+    g = SignalGraph("obs_fig9")
+    g.stft("spec", frame=frame, hop=hop)
+    g.dnn("mask", "spec", fn=lambda p, z: jax.nn.sigmoid(jnp.abs(z) - 1.0))
+    g.mul("enh", "spec", "mask")
+    g.istft("out", "enh", hop=hop)
+    g.outputs("out")
+    return g
+
+
+# --------------------------------------------------------------------------
+# Tracer
+# --------------------------------------------------------------------------
+
+def test_trace_export_parses_and_validates(tmp_path):
+    tr = Tracer()
+    with tr.span("SignalService", "tick", {"n": 1}):
+        with tr.span("graph/fig9", "core_call"):
+            pass
+    tr.begin("DecodeWave", "prefill")
+    tr.end("DecodeWave")
+    tr.instant("SignalService", "admit", {"rid": 7})
+    tr.counter("occupancy", {"dsp_cycles": 10, "llm_cycles": 20})
+    path = tmp_path / "trace.json"
+    tr.export(str(path))
+
+    doc = json.loads(path.read_text())
+    assert isinstance(doc["traceEvents"], list)
+    stats = validate_trace(str(path))
+    assert stats["phases"]["X"] == 2
+    assert stats["phases"]["B"] == 1 and stats["phases"]["E"] == 1
+    assert stats["phases"]["i"] == 1 and stats["phases"]["C"] == 1
+    # lanes are named via metadata events
+    names = {ev["args"]["name"] for ev in doc["traceEvents"]
+             if ev["ph"] == "M" and ev["name"] == "thread_name"}
+    assert {"SignalService", "graph/fig9", "DecodeWave",
+            "counters"} <= names
+
+
+def test_validate_rejects_unbalanced_and_negative():
+    with pytest.raises(TraceError):
+        validate_trace({"traceEvents": [
+            {"ph": "B", "pid": 1, "tid": 1, "ts": 0.0, "name": "tick"}]})
+    with pytest.raises(TraceError):
+        validate_trace({"traceEvents": [
+            {"ph": "E", "pid": 1, "tid": 1, "ts": 0.0, "name": "tick"}]})
+    with pytest.raises(TraceError):
+        validate_trace({"traceEvents": [
+            {"ph": "i", "pid": 1, "tid": 1, "ts": -5.0, "name": "x"}]})
+    with pytest.raises(TraceError):
+        validate_trace({"traceEvents": [
+            {"ph": "C", "pid": 1, "tid": 1, "ts": 0.0, "name": "occ",
+             "args": {"v": -1.0}}]})
+    with pytest.raises(TraceError):
+        validate_trace({"traceEvents": [
+            {"ph": "i", "pid": 1, "tid": 3, "ts": 9.0, "name": "a"},
+            {"ph": "i", "pid": 1, "tid": 3, "ts": 4.0, "name": "b"}]})
+
+
+def test_tracer_timestamps_monotonic_per_tid():
+    tr = Tracer()
+    for i in range(50):
+        tr.instant("lane_a", f"e{i}")
+        tr.counter("c", {"v": float(i)})
+    assert validate_trace(tr.to_dict())["events"] == 100
+
+
+def test_end_without_begin_raises():
+    tr = Tracer()
+    with pytest.raises(TraceError):
+        tr.end("lane")
+
+
+# --------------------------------------------------------------------------
+# Metrics
+# --------------------------------------------------------------------------
+
+def test_histogram_percentiles_known_distribution():
+    h = Histogram()
+    for v in range(1, 101):          # 1..100, nearest-rank percentiles
+        h.record(float(v))
+    assert h.percentile(0.50) == 50.0
+    assert h.percentile(0.95) == 95.0
+    assert h.percentile(0.99) == 99.0
+    s = h.summary()
+    assert s["count"] == 100 and s["min"] == 1.0 and s["max"] == 100.0
+    assert s["mean"] == pytest.approx(50.5)
+    assert percentile([1.0, 2.0, 3.0], 0.50) == 2.0
+
+
+def test_histogram_downsample_keeps_exact_count_and_extremes():
+    h = Histogram(max_samples=64)
+    for v in range(1, 1001):
+        h.record(float(v))
+    s = h.summary()
+    assert s["count"] == 1000 and s["min"] == 1.0 and s["max"] == 1000.0
+    assert 300.0 <= s["p50"] <= 700.0     # approximate after downsample
+
+
+def test_registry_counters_gauges():
+    reg = obs.get_registry()
+    reg.counter("a").inc()
+    reg.counter("a").inc(4)
+    reg.gauge("g").set(2.5)
+    snap = reg.snapshot()
+    assert snap["counters"]["a"] == 5
+    assert snap["gauges"]["g"] == 2.5
+    reg.reset()
+    assert reg.snapshot()["counters"] == {}
+
+
+# --------------------------------------------------------------------------
+# Zero-cost-when-off
+# --------------------------------------------------------------------------
+
+def test_disabled_mode_records_nothing():
+    from repro.serving import SignalService, SignalRequest
+
+    assert not obs.ENABLED
+    svc = SignalService(batch_size=2)
+    svc.register("fig9", _graph())
+    rng = np.random.default_rng(0)
+    for rid in range(3):
+        svc.submit(SignalRequest(
+            rid=rid, graph="fig9",
+            samples=rng.standard_normal(200).astype(np.float32)))
+    while svc.pending():
+        svc.step()
+    assert obs.get_tracer().events() == []
+    assert obs.get_registry().snapshot()["counters"] == {}
+
+
+def test_disabled_hook_allocates_nothing():
+    # the guard pattern used at every instrumentation site
+    def hook():
+        _t0 = obs.now() if obs.ENABLED else 0
+        return _t0
+
+    hook()                           # warm up
+    tracemalloc.start()
+    for _ in range(1000):
+        hook()
+    _, peak = tracemalloc.get_traced_memory()
+    tracemalloc.stop()
+    assert peak < 4096               # no per-call allocation
+
+
+# --------------------------------------------------------------------------
+# End-to-end: traced serving run
+# --------------------------------------------------------------------------
+
+def test_traced_serving_run_has_expected_lanes(tmp_path):
+    from repro.serving import SignalService, SignalRequest
+
+    obs.enable()
+    svc = SignalService(batch_size=2, block_frames=2)
+    svc.register("fig9", _graph())
+    rng = np.random.default_rng(1)
+    for rid in range(4):
+        svc.submit(SignalRequest(
+            rid=rid, graph="fig9",
+            samples=rng.standard_normal(
+                int(rng.integers(100, 400))).astype(np.float32)))
+    while svc.pending():
+        svc.step()
+    s = svc.open_stream("fig9")
+    s.feed(jnp.asarray(rng.standard_normal(256).astype(np.float32)))
+    svc.stream_step()
+    s.close()
+
+    path = str(tmp_path / "svc_trace.json")
+    obs.get_tracer().export(path)
+    stats = validate_trace(path)
+    doc = json.loads(open(path).read())
+    names = {(ev["tid"], ev["name"]) for ev in doc["traceEvents"]
+             if ev["ph"] == "X"}
+    lanes = {ev["args"]["name"]: ev["tid"] for ev in doc["traceEvents"]
+             if ev["ph"] == "M" and ev["name"] == "thread_name"}
+    assert (lanes["SignalService"], "bucket_fill") in names
+    assert (lanes["graph/fig9"], "core_call") in names
+    assert (lanes["Streaming"], "stream_tick") in names
+    assert stats["phases"]["X"] >= 4
+
+    # metrics side: latency histogram + plan-cache counters were fed
+    snap = obs.get_registry().snapshot()
+    assert snap["histograms"]["service.latency_us.fig9"]["count"] == 4
+    assert any(k.startswith("plan_cache.") for k in snap["counters"])
+
+
+def test_traced_coscheduler_tick_counters():
+    from repro.configs import get_config
+    from repro.models.zoo import get_model
+    from repro.serving import (CoScheduler, Request, SignalRequest,
+                               SignalService, ServingEngine)
+
+    obs.enable()
+    cfg = get_config("starcoder2-3b").reduced(
+        n_layers=1, d_model=16, n_heads=2, d_ff=32, vocab=64)
+    bundle = get_model(cfg)
+    eng = ServingEngine(bundle, batch_size=2)
+    eng.load(bundle.init(jax.random.PRNGKey(0)))
+    svc = SignalService(batch_size=2)
+    svc.register("fig9", _graph())
+    sched = CoScheduler(eng, svc)
+    rng = np.random.default_rng(2)
+    sched.submit_signal(SignalRequest(
+        rid=0, graph="fig9",
+        samples=rng.standard_normal(200).astype(np.float32)))
+    sched.submit_llm(Request(rid=1, prompt=[1, 2, 3], max_new=2))
+    while not sched.idle:
+        sched.tick()
+
+    doc = obs.get_tracer().to_dict()
+    counter_names = {ev["name"] for ev in doc["traceEvents"]
+                     if ev["ph"] == "C"}
+    assert "occupancy" in counter_names
+    assert any(n.startswith("plan_cache/") for n in counter_names)
+    x_names = {ev["name"] for ev in doc["traceEvents"] if ev["ph"] == "X"}
+    assert "tick" in x_names and "prefill" in x_names
+    assert "decode_step" in x_names
+    validate_trace(doc)
+    snap = obs.get_registry().snapshot()
+    assert snap["counters"]["engine.prefills"] >= 1
+    assert snap["counters"]["sched.ticks"] == sched.ticks
+
+
+# --------------------------------------------------------------------------
+# Report
+# --------------------------------------------------------------------------
+
+def test_report_percentiles_match_histograms():
+    reg = obs.get_registry()
+    h = reg.histogram("service.latency_us.fig9")
+    for v in range(1, 101):
+        h.record(float(v))
+    ho = reg.histogram("service.latency_us.fig9/out")
+    for v in range(1, 11):
+        ho.record(float(v))
+    rep = obs.build_report()
+    entry = rep["latency_us"]["fig9"]
+    assert entry["p50"] == h.percentile(0.50)
+    assert entry["p95"] == h.percentile(0.95)
+    assert entry["outputs"]["out"]["p50"] == ho.percentile(0.50)
+    assert rep["schema_version"] == obs.REPORT_SCHEMA_VERSION
+    text = obs.render_report(rep)
+    assert "fig9" in text and "p95" in text
+
+
+def test_report_backend_routes_and_counters():
+    reg = obs.get_registry()
+    reg.counter("backend.reference.fabric_emulated").inc(3)
+    reg.counter("backend.pallas.fabric_fused").inc(2)
+    rep = obs.build_report()
+    assert rep["backend_routes"]["reference"]["fabric_emulated"] == 3
+    assert rep["backend_routes"]["pallas"]["fabric_fused"] == 2
+    assert "reference" in obs.render_report(rep)
+
+
+# --------------------------------------------------------------------------
+# value_and_grad rebind warning
+# --------------------------------------------------------------------------
+
+def test_value_and_grad_rebind_warns_once_and_counts():
+    import repro.signal.graph as graph_mod
+    from repro.signal import SignalGraph
+
+    graph_mod._REBIND_WARNED.clear()
+    g = SignalGraph("rebind")
+    g.fir("front", "input", taps=np.array([1.0, 0.0], np.float32))
+    g.outputs("front")
+    c = g.compile(64, backend="pallas")
+    assert not c.backend.differentiable
+
+    def loss(outs, target):
+        return jnp.mean((outs["front"] - target) ** 2)
+
+    x = jnp.zeros((1, 64), jnp.float32)
+    params = c.init_params()
+    with pytest.warns(UserWarning, match="pallas.*reference"):
+        vag = c.value_and_grad(loss, wrt=("front",))
+        vag(params, x, jnp.zeros_like(x))
+    # one-time: a second build must not warn again
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")
+        c.value_and_grad(loss, wrt=("front",))
+    assert obs.get_registry().snapshot()[
+        "counters"]["graph.backend_rebind"] >= 1

@@ -173,6 +173,13 @@ def test_fig9_fused_fewer_fabric_passes():
     assert rf2["macs"] == rf1["macs"] == ru["macs"] > 0
     assert rf2["fabric_passes"] == 2
     assert rf2["total"] > 0 and rf2["time_s"] > 0
+    # the report shape is versioned so BENCH_PR*.json entries stay
+    # comparable across PRs (benchmarks/trajectory.py)
+    from repro.core.perf_model import PERF_SCHEMA_VERSION, step_cost_report
+    assert rf2["schema_version"] == PERF_SCHEMA_VERSION
+    sc = step_cost_report(v2, batch=2)
+    assert sc["schema_version"] == PERF_SCHEMA_VERSION
+    assert sc["cycles"] > 0 and sc["batch"] == 2
     # attribution: the report accounts for every fold, and a folded word
     # is moved to the lock-step stream-in/out path, not dropped.
     assert rf2["folded_passes"] == 16 == rf2["streamed_passes"]
