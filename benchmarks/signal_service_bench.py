@@ -12,7 +12,12 @@ requests against one :class:`CoScheduler` per policy, measuring
     holds its target);
   * streaming sessions: N concurrent connections fed in lock-step, with
     the jitted-core-calls-per-tick ratio (<= 1 for same-graph sessions —
-    the batched-chunk-step acceptance number).
+    the batched-chunk-step acceptance number);
+  * with ``--mesh 1,8``: the SigMesh sweep — the same drain through an
+    unsharded and an N-sharded service, each shard count in its own
+    subprocess with that many forced host devices, reporting p50/p95
+    wall-cycle latency, per-device occupancy, and the bitwise
+    sharded-vs-unsharded ``match`` flag (``--smoke`` asserts it).
 
 Output: one CSV block per section (like the other benches) and, with
 ``--json PATH``, a machine-readable summary.  With ``--trace PATH`` (or
@@ -42,7 +47,7 @@ import numpy as np
 FRAME, HOP, MAXLEN = 64, 32, 512
 POLICIES = ("round_robin", "latency_aware", "cost_balanced")
 DSP_TARGET = 0.5
-BENCH_SCHEMA_VERSION = 1
+BENCH_SCHEMA_VERSION = 2       # v2: optional "mesh_sweep" section
 
 
 def _graph():
@@ -178,6 +183,115 @@ def simulate_sessions(n_sessions: int, n_ticks: int,
     }
 
 
+def simulate_mesh(n_shards: int, n_requests: int = 24,
+                  n_sessions: int = 4, n_ticks: int = 8,
+                  seed: int = 2) -> Dict:
+    """SigMesh drain: the identical workload (bucketed one-shot waves +
+    lock-stepped stream sessions) through an unsharded service and an
+    ``n_shards``-sharded one.  Latency clock = ``wall_cycles`` (the max
+    per-device share per execution — the clock sharding improves; the
+    offered-work clock ``est_cycles`` is invariant).  ``match`` is the
+    bitwise sharded-vs-unsharded comparison of every result."""
+    from repro.serving import SignalMesh, SignalRequest, SignalService
+
+    rng = np.random.default_rng(seed)
+    sigs = [rng.standard_normal(int(n)).astype(np.float32)
+            for n in rng.integers(FRAME, MAXLEN + 1, size=n_requests)]
+    chunk = 4 * HOP
+    waves = [rng.standard_normal(n_ticks * chunk).astype(np.float32)
+             for _ in range(n_sessions)]
+
+    def drain(mesh):
+        svc = SignalService(batch_size=8, block_frames=4, mesh=mesh)
+        svc.register("fig9", _graph())
+        lats: List[int] = []
+        res: Dict[int, Dict] = {}
+        for lo in range(0, n_requests, 8):
+            for i, s in enumerate(sigs[lo:lo + 8]):
+                svc.submit(SignalRequest(rid=lo + i, graph="fig9",
+                                         samples=s))
+            while svc.pending():
+                before = svc.wall_cycles
+                res.update(svc.step())
+                lats.append(svc.wall_cycles - before)
+        sessions = [svc.open_stream("fig9") for _ in range(n_sessions)]
+        outs: List[List[np.ndarray]] = [[] for _ in sessions]
+        empty = np.zeros(0, np.float32)
+        for t in range(n_ticks):
+            for s, w in zip(sessions, waves):
+                s.feed(jnp.asarray(w[t * chunk:(t + 1) * chunk]))
+            before = svc.wall_cycles
+            svc.stream_step()
+            lats.append(svc.wall_cycles - before)
+            for o, s in zip(outs, sessions):
+                o.append(s.read().get("out", empty))
+        for o, s in zip(outs, sessions):
+            o.append(s.close().get("out", empty))
+        return (res, [np.concatenate(o, axis=-1) for o in outs],
+                lats, svc)
+
+    res0, outs0, _, _ = drain(None)
+    res1, outs1, lats, svc = drain(SignalMesh(n_shards))
+    match = (sorted(res0) == sorted(res1)
+             and all(np.array_equal(res0[i]["out"], res1[i]["out"])
+                     for i in res0)
+             and all(np.array_equal(a, b)
+                     for a, b in zip(outs0, outs1)))
+    lats.sort()
+    pct = (lambda p: float(lats[min(len(lats) - 1,
+                                    int(p * len(lats)))]) if lats else 0.0)
+    occ = svc.router.occupancy()
+    return {
+        "n_shards": n_shards,
+        "devices": len(jax.devices()),
+        "match": bool(match),
+        "p50_wall_cycles": pct(0.50),
+        "p95_wall_cycles": pct(0.95),
+        "wall_cycles": svc.wall_cycles,
+        "est_cycles": svc.est_cycles,
+        "busy_devices": sum(1 for c in occ["device_cycles"] if c),
+        "device_share": [round(s, 4) for s in occ["device_share"]],
+    }
+
+
+def run_mesh_sweep(shard_counts: List[int]) -> List[Dict]:
+    """One subprocess per shard count with that many *forced host
+    devices* (XLA_FLAGS must be set before jax imports, so the sweep
+    cannot run in this process).  Each subprocess runs
+    ``--mesh-inner N`` and prints its :func:`simulate_mesh` record as
+    the last stdout line."""
+    import subprocess
+
+    root = os.path.join(os.path.dirname(__file__), "..")
+    rows = []
+    for n in shard_counts:
+        env = dict(os.environ)
+        env["XLA_FLAGS"] = \
+            f"--xla_force_host_platform_device_count={max(1, n)}"
+        env["PYTHONPATH"] = os.path.join(root, "src")
+        env.setdefault("JAX_PLATFORMS", "cpu")
+        out = subprocess.run(
+            [sys.executable, "-m", "benchmarks.signal_service_bench",
+             "--mesh-inner", str(n)],
+            capture_output=True, text=True, timeout=600, env=env,
+            cwd=root)
+        if out.returncode != 0:
+            raise SystemExit(f"mesh sweep subprocess (n={n}) failed:\n"
+                             f"{out.stderr[-4000:]}")
+        rows.append(json.loads(out.stdout.strip().splitlines()[-1]))
+    return rows
+
+
+MESH_HEADER = ("n_shards,devices,match,p50_wall_cycles,p95_wall_cycles,"
+               "wall_cycles,est_cycles,busy_devices")
+
+
+def format_mesh_row(r: Dict) -> str:
+    return (f"{r['n_shards']},{r['devices']},{int(r['match'])},"
+            f"{r['p50_wall_cycles']:.0f},{r['p95_wall_cycles']:.0f},"
+            f"{r['wall_cycles']},{r['est_cycles']},{r['busy_devices']}")
+
+
 LOAD_HEADER = ("policy,dsp_per_tick,llm_per_tick,dsp_done,llm_done,"
                "p50_cycles,p95_cycles,dsp_share_loaded,dsp_share_final")
 
@@ -203,7 +317,18 @@ def main(argv=None) -> None:
     ap.add_argument("--trace", type=str, default=None,
                     help="run under SigTrace and export a Chrome trace "
                          "to this path (REPRO_TRACE=1|<path> also works)")
+    ap.add_argument("--mesh", type=str, default=None,
+                    help="comma-separated shard counts to sweep in "
+                         "forced-device subprocesses, e.g. --mesh 1,8 "
+                         "(--smoke defaults to 1,8)")
+    ap.add_argument("--mesh-inner", type=int, default=None,
+                    help=argparse.SUPPRESS)   # subprocess entry point
     args = ap.parse_args(argv)
+
+    if args.mesh_inner is not None:
+        # inside a run_mesh_sweep subprocess: one record, last line JSON
+        print(json.dumps(simulate_mesh(args.mesh_inner)))
+        return
 
     from repro import obs
     if args.trace:
@@ -246,6 +371,18 @@ def main(argv=None) -> None:
         raise SystemExit("FAIL: cost_balanced occupancy split drifted "
                          ">10% from target under load")
 
+    mesh_arg = args.mesh or ("1,8" if args.smoke else None)
+    mesh_rows: List[Dict] = []
+    if mesh_arg:
+        mesh_rows = run_mesh_sweep(
+            [int(n) for n in mesh_arg.split(",") if n.strip()])
+        print("\n" + MESH_HEADER)
+        for r in mesh_rows:
+            print(format_mesh_row(r))
+        if args.smoke and not all(r["match"] for r in mesh_rows):
+            raise SystemExit("FAIL: sharded drain is not bit-identical "
+                             "to the unsharded service")
+
     report = None
     if obs.ENABLED:
         # post-run observability artifacts: the latency/occupancy report
@@ -262,6 +399,8 @@ def main(argv=None) -> None:
         payload = {"schema_version": BENCH_SCHEMA_VERSION,
                    "load_sweep": load_rows, "streaming": sess,
                    "dsp_target": DSP_TARGET}
+        if mesh_rows:
+            payload["mesh_sweep"] = mesh_rows
         if report is not None:
             payload["report"] = report
         d = os.path.dirname(args.json)

@@ -310,6 +310,42 @@ def step_cost_estimate(compiled, batch: int = 1, aw: int = 16,
     return int(rep["total"]) * max(1, int(batch))
 
 
+def device_step_costs(per_item_cycles: int, batch: int,
+                      n_devices: int) -> List[int]:
+    """Per-device cycles of ONE data-parallel sharded execution of a
+    ``batch``-row wave: the serving mesh pads rows up to a multiple of
+    the shard count, so every device executes ``ceil(batch/n)`` rows
+    (pad rows compute like real rows — the array does not know they
+    will be thrown away).  ``per_item_cycles`` is the single-row cost
+    (:func:`step_cost_estimate` at batch=1).  This is what the
+    sharded ``SignalService`` charges its :class:`DeviceRouter` ledger
+    and what ``CoScheduler.occupancy()['per_device']`` reports."""
+    n = max(1, int(n_devices))
+    if batch <= 0:
+        return [0] * n
+    rows_per_device = math.ceil(batch / n)
+    return [int(per_item_cycles) * rows_per_device] * n
+
+
+def sharded_step_cost(per_item_cycles: int, batch: int,
+                      n_devices: int) -> int:
+    """Wall-clock cycles of a sharded execution: the max per-device
+    share (devices run concurrently).  Equals the unsharded cost at
+    ``n_devices=1``; the mesh bench's p50/p95 latencies tick on this
+    clock."""
+    return max(device_step_costs(per_item_cycles, batch, n_devices))
+
+
+def step_cost_estimate_per_device(compiled, batch: int = 1,
+                                  n_devices: int = 1, aw: int = 16,
+                                  ww: int = 16,
+                                  hw: SigDLAHW = SigDLAHW()) -> List[int]:
+    """Per-device extension of :func:`step_cost_estimate`: one
+    perf-model evaluation, split by the sharded row partition."""
+    per = step_cost_estimate(compiled, 1, aw, ww, hw)
+    return device_step_costs(per, batch, n_devices)
+
+
 def step_cost_report(compiled, batch: int = 1, aw: int = 16,
                      ww: int = 16, hw: SigDLAHW = SigDLAHW()) -> dict:
     """Structured form of :func:`step_cost_estimate` for tooling that

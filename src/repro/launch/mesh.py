@@ -19,3 +19,11 @@ def make_production_mesh(*, multi_pod: bool = False):
 def make_test_mesh(shape=(2, 2), axes=("data", "model")):
     """Small mesh for subprocess tests (forced host device count)."""
     return jax.make_mesh(shape, axes)
+
+
+def make_data_mesh(n_devices=None):
+    """1-D data-parallel mesh over the local devices — the serving
+    stack's mesh (`SignalMesh` shards bucket batches and stream-session
+    blocks over its single ``data`` axis)."""
+    n = int(n_devices) if n_devices else len(jax.devices())
+    return jax.make_mesh((n,), ("data",))

@@ -179,6 +179,18 @@ def mesh_axes_of(mesh) -> Dict[str, int]:
     return dict(zip(mesh.axis_names, mesh.devices.shape))
 
 
+def row_sharding(mesh, shape: Tuple[int, ...],
+                 batch_dim: int = 0) -> "jax.sharding.NamedSharding":
+    """NamedSharding splitting ``shape``'s batch axis over the mesh's
+    (pod, data) axes via :func:`batch_spec` — same degrade-to-replicate
+    rules as training batches.  The serving mesh
+    (:class:`repro.serving.signal_mesh.SignalMesh`) builds every bucket
+    batch's sharding through this."""
+    from jax.sharding import NamedSharding
+    spec = batch_spec(tuple(shape), mesh_axes_of(mesh), batch_dim)
+    return NamedSharding(mesh, spec)
+
+
 # --------------------------------------------------------------------------
 # Activation sharding constraints (§Perf iteration 4: with fsdp params the
 # SPMD partitioner may REPLICATE activations over the data axis instead of

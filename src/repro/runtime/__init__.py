@@ -1,3 +1,4 @@
-from .fault_tolerance import StepMonitor, TrainLoop
+from .fault_tolerance import (DeviceLoss, StepMonitor, StreamSupervisor,
+                              TrainLoop)
 
-__all__ = ["StepMonitor", "TrainLoop"]
+__all__ = ["StepMonitor", "TrainLoop", "StreamSupervisor", "DeviceLoss"]

@@ -120,3 +120,119 @@ class TrainLoop:
                 "history": history, "stop_step": step,
                 "stragglers": list(self.monitor.stragglers),
                 "preempted": self._preempted}
+
+
+# --------------------------------------------------------------------------
+# Serving-side fault tolerance: checkpointable stream supervision
+# --------------------------------------------------------------------------
+
+class DeviceLoss(Exception):
+    """Simulated loss of one mesh shard.  Raising this from a fail
+    injector makes :class:`StreamSupervisor` restore the last durable
+    checkpoint, drop the shard from the service's router, and replay —
+    the serving analogue of :class:`TrainLoop`'s node replacement."""
+
+    def __init__(self, device: int, msg: str = ""):
+        super().__init__(msg or f"device {device} lost")
+        self.device = device
+
+
+class StreamSupervisor:
+    """:class:`TrainLoop`'s retry/restore contract transplanted onto a
+    checkpointable stream service (duck-typed: anything with
+    ``checkpoint() / restore(ckpt) / stream_step() / session_by_sid(sid)``
+    and optionally ``drop_device(index)`` — i.e.
+    :class:`repro.serving.signal_service.SignalService`).
+
+    Exact contract, mirrored from the training side and tested in
+    ``tests/test_signal_mesh_faults.py``:
+
+    - every ``ckpt_every`` successful ticks the service state becomes the
+      durable checkpoint and the input journal is truncated;
+    - a tick failure rolls the service back to its pre-tick snapshot and
+      retries, up to ``max_retries`` times;
+    - retry exhaustion (node replacement) restores the durable checkpoint
+      and replays the journaled inputs — feeds are recorded
+      per-session, so the resumed streams reproduce the exact output
+      they would have produced without the failure (bit-identical);
+    - :class:`DeviceLoss` skips retries: durable restore + replay, then
+      ``drop_device`` re-homes the dead shard's sessions;
+    - tick wall-times feed a :class:`StepMonitor`; stragglers fire
+      ``on_straggler(tick, dt)``.
+
+    Inputs must go through :meth:`feed` (not ``session.feed``) so the
+    journal sees them.
+    """
+
+    def __init__(self, service, ckpt_every: int = 4, max_retries: int = 2,
+                 on_straggler: Optional[Callable] = None,
+                 monitor: Optional[StepMonitor] = None):
+        self.service = service
+        self.ckpt_every = ckpt_every
+        self.max_retries = max_retries
+        self.monitor = monitor or StepMonitor()
+        self.on_straggler = on_straggler
+        self.ticks = 0
+        self.stats = {"retries": 0, "checkpoint_restores": 0,
+                      "device_losses": 0}
+        # (sid, chunk) feeds since the last durable checkpoint
+        self._journal: List[tuple] = []
+        self._durable = service.checkpoint()
+
+    # -- input path ----------------------------------------------------------
+    def feed(self, session, chunk) -> None:
+        """Journal ``chunk`` for replay-after-restore, then feed it."""
+        self._journal.append((session.sid, np.asarray(chunk).copy()))
+        session.feed(chunk)
+
+    def checkpoint_now(self) -> None:
+        self._durable = self.service.checkpoint()
+        self._journal.clear()
+
+    def _restore_durable(self) -> None:
+        self.service.restore(self._durable)
+        self.stats["checkpoint_restores"] += 1
+        for sid, chunk in self._journal:
+            sess = self.service.session_by_sid(sid)
+            if sess is not None and not sess.closed:
+                sess.feed(chunk)
+
+    # -- the supervised step -------------------------------------------------
+    def tick(self, fail_injector: Optional[Callable] = None) -> None:
+        """One supervised ``service.stream_step()``.
+        ``fail_injector(tick, attempt)`` raising simulates a step failure
+        (tests); raising :class:`DeviceLoss` simulates losing a shard."""
+        t0 = time.monotonic()
+        attempt = 0
+        while True:
+            snap = self.service.checkpoint()
+            try:
+                if fail_injector is not None:
+                    fail_injector(self.ticks, attempt)
+                self.service.stream_step()
+                break
+            except DeviceLoss as e:
+                self.stats["device_losses"] += 1
+                self._restore_durable()
+                self.service.drop_device(e.device)
+                attempt = 0
+            except Exception:
+                attempt += 1
+                self.stats["retries"] += 1
+                if attempt > self.max_retries:
+                    self._restore_durable()
+                    attempt = 0
+                else:
+                    self.service.restore(snap)
+        dt = time.monotonic() - t0
+        if self.monitor.observe(self.ticks, dt) and self.on_straggler:
+            self.on_straggler(self.ticks, dt)
+        self.ticks += 1
+        if self.ticks % self.ckpt_every == 0:
+            self.checkpoint_now()
+
+    def run_until_drained(self, fail_injector: Optional[Callable] = None,
+                          max_ticks: int = 10_000) -> None:
+        """Tick until the service reports no pending stream work."""
+        while self.service.stream_pending() and self.ticks < max_ticks:
+            self.tick(fail_injector)

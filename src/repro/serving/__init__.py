@@ -1,5 +1,6 @@
 from .engine import DecodeWave, Request, ServingEngine
 from .quantized import dequantize_tree, quantize_tree
+from .signal_mesh import DeviceRouter, SignalMesh
 from .signal_service import (CoScheduler, CostBalancedPolicy,
                              LatencyAwarePolicy, RoundRobinPolicy,
                              SchedulePolicy, SignalRequest, SignalService,
@@ -8,5 +9,6 @@ from .signal_service import (CoScheduler, CostBalancedPolicy,
 __all__ = ["ServingEngine", "Request", "DecodeWave",
            "quantize_tree", "dequantize_tree",
            "SignalService", "SignalRequest", "StreamSession", "CoScheduler",
+           "SignalMesh", "DeviceRouter",
            "SchedulePolicy", "RoundRobinPolicy", "LatencyAwarePolicy",
            "CostBalancedPolicy", "get_policy"]

@@ -264,3 +264,38 @@ class DecodeWave:
     def results(self) -> Dict[int, List[int]]:
         return {r.rid: o[: r.max_new]
                 for r, o in zip(self.reqs, self.outs)}
+
+    # -- checkpoint / restore ------------------------------------------------
+    def snapshot(self) -> Dict[str, Any]:
+        """Plain-data snapshot of the wave's request-level progress.
+        Deliberately excludes the KV cache: :meth:`from_snapshot`
+        re-prefills over each request's prompt + generated prefix, the
+        same mechanism :meth:`admit` uses, with the same greedy-decode
+        requirement and the same determinism-modulo-left-padding caveat.
+        That keeps checkpoints small and device-free."""
+        if self.engine.temperature > 0.0:
+            raise ValueError("DecodeWave snapshots require greedy decode "
+                             "(temperature == 0): restore re-prefills, "
+                             "which would restart the sampling rng stream")
+        return {
+            "reqs": [{"rid": r.rid, "prompt": list(r.prompt),
+                      "max_new": r.max_new, "deadline": r.deadline}
+                     for r in self.reqs],
+            "outs": [list(o) for o in self.outs],
+            "reported": sorted(self._reported),
+        }
+
+    @classmethod
+    def from_snapshot(cls, engine: ServingEngine,
+                      snap: Dict[str, Any]) -> "DecodeWave":
+        """Rebuild a wave from :meth:`snapshot` on ``engine`` and resume
+        decoding where it left off (re-prefill over prompt + prefix)."""
+        wave = cls.__new__(cls)
+        wave.engine = engine
+        wave.reqs = [Request(rid=r["rid"], prompt=list(r["prompt"]),
+                             max_new=r["max_new"], deadline=r["deadline"])
+                     for r in snap["reqs"]]
+        wave.outs = [list(o) for o in snap["outs"]]
+        wave._reported = set(snap["reported"])
+        wave._prefill()
+        return wave

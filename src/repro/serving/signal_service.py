@@ -50,7 +50,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Callable, Dict, List, Optional, Tuple, Union
+from typing import Any, Callable, Dict, List, Optional, Tuple, Union
 
 import jax
 import jax.numpy as jnp
@@ -60,12 +60,15 @@ from .. import obs
 from ..signal.graph import CompiledSignalGraph, FuseLevel, SignalGraph
 from ..signal.streaming import (StreamState, StreamStructure, commit_frames,
                                 drain_state, finalize_piece, push_chunk,
-                                ready_spec, take_block, tap_rows)
+                                ready_spec, restore_state, snapshot_state,
+                                take_block, tap_rows)
 from .engine import DecodeWave, Request, ServingEngine
+from .signal_mesh import DeviceRouter, SignalMesh
 
 __all__ = ["SignalRequest", "SignalService", "StreamSession", "CoScheduler",
            "SchedulePolicy", "RoundRobinPolicy", "LatencyAwarePolicy",
-           "CostBalancedPolicy", "get_policy", "TickPlan"]
+           "CostBalancedPolicy", "get_policy", "TickPlan",
+           "SignalMesh", "DeviceRouter"]
 
 
 def _to_host(out):
@@ -120,6 +123,19 @@ class SignalService:
     cores (:mod:`repro.signal.backends`: ``"reference"`` jnp
     interpretation, ``"pallas"`` fused fabric+array kernels; same
     switch as ``SignalGraph.compile`` / ``StreamingRunner``).
+
+    ``mesh`` shards the service data-parallel over a device mesh
+    (:class:`~repro.serving.signal_mesh.SignalMesh`; an int shard
+    count or a jax ``Mesh`` coerce).  Bucket batches pad their row
+    count to a shard multiple and execute row-sharded via
+    ``NamedSharding``; streaming sessions get device affinity (a
+    least-loaded shard assigned at ``open_stream``, where their
+    carried :class:`StreamState` then stays put across ticks); a
+    :class:`DeviceRouter` keeps the per-device cycle ledger the
+    ``CoScheduler`` reports.  Outputs are bit-identical to the
+    unsharded path — pad rows are zero rows of row-independent math,
+    trimmed before anything reads them.  ``mesh=None`` (default) is
+    the original single-device service, byte for byte.
     """
 
     def __init__(self, batch_size: int = 8,
@@ -127,7 +143,8 @@ class SignalService:
                  buckets: Optional[List[int]] = None,
                  bucketing: bool = True,
                  block_frames: int = 8,
-                 backend="reference"):
+                 backend="reference",
+                 mesh: "SignalMesh | int | None" = None):
         from ..signal.backends import get_backend
         self.batch_size = batch_size
         self.fuse = FuseLevel.coerce(fuse)
@@ -135,6 +152,9 @@ class SignalService:
         # every streaming-session core call goes through it (same
         # ``backend=`` switch as SignalGraph.compile / StreamingRunner).
         self.backend = get_backend(backend)
+        self.mesh = SignalMesh.coerce(mesh)
+        self.router = DeviceRouter(self.mesh.n_shards) \
+            if self.mesh is not None else None
         self.buckets = sorted(int(b) for b in buckets) if buckets else None
         self.bucketing = bucketing
         self.block_frames = int(block_frames)
@@ -149,8 +169,13 @@ class SignalService:
         self._sid = 0
         # est_cycles accumulates the perf-model cost of every executed
         # batch (one-shot + streaming); the CoScheduler reads deltas for
-        # its occupancy accounting.
+        # its occupancy accounting.  wall_cycles is the sharded-aware
+        # virtual clock: per execution it advances by the MAX per-device
+        # share (devices run concurrently), so on a mesh it runs up to
+        # n_shards-fold slower than est_cycles — the latency clock the
+        # mesh bench sweeps.  They coincide when mesh is None.
         self.est_cycles = 0
+        self.wall_cycles = 0
         self.stats = {"compiles": 0, "batches": 0, "bucketed": 0,
                       "exact": 0, "dropped": 0, "detached_sessions": 0,
                       "core_calls": 0, "flush_core_calls": 0,
@@ -323,6 +348,26 @@ class SignalService:
                 self.compiled_for(*key))
         return self._cost_cache[key] * max(1, batch)
 
+    def _charge_devices(self, per_item: int, batch: int) -> int:
+        """Charge one wave's per-device cost split to the router ledger
+        (:func:`repro.core.perf_model.device_step_costs` — pad rows
+        execute, so every shard pays ``ceil(batch/n)`` rows) and return
+        the wave's wall-clock cycles: the max per-device share on a
+        mesh, the plain total otherwise."""
+        if self.router is None:
+            return per_item * max(1, batch)
+        from ..core.perf_model import device_step_costs
+        costs = device_step_costs(per_item, batch, self.router.n_devices)
+        for i, c in enumerate(costs):
+            if c:
+                self.router.charge(i, c)
+        if obs.ENABLED:
+            obs.tracer().counter(
+                "device_occupancy",
+                {f"d{i}": c
+                 for i, c in enumerate(self.router.device_cycles)})
+        return max(costs)
+
     # -- one-shot batched execution -----------------------------------------
     def _fifo_pick(self, queue: List[SignalRequest]) -> List[SignalRequest]:
         key = self.group_key(queue[0])
@@ -365,10 +410,16 @@ class SignalService:
         compiled = self.compiled_for(name, length)
         lens = [int(r.samples.shape[-1]) for r in wave]
         padded = any(t != length for t in lens)
-        stack = np.zeros((len(wave), length), np.float32)
+        # on a mesh the row count pads to a shard multiple so the
+        # NamedSharding row partition is even; pad rows are zeros (a
+        # valid, row-independent input) and nothing reads their output.
+        rows = self.mesh.padded_rows(len(wave)) if self.mesh is not None \
+            else len(wave)
+        stack = np.zeros((rows, length), np.float32)
         for i, r in enumerate(wave):
             stack[i, : lens[i]] = r.samples
-        batch = jnp.asarray(stack)
+        batch = self.mesh.shard(stack) if self.mesh is not None \
+            else jnp.asarray(stack)
         key = (name, length)
         if obs.ENABLED:
             # pad waste: the fraction of the stacked (batch, bucket)
@@ -397,6 +448,8 @@ class SignalService:
 
         self.stats["batches"] += 1
         self.est_cycles += self.group_cost(key, batch=len(wave))
+        self.wall_cycles += self._charge_devices(self.group_cost(key),
+                                                 len(wave))
         results: Dict[int, np.ndarray] = {}
         for i, r in enumerate(wave):
             r.done = True
@@ -461,7 +514,12 @@ class SignalService:
             return _to_host(self._jitted[key](batch, reg.params))
         if key not in self._masked_jitted:
             self._masked_jitted[key] = compiled.masked_jit()
-        vf = jnp.asarray([struct.valid_frames(t) for t in lens], jnp.int32)
+        # sharded batches carry zero pad rows past the wave: 0 valid
+        # frames masks every frame of a pad row (an all-zero result
+        # nothing reads back).
+        counts = [struct.valid_frames(t) for t in lens]
+        counts += [0] * (batch.shape[0] - len(counts))
+        vf = jnp.asarray(counts, jnp.int32)
         return _to_host(self._masked_jitted[key](batch, vf, reg.params))
 
     def serve(self, requests: List[SignalRequest]) -> Dict[int, np.ndarray]:
@@ -489,6 +547,10 @@ class SignalService:
             raise ValueError(f"graph {name!r} is not streamable")
         sess = StreamSession(self, name, self._sid,
                              block_frames or self.block_frames)
+        if self.router is not None:
+            # device affinity for life: the session's carried state
+            # lands on this shard and stays there across ticks.
+            sess.device_index = self.router.assign()
         self._sid += 1
         self._sessions.setdefault(name, []).append(sess)
         return sess
@@ -517,6 +579,9 @@ class SignalService:
         lock-stepped sessions)."""
         calls = 0
         _t0 = obs.now() if obs.ENABLED else 0
+        # per-shard cost of THIS tick: shards run concurrently, so the
+        # tick's wall-clock contribution is the max over shards.
+        tick_costs: Dict[Optional[int], int] = {}
         for name, sessions in self._sessions.items():
             reg = self._graphs[name]
             struct = reg.struct
@@ -529,21 +594,32 @@ class SignalService:
                 if spec is None:
                     continue
                 block = take_block(sess.state, spec)
-                gkey = (spec.n_frames, block.shape, block.dtype.name)
+                # device affinity is part of the stacking key: a stacked
+                # call only ever mixes sessions homed on the same shard,
+                # so no carried state migrates to serve a batch.
+                gkey = (spec.n_frames, block.shape, block.dtype.name,
+                        sess.device_index)
                 groups.setdefault(gkey, []).append((sess, spec, block))
-            for (n_frames, _, _), members in groups.items():
+            for (n_frames, _, _, dev), members in groups.items():
                 _tc = obs.now() if obs.ENABLED else 0
                 stacked = jnp.stack([b for _, _, b in members])
+                if self.mesh is not None and dev is not None:
+                    stacked = jax.device_put(stacked,
+                                             self.mesh.device_for(dev))
                 res = struct.core_jit(n_frames, self.fuse, self.backend)(
                     stacked, reg.params)
                 calls += 1
                 if obs.ENABLED:
                     obs.complete(f"graph/{name}", "stream_core", _tc,
-                                 n_frames=n_frames, width=len(members))
+                                 n_frames=n_frames, width=len(members),
+                                 device=dev)
                     obs.metrics().histogram(
                         "service.stream_stack_width").record(len(members))
-                self.est_cycles += self._stream_cost(name, n_frames) \
-                    * len(members)
+                cost = self._stream_cost(name, n_frames) * len(members)
+                self.est_cycles += cost
+                tick_costs[dev] = tick_costs.get(dev, 0) + cost
+                if self.router is not None and dev is not None:
+                    self.router.charge(dev, cost)
                 for i, (sess, spec, block) in enumerate(members):
                     if isinstance(res, dict):
                         frames = res[struct.deframer][i]
@@ -564,6 +640,13 @@ class SignalService:
                         merged = dict(out) if isinstance(out, dict) else {}
                         merged.update(taps)
                         sess._push_outs(merged)
+        if tick_costs:
+            self.wall_cycles += max(tick_costs.values())
+            if obs.ENABLED and self.router is not None:
+                obs.tracer().counter(
+                    "device_occupancy",
+                    {f"d{i}": c
+                     for i, c in enumerate(self.router.device_cycles)})
         if calls:
             self.stats["core_calls"] += calls
         self.stats["stream_ticks"] += 1
@@ -587,6 +670,99 @@ class SignalService:
         lst = self._sessions.get(sess.graph_name, [])
         if sess in lst:
             lst.remove(sess)
+            if self.router is not None:
+                self.router.release(sess.device_index)
+
+    # -- checkpoint / restore (the fault-tolerance contract) ----------------
+    def session_by_sid(self, sid: int) -> Optional["StreamSession"]:
+        for sessions in self._sessions.values():
+            for s in sessions:
+                if s.sid == sid:
+                    return s
+        return None
+
+    def checkpoint(self) -> Dict:
+        """Host-side snapshot of every open streaming session (carried
+        state, pending unread output, delivery counters, device
+        affinity) plus the service counters.  Plain numpy throughout —
+        independent of device health, cheap enough to take per tick.
+        One-shot queue entries are NOT captured (they are client-owned
+        request objects, resubmittable by contract); streaming state is
+        what only the service can reconstruct.  Restoring follows
+        :class:`repro.runtime.fault_tolerance.TrainLoop`'s contract:
+        state rewinds, inputs replay, and the resumed stream is
+        bit-identical (the StreamSupervisor journals feeds for the
+        replay half)."""
+        sessions = [s.snapshot() for ss in self._sessions.values()
+                    for s in ss]
+        return {"format": 1,
+                "sid": self._sid,
+                "sessions": sessions,
+                "est_cycles": self.est_cycles,
+                "wall_cycles": self.wall_cycles,
+                "device_cycles": list(self.router.device_cycles)
+                if self.router is not None else None}
+
+    def restore(self, ckpt: Dict) -> None:
+        """Restore the streaming side to a :meth:`checkpoint`.  Live
+        session handles are restored IN PLACE (client code keeps its
+        ``StreamSession`` objects); sessions opened after the
+        checkpoint are detached with an explanatory ``error``; sessions
+        homed on a since-dropped shard are re-homed by the router.
+        Delivery counters are merged, not rewound — data a client
+        already ``read()`` is never emitted twice after the replay
+        (exactly-once delivery; see :meth:`StreamSession._dedup`)."""
+        live = {s.sid: s for ss in self._sessions.values() for s in ss}
+        self._sessions = {}
+        restored = set()
+        for snap in ckpt["sessions"]:
+            name = snap["graph"]
+            if name not in self._graphs:
+                raise KeyError(f"cannot restore session {snap['sid']}: "
+                               f"graph {name!r} is not registered")
+            sess = live.get(snap["sid"])
+            if sess is None:
+                sess = StreamSession(self, name, snap["sid"],
+                                     snap["block_frames"])
+            sess._load_snapshot(snap)
+            self._sessions.setdefault(name, []).append(sess)
+            restored.add(snap["sid"])
+        for sid, sess in live.items():
+            if sid not in restored and not sess.closed:
+                sess.closed = True
+                sess.error = ("service restored to a checkpoint taken "
+                              "before this session was opened")
+                self.stats["detached_sessions"] += 1
+        self._sid = max(self._sid, int(ckpt["sid"]))
+        self.est_cycles = ckpt.get("est_cycles", self.est_cycles)
+        self.wall_cycles = ckpt.get("wall_cycles", self.wall_cycles)
+        dc = ckpt.get("device_cycles")
+        if self.router is not None and dc is not None \
+                and len(dc) == self.router.n_devices:
+            self.router.device_cycles = [int(c) for c in dc]
+
+    def drop_device(self, index: int) -> None:
+        """Simulated device loss: mark the shard dead in the router and
+        re-home its sessions onto surviving shards (their carried state
+        moves once — affinity then holds on the new shard)."""
+        if self.router is None:
+            raise ValueError("drop_device needs a meshed service")
+        self.router.drop(index)
+        moved = 0
+        for sessions in self._sessions.values():
+            for sess in sessions:
+                if sess.device_index == index:
+                    self.router.release(index)
+                    sess.device_index = self.router.assign()
+                    sess.state = jax.device_put(
+                        sess.state,
+                        self.mesh.device_for(sess.device_index))
+                    moved += 1
+        self.stats["device_losses"] = self.stats.get("device_losses",
+                                                     0) + 1
+        if obs.ENABLED:
+            obs.instant("SignalService", "device_loss", device=index,
+                        sessions_moved=moved)
 
 
 class StreamSession:
@@ -613,8 +789,19 @@ class StreamSession:
         self.state = StreamState()
         self.closed = False
         self.error: Optional[str] = None      # set when force-detached
+        self.device_index: Optional[int] = None   # shard affinity (mesh)
         self._out: List[np.ndarray] = []
         self._outs: Dict[str, List[np.ndarray]] = {}
+        # exactly-once delivery counters, in absolute stream positions
+        # along each output's frames/time axis: ``_pushed`` = data ever
+        # produced into the pending lists, ``_delivered`` = data handed
+        # to the client by read()/close().  A checkpoint restore rewinds
+        # _pushed with the state; _delivered is connection memory and
+        # survives, so replayed ticks re-produce — and _dedup drops —
+        # exactly the already-delivered prefix.  Single-output sessions
+        # use the key None.
+        self._pushed: Dict[Optional[str], int] = {}
+        self._delivered: Dict[Optional[str], int] = {}
 
     @property
     def _reg(self) -> _Registration:
@@ -637,8 +824,25 @@ class StreamSession:
         elif out is not None:            # pure sample chain: no latency
             self._push_out(out)
 
+    def _dedup(self, key: Optional[str], arr: np.ndarray,
+               axis: int) -> np.ndarray:
+        """Exactly-once delivery filter: advance the pushed counter and
+        drop the piece's already-delivered prefix.  A no-op on a live
+        stream (delivered never exceeds pushed); after a checkpoint
+        restore, replayed ticks re-produce data the client already
+        read, and this is where it disappears."""
+        n = int(arr.shape[axis])
+        start = self._pushed.get(key, 0)
+        self._pushed[key] = start + n
+        skip = min(n, max(0, self._delivered.get(key, 0) - start))
+        if skip:
+            sl = [slice(None)] * arr.ndim
+            sl[axis] = slice(skip, None)
+            arr = arr[tuple(sl)]
+        return arr
+
     def _push_out(self, out) -> None:
-        arr = np.asarray(out)
+        arr = self._dedup(None, np.asarray(out), -1)
         if arr.shape[-1]:
             self._out.append(arr)
 
@@ -646,6 +850,7 @@ class StreamSession:
         for name, piece in outs.items():
             arr = np.asarray(piece)
             axis = self._frames_axis(name, arr)
+            arr = self._dedup(name, arr, axis)
             if arr.shape[axis]:
                 self._outs.setdefault(name, []).append(arr)
 
@@ -681,12 +886,15 @@ class StreamSession:
             out = self._out[0] if len(self._out) == 1 else np.concatenate(
                 self._out, axis=-1)
             self._out = []
+            # everything pushed is now in the client's hands
+            self._delivered[None] = self._pushed.get(None, 0)
             return out
         outs = {}
         for name, pieces in self._outs.items():
             axis = self._frames_axis(name, pieces[0])
             outs[name] = pieces[0] if len(pieces) == 1 \
                 else np.concatenate(pieces, axis=axis)
+            self._delivered[name] = self._pushed.get(name, 0)
         self._outs = {}
         return outs
 
@@ -702,8 +910,12 @@ class StreamSession:
             svc = self.service
 
             def run_core(block, n_frames):
-                svc.est_cycles += svc._stream_cost(self.graph_name,
-                                                   n_frames)
+                cost = svc._stream_cost(self.graph_name, n_frames)
+                svc.est_cycles += cost
+                svc.wall_cycles += cost
+                if svc.router is not None \
+                        and self.device_index is not None:
+                    svc.router.charge(self.device_index, cost)
                 svc.stats["flush_core_calls"] += 1
                 res = struct.core_jit(n_frames, svc.fuse, svc.backend)(
                     block[None], reg.params)
@@ -718,6 +930,75 @@ class StreamSession:
                 self._push_out(out)
         self.service._close_stream(self)
         return self.read()
+
+    # -- checkpoint / restore ------------------------------------------------
+    def snapshot(self) -> Dict:
+        """Plain-data (host numpy) snapshot of this connection: carried
+        state, pending unread output, exactly-once delivery counters,
+        and shard affinity.  Deep copies throughout — the snapshot is
+        valid after any amount of further streaming, and after losing
+        the device the live state was homed on."""
+        return {
+            "sid": self.sid,
+            "graph": self.graph_name,
+            "block_frames": self.block_frames,
+            "device_index": self.device_index,
+            "closed": self.closed,
+            "error": self.error,
+            "state": snapshot_state(self.state),
+            "pending": [np.array(a) for a in self._out],
+            "pendings": {k: [np.array(a) for a in v]
+                         for k, v in self._outs.items()},
+            "pushed": dict(self._pushed),
+            "delivered": dict(self._delivered),
+        }
+
+    def _load_snapshot(self, snap: Dict) -> None:
+        """Restore this connection in place from :meth:`snapshot`.  The
+        carried state lands back on the session's affinity shard
+        (re-homed first if that shard was dropped).  Pending output is
+        re-pushed through the exactly-once filter, and the delivery
+        counter keeps the live handle's progress — a client that read
+        past the checkpoint sees no duplicates when replay catches the
+        stream back up."""
+        svc = self.service
+        self.block_frames = int(snap["block_frames"])
+        self.closed = bool(snap["closed"])
+        self.error = snap["error"]
+        self.device_index = snap["device_index"]
+        device = None
+        if svc.mesh is not None and self.device_index is not None:
+            if svc.router is not None \
+                    and not svc.router.alive[self.device_index]:
+                svc.router.release(self.device_index)
+                self.device_index = svc.router.assign()
+            device = svc.mesh.device_for(self.device_index)
+        self.state = restore_state(snap["state"], device=device)
+        # delivery memory merges forward: a fresh process takes the
+        # checkpoint's counters, a live handle keeps what its client
+        # already consumed (the larger of the two).
+        delivered = dict(snap["delivered"])
+        for k, v in self._delivered.items():
+            delivered[k] = max(delivered.get(k, 0), v)
+        self._delivered = delivered
+        # re-push the checkpoint's pending pieces through the filter:
+        # rewind the pushed counters by their extents, then push in
+        # order — already-delivered prefixes drop out in _dedup.
+        self._pushed = dict(snap["pushed"])
+        self._out, self._outs = [], {}
+        pend = [np.asarray(a) for a in snap["pending"]]
+        if pend:
+            self._pushed[None] = self._pushed.get(None, 0) \
+                - sum(a.shape[-1] for a in pend)
+            for a in pend:
+                self._push_out(a)
+        for name, pieces in snap["pendings"].items():
+            pieces = [np.asarray(a) for a in pieces]
+            axes = [self._frames_axis(name, a) for a in pieces]
+            self._pushed[name] = self._pushed.get(name, 0) \
+                - sum(a.shape[ax] for a, ax in zip(pieces, axes))
+            for a in pieces:
+                self._push_outs({name: a})
 
 
 # --------------------------------------------------------------------------
@@ -903,11 +1184,18 @@ class CoScheduler:
             dls.extend(r.deadline for r in self._wave.reqs)
         return min(dls, default=math.inf)
 
-    def occupancy(self) -> Dict[str, float]:
+    def occupancy(self) -> Dict[str, Any]:
+        out: Dict[str, Any] = {
+            "llm_cycles": self.llm_cycles,
+            "dsp_cycles": self.dsp_cycles}
         total = self.llm_cycles + self.dsp_cycles
-        return {"llm_cycles": self.llm_cycles,
-                "dsp_cycles": self.dsp_cycles,
-                "dsp_share": self.dsp_cycles / total if total else 0.0}
+        out["dsp_share"] = self.dsp_cycles / total if total else 0.0
+        if self.signals.router is not None:
+            # per-device view of the DSP side: the mesh router's ledger
+            # (offered cycles per shard, liveness) — what the serving
+            # bench's --mesh sweep and the straggler monitor read.
+            out["per_device"] = self.signals.router.occupancy()
+        return out
 
     @property
     def idle(self) -> bool:
@@ -980,6 +1268,11 @@ class CoScheduler:
         tr.counter("occupancy", {"dsp_cycles": self.dsp_cycles,
                                  "llm_cycles": self.llm_cycles})
         tr.counter("dsp_share", {"share": occ["dsp_share"]})
+        if "per_device" in occ:
+            per = occ["per_device"]
+            tr.counter("device_occupancy",
+                       {f"d{i}": c
+                        for i, c in enumerate(per["device_cycles"])})
         m = obs.metrics()
         m.gauge("sched.dsp_share").set(occ["dsp_share"])
         m.counter("sched.ticks").inc()

@@ -32,7 +32,7 @@ __all__ = ["fft", "ifft", "fir", "fir_phased", "dct", "dct2", "dwt",
            "SignalGraph", "CompiledSignalGraph", "SigType", "FuseLevel",
            "biquad_apply", "overlap_add", "mel_filterbank_matrix",
            "StreamingRunner", "StreamStructure", "clear_plan_caches",
-           "plan_cache_info", "plan_cache_get",
+           "plan_cache_info", "plan_cache_get", "reset_plan_cache_stats",
            "ExecBackend", "ReferenceBackend", "PallasBackend",
            "PrecisionPolicy", "get_backend", "register_backend",
            "available_backends"]
@@ -111,6 +111,14 @@ def clear_plan_caches() -> None:
     Plans are static compile artifacts keyed by shape; the next call
     simply rebuilds."""
     _PLAN_CACHE.clear()
+    _PLAN_STATS.clear()
+
+
+def reset_plan_cache_stats() -> None:
+    """Zero the hit/miss counters WITHOUT dropping cached plans — test
+    isolation (the autouse fixture in tests/conftest.py): hit-rate
+    assertions see only their own test's traffic, while the expensive
+    compile artifacts stay warm across tests."""
     _PLAN_STATS.clear()
 
 

@@ -77,7 +77,8 @@ from .graph import (CompiledSignalGraph, FuseLevel, SignalGraph,
                     biquad_apply, overlap_add)
 
 __all__ = ["StreamingRunner", "StreamState", "StreamStructure", "BlockSpec",
-           "stack_states", "unstack_states", "drain_state", "tap_rows"]
+           "stack_states", "unstack_states", "drain_state", "tap_rows",
+           "snapshot_state", "restore_state"]
 
 _SAMPLE_KINDS = ("fir", "iir_biquad")
 _FRAMEWISE_KINDS = ("dnn", "magnitude", "mel_filterbank", "mul", "dct",
@@ -219,6 +220,27 @@ def unstack_states(state: StreamState, n: int) -> List[StreamState]:
     """Inverse of :func:`stack_states`."""
     return [jax.tree_util.tree_map(lambda x, i=i: x[i], state)
             for i in range(n)]
+
+
+def snapshot_state(state: StreamState) -> StreamState:
+    """Deep host-side copy of a connection's carried state: every array
+    leaf becomes an owned numpy array (the host counters ride along as
+    aux data).  The snapshot is independent of device health — restoring
+    it after a (simulated) device loss reproduces the stream exactly
+    (:func:`restore_state`; service-level checkpoint/restore in
+    ``SignalService.checkpoint``)."""
+    return jax.tree_util.tree_map(lambda a: np.array(a), state)
+
+
+def restore_state(snap: StreamState,
+                  device=None) -> StreamState:
+    """Rebuild device arrays from a :func:`snapshot_state` host copy.
+    ``device`` pins every leaf (a streaming session's affinity device
+    on a sharded service); None leaves the placement to jax."""
+    if device is None:
+        return jax.tree_util.tree_map(jnp.asarray, snap)
+    return jax.tree_util.tree_map(
+        lambda a: jax.device_put(jnp.asarray(a), device), snap)
 
 
 @dataclasses.dataclass(frozen=True)

@@ -1,0 +1,47 @@
+"""Forced-multi-device subprocess harness.
+
+``XLA_FLAGS=--xla_force_host_platform_device_count=N`` must be set
+before jax is imported, so every test that needs more than one device
+runs its body in a subprocess with that flag in the environment.  The
+main pytest process stays at 1 CPU device (tests/conftest.py).
+
+``run_in_forced_mesh`` runs a dedented code string and asserts success;
+``last_json`` parses the last stdout line as JSON — the convention the
+mesh tests use to get structured results back across the process
+boundary (print progress freely, print the JSON payload last).
+
+The dedicated CI lane (``mesh-tests`` in .github/workflows/ci.yml) runs
+exactly the tests built on this harness:
+``pytest tests/test_distributed.py tests/test_signal_mesh_faults.py``.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+ROOT = os.path.join(os.path.dirname(__file__), "..")
+
+
+def run_in_forced_mesh(code: str, devices: int = 8,
+                       timeout: int = 600) -> str:
+    """Run ``code`` in a subprocess seeing ``devices`` forced host
+    devices; returns its stdout, asserts exit code 0."""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
+    env["PYTHONPATH"] = os.path.join(ROOT, "src")
+    out = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
+                         capture_output=True, text=True, timeout=timeout,
+                         env=env, cwd=ROOT)
+    assert out.returncode == 0, out.stderr[-4000:]
+    return out.stdout
+
+
+def last_json(stdout: str):
+    """Parse the last non-empty stdout line as JSON."""
+    lines = [ln for ln in stdout.strip().splitlines() if ln.strip()]
+    assert lines, "subprocess produced no stdout"
+    return json.loads(lines[-1])

@@ -1,9 +1,34 @@
 import os
 import sys
 
+import pytest
+
 # Tests see 1 CPU device (the dry-run sets its own 512-device env in its
 # own process).  Distributed tests spawn subprocesses with their own
-# XLA_FLAGS.
+# XLA_FLAGS (tests/_mesh_helpers.py).
 os.environ.setdefault("JAX_PLATFORMS", "cpu")
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+
+@pytest.fixture
+def forced_mesh():
+    """The forced-multi-device subprocess runner
+    (tests/_mesh_helpers.py): ``forced_mesh(code, devices=8)`` runs
+    ``code`` with ``XLA_FLAGS=--xla_force_host_platform_device_count``
+    set before jax imports and returns its stdout."""
+    from _mesh_helpers import run_in_forced_mesh
+    return run_in_forced_mesh
+
+
+@pytest.fixture(autouse=True)
+def _reset_counters():
+    """Test isolation for process-global counters: plan-cache hit/miss
+    stats and the obs metrics registry reset around every test, so
+    hit-rate and metrics assertions see only their own test's traffic.
+    Cached plan artifacts themselves stay warm (cheap reruns)."""
+    yield
+    from repro import obs
+    from repro.signal import reset_plan_cache_stats
+    reset_plan_cache_stats()
+    obs.reset_registry()

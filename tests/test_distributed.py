@@ -3,25 +3,10 @@ forced host-platform device count (keeps the main test process at 1
 device)."""
 
 import json
-import os
-import subprocess
-import sys
-import textwrap
 
 import pytest
 
-ROOT = os.path.join(os.path.dirname(__file__), "..")
-
-
-def run_sub(code: str, devices: int = 8, timeout: int = 600) -> str:
-    env = dict(os.environ)
-    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
-    env["PYTHONPATH"] = os.path.join(ROOT, "src")
-    out = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
-                         capture_output=True, text=True, timeout=timeout,
-                         env=env, cwd=ROOT)
-    assert out.returncode == 0, out.stderr[-4000:]
-    return out.stdout
+from _mesh_helpers import run_in_forced_mesh as run_sub
 
 
 def test_sharded_train_step_matches_single_device():

@@ -1,0 +1,180 @@
+"""SigMesh sharding properties, swept via tests/_hypothesis_compat.py.
+
+Everything here runs in the main 1-CPU-device process on a *virtual*
+:class:`SignalMesh` — logical shards wrap round-robin over the single
+device, so padding math, least-loaded routing, per-device cost
+accounting, and device-affinity invariance are plain host-side
+properties (real placement is covered by the forced-8-device subprocess
+tests in tests/test_signal_mesh_faults.py).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from _hypothesis_compat import given, settings, st
+
+from repro.core.perf_model import (device_step_costs, sharded_step_cost,
+                                   step_cost_estimate,
+                                   step_cost_estimate_per_device)
+from repro.serving import SignalMesh, DeviceRouter, SignalService
+from repro.serving.signal_mesh import trim_rows
+from repro.signal import SignalGraph
+
+FRAME, HOP = 64, 32
+
+
+def _fig9():
+    g = SignalGraph("g")
+    g.stft("spec", frame=FRAME, hop=HOP)
+    g.dnn("mask", "spec", fn=lambda p, z: jax.nn.sigmoid(jnp.abs(z) - 1.0))
+    g.mul("enh", "spec", "mask")
+    g.istft("out", "enh", hop=HOP)
+    g.outputs("out")
+    return g
+
+
+# --------------------------------------------------------------------------
+# Row padding / shard / trim round-trip
+# --------------------------------------------------------------------------
+
+@settings(max_examples=30)
+@given(st.integers(1, 40), st.integers(1, 9))
+def test_shard_trim_round_trip_on_uneven_rows(rows, n_shards):
+    """pad -> shard -> trim is the identity on the real rows, for every
+    (row count, shard count) mix including non-dividing ones."""
+    mesh = SignalMesh(n_shards)
+    padded = mesh.padded_rows(rows)
+    assert padded >= rows and padded % n_shards == 0
+    assert padded - rows < n_shards       # minimal padding
+    rng = np.random.default_rng(rows * 100 + n_shards)
+    stack = np.zeros((padded, 16), np.float32)
+    real = rng.standard_normal((rows, 16)).astype(np.float32)
+    stack[:rows] = real
+    sharded = mesh.shard(stack)
+    back = trim_rows(np.asarray(sharded), rows)
+    np.testing.assert_array_equal(back, real)
+
+
+@settings(max_examples=20)
+@given(st.integers(1, 32), st.integers(1, 8))
+def test_padded_rows_is_stable(rows, n_shards):
+    """Padding an already-padded row count is a fixed point."""
+    mesh = SignalMesh(n_shards)
+    p = mesh.padded_rows(rows)
+    assert mesh.padded_rows(p) == p
+
+
+# --------------------------------------------------------------------------
+# Per-device cost model consistency
+# --------------------------------------------------------------------------
+
+@settings(max_examples=30)
+@given(st.integers(0, 64), st.integers(1, 9), st.integers(1, 5000))
+def test_device_step_costs_consistent_with_totals(batch, n, per_item):
+    costs = device_step_costs(per_item, batch, n)
+    assert len(costs) == n
+    # every device runs ceil(batch/n) rows (pad rows execute too), so
+    # the per-device shares are equal and bound the unsharded cost
+    assert len(set(costs)) == 1
+    assert sharded_step_cost(per_item, batch, n) == max(costs, default=0)
+    unsharded = step_like = per_item * batch
+    if batch:
+        assert max(costs) * n >= step_like
+        assert max(costs) <= per_item * (batch // n + (batch % n > 0))
+
+
+def test_step_cost_estimate_per_device_matches_step_cost_estimate():
+    compiled = _fig9().compile(512)
+    per_item = step_cost_estimate(compiled, batch=1)
+    for n in (1, 2, 8):
+        costs = step_cost_estimate_per_device(compiled, batch=4,
+                                              n_devices=n)
+        assert costs == device_step_costs(per_item, 4, n)
+    # n_devices=1 degenerates to the unsharded estimate
+    assert step_cost_estimate_per_device(compiled, batch=4,
+                                         n_devices=1) == \
+        [step_cost_estimate(compiled, batch=4)]
+
+
+@settings(max_examples=20)
+@given(st.integers(2, 8), st.integers(5, 40))
+def test_router_greedy_assignment_is_balanced(n, sessions):
+    """Least-loaded assignment keeps session counts within 1 of each
+    other, whatever the open order."""
+    r = DeviceRouter(n)
+    for _ in range(sessions):
+        r.assign()
+    occ = r.occupancy()["sessions"]
+    assert sum(occ) == sessions
+    assert max(occ) - min(occ) <= 1
+
+
+@settings(max_examples=20)
+@given(st.integers(2, 8), st.integers(1, 6))
+def test_router_drop_redirects_all_future_assignments(n, drops):
+    r = DeviceRouter(n)
+    dead = list(range(min(drops, n - 1)))
+    for d in dead:
+        r.drop(d)
+    for _ in range(3 * n):
+        assert r.assign() not in dead
+    assert r.alive_count() == n - len(dead)
+
+
+# --------------------------------------------------------------------------
+# Service-level invariants (virtual mesh, 1 device)
+# --------------------------------------------------------------------------
+
+def test_per_device_occupancy_tracks_cost_model():
+    """The router's cycle ledger for a one-shot serve equals the perf
+    model's per-device estimate, summed over executed waves."""
+    svc = SignalService(batch_size=4, mesh=SignalMesh(8))
+    svc.register("g", _fig9())
+    from repro.serving import SignalRequest
+    rng = np.random.default_rng(3)
+    reqs = [SignalRequest(rid=i, graph="g",
+                          samples=rng.standard_normal(512).astype(
+                              np.float32)) for i in range(4)]
+    res = svc.serve(reqs)
+    assert sorted(res) == [0, 1, 2, 3]
+    per_item = svc.group_cost(("g", 512))
+    expected = device_step_costs(per_item, 4, 8)
+    assert svc.router.device_cycles == expected
+    # the wall clock advanced by the max per-device share; the offered
+    # work clock by the full batch cost
+    assert svc.wall_cycles == max(expected)
+    assert svc.est_cycles == per_item * 4
+
+
+def test_session_affinity_invariant_across_ticks():
+    """A session's carried state stays on its assigned shard for the
+    whole stream, and each tick's cost lands on exactly that shard's
+    ledger (router cycles match the service's _stream_cost charges)."""
+    svc = SignalService(batch_size=4, mesh=SignalMesh(8))
+    svc.register("g", _fig9())
+    rng = np.random.default_rng(4)
+    sessions = [svc.open_stream("g") for _ in range(3)]
+    homes = [s.device_index for s in sessions]
+    assert len(set(homes)) == 3           # spread over distinct shards
+    charged = {d: 0 for d in homes}
+    for _ in range(6):
+        for s in sessions:
+            s.feed(jnp.asarray(
+                rng.standard_normal(128).astype(np.float32)))
+        before = list(svc.router.device_cycles)
+        svc.stream_step()
+        for s, home in zip(sessions, homes):
+            assert s.device_index == home
+        for d in set(homes):
+            charged[d] += svc.router.device_cycles[d] - before[d]
+    # every shard that hosts a session did its own work (equal streams
+    # -> equal ledgers), idle shards were never charged
+    vals = {charged[d] for d in homes}
+    assert len(vals) == 1 and vals != {0}
+    for d in range(8):
+        if d not in homes:
+            assert svc.router.device_cycles[d] == 0
+    for s in sessions:
+        s.close()
+    assert sum(svc.router.occupancy()["sessions"]) == 0
