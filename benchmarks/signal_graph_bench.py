@@ -16,11 +16,16 @@ A per-**backend** section executes the same compiled programs through
 each registered execution backend (``reference`` jnp interpretation vs
 ``pallas`` fused fabric+array kernels, interpret mode on CPU) and
 reports step time plus the lowering report's fused-vs-emulated pass
-counts.  ``--json PATH`` writes the full table set as JSON (the CI smoke
-step uploads it); ``--smoke`` shrinks sizes/iters for CI.
+counts.  ``--compiled`` adds the training-step sweep per backend
+binding: the learned Fig-9 forward pass and ``value_and_grad`` step on
+``reference``, ``pallas-interpret`` and ``pallas-compiled`` (the Pallas
+kernels carry custom VJPs, so the whole step runs on the bound backend;
+interpret-only hosts record the compiled rows as ``unsupported``).
+``--json PATH`` writes the full table set as JSON (the CI smoke step
+uploads it); ``--smoke`` shrinks sizes/iters for CI.
 
     PYTHONPATH=src python -m benchmarks.signal_graph_bench [--smoke]
-        [--json artifacts/signal_graph_bench.json]
+        [--compiled] [--json artifacts/signal_graph_bench.json]
 """
 
 from __future__ import annotations
@@ -191,9 +196,7 @@ def backend_rows(length: int = 4096, batch: int = 4,
 GRAD_HEADER = "graph,variant,us_per_step"
 
 
-def grad_rows(length: int = 4096, batch: int = 4) -> List[Tuple]:
-    """value_and_grad step time of a learned-FIR + dnn-mask Fig-9
-    variant (the SigProgram training surface) next to its forward pass."""
+def _fig9_learned(length: int):
     from repro.signal import SignalGraph
 
     g = SignalGraph("fig9_learned")
@@ -206,7 +209,13 @@ def grad_rows(length: int = 4096, batch: int = 4) -> List[Tuple]:
     g.mul("enh", "spec", "mask")
     g.istft("out", "enh", hop=128, length=length)
     g.outputs("out")
-    c = g.compile(length)
+    return g
+
+
+def grad_rows(length: int = 4096, batch: int = 4) -> List[Tuple]:
+    """value_and_grad step time of a learned-FIR + dnn-mask Fig-9
+    variant (the SigProgram training surface) next to its forward pass."""
+    c = _fig9_learned(length).compile(length)
     params = c.init_params()
     rng = np.random.default_rng(1)
     x = jnp.asarray(rng.standard_normal((batch, length)), jnp.float32)
@@ -222,10 +231,61 @@ def grad_rows(length: int = 4096, batch: int = 4) -> List[Tuple]:
             ("fig9_learned", "value_and_grad", us_vag)]
 
 
+# -- compiled-mode sweep: the training step per backend binding -----------
+
+COMPILED_HEADER = "graph,backend_mode,direction,us,note"
+
+
+def compiled_rows(length: int = 4096, batch: int = 4,
+                  iters: int = 10) -> List[Tuple]:
+    """(graph, backend_mode, direction, us, note): the learned Fig-9
+    forward pass and full ``value_and_grad`` step on ``reference``,
+    ``pallas-interpret`` and ``pallas-compiled`` bindings.  Pallas now
+    carries custom VJPs, so the gradient step runs on the bound backend
+    with no re-bind; on interpret-only hosts the compiled rows are
+    recorded as ``unsupported`` rather than dropped."""
+    from repro.kernels import compiled_supported
+    from repro.signal.backends import PallasBackend
+
+    g = _fig9_learned(length)
+    rng = np.random.default_rng(1)
+    x = jnp.asarray(rng.standard_normal((batch, length)), jnp.float32)
+    target = jnp.zeros_like(x)
+
+    def loss(outs, tgt):
+        return jnp.mean((outs["out"] - tgt) ** 2)
+
+    can_compile = compiled_supported()
+    modes = [("reference", "reference", True),
+             ("pallas-interpret", PallasBackend(interpret=True), True),
+             ("pallas-compiled", PallasBackend(interpret=False),
+              can_compile)]
+    out = []
+    for mode, backend, supported in modes:
+        if not supported:
+            for direction in ("forward", "value_and_grad"):
+                out.append(("fig9_learned", mode, direction, float("nan"),
+                            "unsupported: jax backend is interpret-only"))
+            continue
+        c = g.compile(length, backend=backend)
+        params = c.init_params()
+        fwd = jax.jit(lambda p, xx: c(xx, p)["out"])
+        out.append(("fig9_learned", mode, "forward",
+                    _bench(fwd, params, x, iters=iters), ""))
+        vag = jax.jit(c.value_and_grad(loss, wrt=("front",)))
+        out.append(("fig9_learned", mode, "value_and_grad",
+                    _bench(vag, params, x, target, iters=iters), ""))
+    return out
+
+
 def main(argv=None) -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
                     help="CI mode: small sizes, few iters, hard asserts")
+    ap.add_argument("--compiled", action="store_true",
+                    help="add the per-backend-binding training-step "
+                         "sweep (reference / pallas-interpret / "
+                         "pallas-compiled, forward + value_and_grad)")
     ap.add_argument("--json", type=str, default=None,
                     help="write all tables as JSON to this path")
     args = ap.parse_args(argv)
@@ -263,6 +323,22 @@ def main(argv=None) -> None:
     for name, variant, us in grad:
         print(f"{name},{variant},{us:.1f}")
 
+    compiled = []
+    if args.compiled:
+        print()
+        compiled = compiled_rows(length, batch, iters)
+        print(COMPILED_HEADER)
+        for name, mode, direction, us, note in compiled:
+            print(f"{name},{mode},{direction},{us:.1f},{note}")
+        if args.smoke:
+            # pallas-interpret must run the full training step — a
+            # rebind regression (or a lost VJP rule) fails CI here.
+            measured = {r[1] for r in compiled if not np.isnan(r[3])}
+            assert {"reference", "pallas-interpret"} <= measured
+            from repro.kernels import compiled_supported
+            if compiled_supported():
+                assert "pallas-compiled" in measured
+
     if args.json:
         from repro.core.perf_model import PERF_SCHEMA_VERSION
         payload = {
@@ -274,6 +350,10 @@ def main(argv=None) -> None:
             "multi_output": [dict(zip(MULTI_HEADER.split(","), r))
                              for r in multi],
             "grad": [dict(zip(GRAD_HEADER.split(","), r)) for r in grad],
+            "compiled": [dict(zip(COMPILED_HEADER.split(","),
+                                  (*r[:3], None if np.isnan(r[3]) else r[3],
+                                   r[4])))
+                         for r in compiled],
         }
         path = pathlib.Path(args.json)
         path.parent.mkdir(parents=True, exist_ok=True)

@@ -20,8 +20,15 @@ the per-output passes.  The same compiled program is then:
      with an LLM ServingEngine on one step loop — the paper's concurrent
      DSP+DL story.
 
+``--backend pallas`` runs every phase — training included — through the
+fused fabric+array kernels: the shuffle-GEMM ops carry custom VJPs, so
+``value_and_grad`` differentiates the Pallas lowering directly instead
+of re-binding to the reference interpreter.
+
     PYTHONPATH=src python examples/speech_enhancement.py [--steps 40]
     PYTHONPATH=src python examples/speech_enhancement.py --smoke   # CI
+    PYTHONPATH=src python examples/speech_enhancement.py --smoke \
+        --backend pallas                  # train on the array kernels
 """
 
 import argparse
@@ -111,6 +118,9 @@ def main():
     ap.add_argument("--trace", type=str, default=None,
                     help="record a SigTrace chrome-trace of the serving "
                          "phase to this path (REPRO_TRACE=... also works)")
+    ap.add_argument("--backend", type=str, default="reference",
+                    help="execution backend for every phase, training "
+                         "included ('reference' or 'pallas')")
     args = ap.parse_args()
     if args.smoke:
         args.steps, args.batch, args.length = 6, 2, 2048
@@ -129,7 +139,9 @@ def main():
     from repro.signal import FuseLevel, StreamingRunner
 
     graph = build_graph(length)
-    fused = graph.compile(length, fuse=FuseLevel.STREAM)
+    fused = graph.compile(length, fuse=FuseLevel.STREAM,
+                          backend=args.backend)
+    assert fused.backend.differentiable, args.backend
     rep = signal_graph_report(fused)
     rep_u = signal_graph_report(graph.compile(length, fuse=FuseLevel.NONE))
     print(f"fabric passes : fused {rep['fabric_passes']:3d}   "
@@ -192,7 +204,7 @@ def main():
         assert snr_after > snr_noisy, "enhancement must beat the noisy input"
 
     # -- streaming: chunked per-output execution vs the offline run -------
-    runner = StreamingRunner(graph, params=params)
+    runner = StreamingRunner(graph, params=params, backend=args.backend)
     cuts = [length // 8, length // 3, length // 2 + 300]
     acc = {}
     for c in np.split(np.asarray(noisy0), cuts, axis=-1):
@@ -214,7 +226,8 @@ def main():
         f"{k}={v['latency']} {v['domain']}" for k, v in lat.items()))
 
     # -- streaming sessions: 2 connections, one jitted core call per tick
-    service = SignalService(batch_size=args.batch, block_frames=8)
+    service = SignalService(batch_size=args.batch, block_frames=8,
+                            backend=args.backend)
     service.register("speech_enhancement", graph, params=params)
     sessions = [service.open_stream("speech_enhancement") for _ in range(2)]
     sess_out = [{} for _ in sessions]

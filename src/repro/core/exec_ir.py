@@ -40,11 +40,13 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from . import fabric as _fabric
 from .fabric import ShufflePlan, apply_plan
 
 __all__ = ["GatherStep", "EinsumStep", "LambdaStep", "Step",
            "StageProgram", "ExecProgram", "run_steps_reference",
-           "execute_program", "mask_frames", "INPUT"]
+           "execute_program", "mask_frames", "adjoint_gather_steps",
+           "INPUT"]
 
 INPUT = "input"     # the reserved graph-input name (SignalGraph.INPUT)
 
@@ -146,6 +148,34 @@ def run_steps_reference(steps: Sequence[Step], x: jax.Array,
         else:
             x = s.fn(params, x) if s.takes_params else s.fn(x)
     return x
+
+
+def adjoint_gather_steps(name: str, plan: ShufflePlan, n_in: int,
+                         diag=None) -> List[Step]:
+    """The adjoint of one fabric gather as a two-step program in THIS IR.
+
+    The forward pass is ``GatherStep(plan, diag)``: ``out = diag *
+    in[plan]`` with ``len(out) == plan.n_out`` and ``len(in) == n_in``.
+    Its linear transpose — the cotangent route ``d_out -> d_in`` — is
+    returned as ``[GatherStep, EinsumStep]`` over the *cotangent*
+    stream: gather the inverse index map (scatter-as-gather, PAD slots
+    contributing 0; see :func:`repro.core.fabric.adjoint_plan`), then
+    reduce the ``m`` duplicate-read slots per source element on the
+    computing array (``"...nm,m->...n"`` against a ones vector — a
+    width-``m`` GEMM row).
+
+    The returned steps run under :func:`run_steps_reference` (the
+    oracle) *and* lower through the same gather∘einsum kernel family as
+    any forward group, which is how the pallas backward pass stays on
+    the fabric+array machinery (kernels/shuffle_gemm/vjp.py).
+    """
+    adj, adj_diag, m = _fabric.adjoint_plan(plan, n_in, diag)
+    return [
+        GatherStep(f"{name}.adjoint", adj, adj_diag),
+        EinsumStep(f"{name}.reduce", "...nm,m->...n",
+                   np.ones(m, np.float32), reshape_in=(n_in, m),
+                   out_rank=1, rows=n_in, cin=m, cout=1),
+    ]
 
 
 def resolve_operand(step: EinsumStep, params):

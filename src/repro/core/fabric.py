@@ -29,7 +29,7 @@ from .shuffle_compiler import PAD, run_plan_via_isa
 __all__ = ["ShufflePlan", "PAD", "apply_plan", "apply_plan_np",
            "pad_plan_to_word", "concat_plans", "identity_plan",
            "fuse_plans", "tile_plan", "is_permutation", "is_identity",
-           "block_perm_tile", "compose_into_einsum"]
+           "block_perm_tile", "compose_into_einsum", "adjoint_plan"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -204,6 +204,62 @@ def compose_into_einsum(plan: ShufflePlan, diag,
         new_diag = sunk * (np.asarray(pre_diag) if pre_diag is not None
                            else 1.0)
     return fused, new_diag
+
+
+def adjoint_plan(plan: ShufflePlan, n_in: int, diag=None):
+    """Transpose of a gather, expressed as another gather
+    (scatter-as-gather).
+
+    The forward fabric pass computes ``out[p] = diag[p] * in[idx[p]]``
+    (pad lanes read a constant), so its linear transpose is the scatter
+    ``d_in[j] = sum_{p : idx[p] == j} diag[p] * d_out[p]``.  The fabric
+    has no scatter primitive — but a scatter with bounded multiplicity
+    IS a gather of the inverse index map followed by a width-``m``
+    reduction, where ``m`` is the largest read multiplicity of any
+    source element.  Returns ``(adj, adj_diag, m)``:
+
+      * ``adj`` — an ``(n_in * m,)`` plan over the forward *output*
+        space: row ``j`` gathers the (up to ``m``) forward positions
+        that read source ``j``, PAD-filled (pad value 0, so absent
+        slots contribute nothing to the reduction);
+      * ``adj_diag`` — the forward ``diag`` routed to the gathered
+        positions (``None`` when ``diag`` is ``None``);
+      * ``m`` — the reduction width: summing each row of the
+        ``(n_in, m)``-reshaped gathered cotangent yields ``d_in``.
+
+    Forward pad lanes are constants with zero cotangent flow; they
+    simply do not appear in ``adj``.  This is the core of the
+    shuffle-GEMM custom VJP (kernels/shuffle_gemm/vjp.py): the adjoint
+    runs on the very same gather∘einsum machinery as the forward —
+    the fabric is its own adjoint.
+    """
+    gi = np.asarray(plan.gather_idx)
+    valid = gi != PAD
+    pos = np.nonzero(valid)[0]
+    srcs = gi[valid].astype(np.int64)
+    if srcs.size and (int(srcs.min()) < 0 or int(srcs.max()) >= n_in):
+        raise ValueError(
+            f"plan reads indices outside [0, {n_in}): "
+            f"[{srcs.min()}, {srcs.max()}]")
+    order = np.argsort(srcs, kind="stable")
+    srcs, pos = srcs[order], pos[order]
+    counts = np.bincount(srcs, minlength=n_in)
+    m = max(int(counts.max()) if counts.size else 0, 1)
+    starts = np.zeros(n_in, np.int64)
+    np.cumsum(counts[:-1], out=starts[1:])
+    slot = np.arange(srcs.size, dtype=np.int64) - starts[srcs]
+    adj_gi = np.full((n_in, m), PAD, np.int32)
+    adj_gi[srcs, slot] = pos
+    adj = ShufflePlan(adj_gi.ravel(),
+                      np.zeros(n_in * m, np.float64), plan.width)
+    adj_diag = None
+    if diag is not None:
+        d = np.asarray(diag)
+        ad = np.zeros((n_in, m), d.dtype if d.dtype.kind == "f"
+                      else np.float64)
+        ad[srcs, slot] = d[pos]
+        adj_diag = ad.ravel()
+    return adj, adj_diag, m
 
 
 def pad_plan_to_word(plan: ShufflePlan) -> ShufflePlan:

@@ -26,7 +26,7 @@ from .flash_attention.ops import flash_attention
 
 __all__ = ["bitserial_matmul", "shuffle_gemm", "shuffle_gemm_grouped",
            "fft_stage", "fir_conv", "flash_attention",
-           "interpret_default"]
+           "interpret_default", "compiled_supported"]
 
 
 def interpret_default() -> bool:
@@ -58,3 +58,37 @@ def resolve_interpret(interpret):
 def default_interpret() -> bool:
     """Deprecated alias of :func:`interpret_default`."""
     return interpret_default()
+
+
+_COMPILED_SUPPORTED = None
+
+
+def compiled_supported() -> bool:
+    """True when this host's jax can lower Pallas kernels with
+    ``interpret=False`` (TPU / supported GPU; the CPU backend is
+    interpret-only in current jax releases).
+
+    Probed once with a trivial kernel and cached for the process.  The
+    ``--compiled`` bench sweeps and the ``compiled-kernels`` CI lane use
+    this to *record* "compiled unsupported" / skip-with-reason instead
+    of failing — green-but-honest — when ``REPRO_PALLAS_INTERPRET=0``
+    forces the compiled path on a host that cannot run it."""
+    global _COMPILED_SUPPORTED
+    if _COMPILED_SUPPORTED is None:
+        import jax
+        import jax.numpy as jnp
+        from jax.experimental import pallas as pl
+
+        def _copy(x_ref, o_ref):
+            o_ref[...] = x_ref[...]
+
+        try:
+            out = pl.pallas_call(
+                _copy,
+                out_shape=jax.ShapeDtypeStruct((8, 128), jnp.float32),
+                interpret=False)(jnp.zeros((8, 128), jnp.float32))
+            out.block_until_ready()
+            _COMPILED_SUPPORTED = True
+        except Exception:
+            _COMPILED_SUPPORTED = False
+    return _COMPILED_SUPPORTED

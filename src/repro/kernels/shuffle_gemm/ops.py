@@ -1,32 +1,25 @@
 """Public wrappers: run a compiled ShufflePlan + GEMM through the fused
-Pallas kernels.  Accepts the same ShufflePlan objects as core.fabric."""
+Pallas kernels.  Accepts the same ShufflePlan objects as core.fabric.
+
+Both ops carry a custom VJP (vjp.py): the transpose of a gather∘einsum
+group is another gather∘einsum group, so reverse-mode differentiation
+stays on the same fabric+kernel machinery — ``jax.grad`` through either
+op never leaves the array path.
+"""
 
 from __future__ import annotations
 
 from typing import Optional
 
 import jax
-import jax.numpy as jnp
-import numpy as np
 
 from ...core.fabric import ShufflePlan
-from .kernel import shuffle_gemm_blocks, shuffle_gemm_grouped_blocks
+from .vjp import gemm_call, grouped_call
 
 
 def _resolve_interpret(interpret: Optional[bool]) -> bool:
     from .. import resolve_interpret
     return resolve_interpret(interpret)
-
-
-def _plan_blocks(plan: ShufflePlan, diag, rows: int, dtype):
-    """Reshape a flat plan (+ optional diag scale) into the kernels'
-    (rows, t) row-major blocks."""
-    t = plan.n_out // rows
-    idx = np.asarray(plan.gather_idx, np.int32).reshape(rows, t)
-    pads = np.asarray(plan.pad_values).reshape(rows, t)
-    scale = None if diag is None else \
-        np.asarray(diag, dtype).reshape(rows, t)
-    return t, idx, pads, scale
 
 
 def shuffle_gemm(x: jax.Array, plan: ShufflePlan, w: jax.Array,
@@ -40,23 +33,12 @@ def shuffle_gemm(x: jax.Array, plan: ShufflePlan, w: jax.Array,
     optional per-element scale of the gathered stream (a GatherStep /
     EinsumStep ``diag``).  Returns (..., rows, n_out).  ``interpret=None``
     resolves via :func:`repro.kernels.interpret_default`.
+
+    Differentiable in ``x`` and ``w`` via a custom VJP whose backward
+    pass runs on the same kernels (see shuffle_gemm/vjp.py).
     """
-    t, idx, pads, scale = _plan_blocks(plan, diag, rows, x.dtype)
-    batch = x.shape[:-1]
-    xb = x.reshape(-1, x.shape[-1])
-    br_ = min(br, rows)
-    rem = (-rows) % br_
-    if rem:
-        idx = np.pad(idx, ((0, rem), (0, 0)), constant_values=0)
-        pads = np.pad(pads, ((0, rem), (0, 0)))
-        if scale is not None:
-            scale = np.pad(scale, ((0, rem), (0, 0)))
-    out = shuffle_gemm_blocks(
-        xb, jnp.asarray(idx), jnp.asarray(pads, dtype=x.dtype), w,
-        br=br_, interpret=_resolve_interpret(interpret),
-        scale=None if scale is None else jnp.asarray(scale))
-    out = out[:, :rows]
-    return out.reshape(*batch, rows, w.shape[-1])
+    return gemm_call(x, plan, w, rows, br,
+                     _resolve_interpret(interpret), diag)
 
 
 def shuffle_gemm_grouped(x: jax.Array, plan: ShufflePlan, w: jax.Array,
@@ -71,14 +53,8 @@ def shuffle_gemm_grouped(x: jax.Array, plan: ShufflePlan, w: jax.Array,
     x: (..., n_in); plan.n_out == reps * groups * nb * t;
     w: (groups, t, n_out).  Returns the flat (..., R * n_out) result in
     row order (the consuming einsum's natural layout).
+
+    Differentiable in ``x`` and ``w`` via a custom VJP (vjp.py).
     """
-    rows = reps * groups * nb
-    _, idx, pads, scale = _plan_blocks(plan, diag, rows, x.dtype)
-    batch = x.shape[:-1]
-    xb = x.reshape(-1, x.shape[-1])
-    out = shuffle_gemm_grouped_blocks(
-        xb, jnp.asarray(idx), jnp.asarray(pads, dtype=x.dtype), w,
-        reps=reps, groups=groups, nb=nb,
-        interpret=_resolve_interpret(interpret),
-        scale=None if scale is None else jnp.asarray(scale))
-    return out.reshape(*batch, rows * w.shape[-1])
+    return grouped_call(x, plan, w, reps, groups, nb,
+                        _resolve_interpret(interpret), diag)

@@ -11,8 +11,8 @@ renders a snapshot into the post-run serving report.
 
 Like the tracer, none of this is touched while observability is off:
 hot-path call sites guard with ``if obs.ENABLED:``.  Explicit
-always-on counters (e.g. ``graph.backend_rebind``) may use the registry
-directly — an increment is one dict lookup and an integer add.
+always-on counters may use the registry directly — an increment is one
+dict lookup and an integer add.
 """
 
 from __future__ import annotations

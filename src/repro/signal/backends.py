@@ -33,10 +33,17 @@ Two backends ship:
         is *emulated* on the reference path.
 
     Kernels run in interpret mode on CPU and compiled on real devices
-    (:func:`repro.kernels.interpret_default`, env-overridable).  Pallas
-    kernels do not define a reverse-mode transpose, so
-    ``CompiledSignalGraph.value_and_grad`` always differentiates through
-    the reference lowering (``ExecBackend.differentiable``).
+    (:func:`repro.kernels.interpret_default`, env-overridable).  Both
+    shuffle-GEMM kernels carry custom VJPs whose backward passes are
+    themselves gather∘einsum groups on the same kernels
+    (kernels/shuffle_gemm/vjp.py — the fabric is its own adjoint), and
+    int-routed steps take a documented straight-through / dequantized
+    gradient, so the backend is fully differentiable
+    (``ExecBackend.differentiable``) and
+    ``CompiledSignalGraph.value_and_grad`` trains on the array path.
+    Backends that set ``differentiable = False`` make
+    ``value_and_grad`` a hard error — training never silently changes
+    backend.
 
 :meth:`ExecBackend.bind` returns a :class:`BoundProgram` whose
 ``report()`` attributes every lowered step to its route — how many
@@ -59,6 +66,7 @@ import hashlib
 import math
 from typing import Callable, Dict, List, Mapping, Optional, Sequence, Tuple
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
@@ -334,10 +342,15 @@ class PallasBackend(ExecBackend):
     :func:`repro.kernels.interpret_default` at bind time (interpret on
     CPU/CI, compiled on devices); ``precision`` optionally int-routes
     named steps through :func:`repro.kernels.bitserial_matmul` (see
-    :class:`PrecisionPolicy`)."""
+    :class:`PrecisionPolicy`).
+
+    Differentiable: the shuffle-GEMM kernels carry custom VJPs that run
+    the backward pass on the same fabric+array machinery
+    (kernels/shuffle_gemm/vjp.py), and int-routed steps take the
+    straight-through / dequantized gradient (see :meth:`_int_unit`)."""
 
     name = "pallas"
-    differentiable = False
+    differentiable = True
 
     def __init__(self, interpret: Optional[bool] = None,
                  precision: Optional[PrecisionPolicy] = None):
@@ -474,9 +487,46 @@ class PallasBackend(ExecBackend):
     def _int_unit(self, e: EinsumStep, shape: _EinsumShape,
                   plan: ShufflePlan, diag, widths: Tuple[int, int],
                   interpret: bool):
+        """Int-routed GEMM with a straight-through / dequantized
+        gradient.
+
+        Forward: symmetric per-channel quantization, exact bitserial
+        integer contraction, dequantization.  ``round`` is
+        piecewise-constant — zero gradient almost everywhere — so
+        differentiating the literal forward would silently kill
+        training through any int-routed step.  The deliberate policy
+        (the straight-through estimator over the whole
+        quantize→matmul→dequantize block) is: the backward pass is the
+        float GEMM's VJP evaluated at the *unquantized* residuals, with
+        the upstream cotangent taken at the quantized output.
+        Equivalent formulation: ``y = y_float + stop_gradient(y_int -
+        y_float)`` — exactly what tests/test_pallas_vjp.py pins down.
+        """
         from ..kernels import bitserial_matmul
         aw, ww = widths
         post = e.post
+
+        def int_fwd(h, w):
+            xq, x_scale = bw.quantize(h, aw, axis=-1)
+            wq, w_scale = bw.quantize(w, ww, axis=0)
+            acc = bitserial_matmul(xq.astype(jnp.int32),
+                                   wq.astype(jnp.int32), aw, ww,
+                                   interpret=interpret)
+            return acc.astype(jnp.float32) * x_scale * w_scale
+
+        def st_fwd(h, w):
+            return int_fwd(h, w), (h, w)
+
+        def st_bwd(res, dy):
+            h, w = res
+            dh = jnp.einsum("...rc,tc->...rt", dy, w).astype(h.dtype)
+            hb = h.reshape(-1, *h.shape[-2:])
+            dyb = dy.reshape(-1, *dy.shape[-2:]).astype(h.dtype)
+            dw = jnp.einsum("brt,brc->tc", hb, dyb)
+            return dh, dw.astype(w.dtype)
+
+        int_op = jax.custom_vjp(int_fwd)
+        int_op.defvjp(st_fwd, st_bwd)
 
         def unit(x, sp):
             g = apply_plan(x, plan)
@@ -485,13 +535,7 @@ class PallasBackend(ExecBackend):
             h = g.reshape(*g.shape[:-1], shape.rows_total, shape.t)
             w = _operand_to_canonical(resolve_operand(e, sp), shape,
                                       jnp.float32)
-            xq, x_scale = bw.quantize(h, aw, axis=-1)
-            wq, w_scale = bw.quantize(w, ww, axis=0)
-            acc = bitserial_matmul(xq.astype(jnp.int32),
-                                   wq.astype(jnp.int32), aw, ww,
-                                   interpret=interpret)
-            y = (acc.astype(jnp.float32) * x_scale * w_scale
-                 ).astype(x.dtype)
+            y = int_op(h.astype(jnp.float32), w).astype(x.dtype)
             y = y.reshape(*y.shape[:-2], -1)
             return apply_plan(y, post) if post is not None else y
         return unit

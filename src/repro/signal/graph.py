@@ -96,11 +96,6 @@ __all__ = ["SignalGraph", "CompiledSignalGraph", "SigType", "FuseLevel",
            "GatherStep", "EinsumStep", "LambdaStep",
            "biquad_apply", "overlap_add", "mel_filterbank_matrix"]
 
-# backends already warned about for the value_and_grad reference
-# re-bind (one warning per backend name per process; tests clear it).
-_REBIND_WARNED: set = set()
-
-
 class FuseLevel(enum.IntEnum):
     """Fusion level of the graph compiler (see the module docstring).
 
@@ -593,7 +588,14 @@ class SignalGraph:
     def stft(self, name, inp=INPUT, frame=256, hop=128, window=True):
         """Hann-windowed STFT: real samples ``(..., T)`` -> complex frames
         ``(..., F, frame)`` with ``F = 1 + (T - frame) // hop``.
-        ``window=False`` frames without the Hann taper."""
+        ``window=False`` frames without the Hann taper.
+
+        ``window="learnable"`` registers the taper as a learnable
+        params-pytree entry (``{name: {"window": ...}}``, seeded with
+        the Hann taper by :meth:`CompiledSignalGraph.init_params`):
+        instead of baking the window into the framing gather's ``diag``,
+        it is applied as a per-frame elementwise array pass so the
+        window participates in autodiff — offline and streamed."""
         return self.add("stft", name, inp, frame=frame, hop=hop,
                         window=window)
 
@@ -618,7 +620,11 @@ class SignalGraph:
         Fig 3b).  ``phases > 1`` uses the multi-phase mapping that keeps
         all 8 PEs busy (offline only — streaming needs ``phases=1``).
         With ``phases=1`` the taps are a learnable params-pytree entry
-        (``{name: {"taps": ...}}``); the declared taps seed
+        (``{name: {"taps": ...}}``); with ``phases > 1`` the learnable
+        entry is the polyphase weight matrix (``{name: {"weights":
+        ...}}``, shape ``(win_len, phases)`` — the phase-interleaved
+        spreading of the taps, seeded from the declared taps).  Either
+        way the declared taps seed
         :meth:`CompiledSignalGraph.init_params`."""
         return self.add("fir", name, inp,
                         taps=np.asarray(taps, np.float64), phases=phases)
@@ -892,9 +898,23 @@ def _lower_stage(st: Stage, in_types: List[SigType], fuse: bool,
                 f"than the frame size {frame}")
         n_frames = 1 + (length - frame) // hop
         steps: List[Step] = []
-        win = np.tile(hann_window(frame), n_frames) if p["window"] else None
+        learnable_win = p["window"] == "learnable"
+        win = np.tile(hann_window(frame), n_frames) \
+            if (p["window"] and not learnable_win) else None
         steps.append(GatherStep(f"{st.name}.frame",
                                 _frame_plan(length, frame, hop, width), win))
+        if learnable_win:
+            # learnable taper: an elementwise per-frame array pass
+            # instead of a baked framing diag, so the window is a
+            # params entry ({name: {"window": ...}}) and autodiff sees
+            # it.  The spec has no contraction, so both backends run it
+            # on the (differentiable) jnp path.
+            steps.append(EinsumStep(
+                f"{st.name}.window", "...fw,w->...fw",
+                hann_window(frame).astype(np.float32),
+                reshape_in=(n_frames, frame), out_rank=2,
+                rows=n_frames * frame, cin=1, cout=1,
+                param_key="window"))
         steps.append(GatherStep(
             f"{st.name}.interleave",
             tile_plan(_interleave_plan(frame, width), n_frames, frame)))
@@ -1005,7 +1025,8 @@ def _lower_stage(st: Stage, in_types: List[SigType], fuse: bool,
                 GatherStep(f"{st.name}.window", plan.window),
                 EinsumStep(f"{st.name}.taps", "...ml,lp->...mp", W,
                            reshape_in=(n // phases, plan.win_len), out_rank=2,
-                           rows=n // phases, cin=plan.win_len, cout=phases)]
+                           rows=n // phases, cin=plan.win_len, cout=phases,
+                           param_key="weights")]
         else:
             plan = _cached_plan(
                 "fir", (n, taps, width),
@@ -1228,28 +1249,24 @@ class CompiledSignalGraph:
         hook.  ``has_aux`` follows ``jax.value_and_grad`` semantics for
         ``loss_fn`` returning ``(scalar, aux)``.
 
-        Differentiation always runs the ``reference`` lowering: Pallas
-        kernels define no reverse-mode transpose, so a program bound to
-        a non-differentiable backend (``backend.differentiable`` False)
-        is re-bound for the gradient path — train on the reference
-        program, serve on the array backend.  The re-bind warns once
-        per backend (it silently changes which kernels execute) and
-        bumps the ``graph.backend_rebind`` metrics counter."""
+        Differentiation runs on the *bound* backend: both ``reference``
+        and ``pallas`` differentiate (the shuffle-GEMM kernels carry
+        custom VJPs whose backward passes are gather∘einsum groups on
+        the same array machinery — kernels/shuffle_gemm/vjp.py), so
+        training and serving stay on one backend.  A backend declaring
+        ``differentiable = False`` is a hard error here: training must
+        never silently change which kernels execute — re-bind
+        explicitly with :meth:`with_backend` if that is what you want."""
         names = None if wrt is None else tuple(wrt)
-        if self.backend.differentiable:
-            run_graph = self
-        else:
-            from .. import obs
-            obs.get_registry().counter("graph.backend_rebind").inc()
-            if self.backend.name not in _REBIND_WARNED:
-                _REBIND_WARNED.add(self.backend.name)
-                warnings.warn(
-                    f"value_and_grad: backend {self.backend.name!r} is "
-                    f"not differentiable; re-binding this graph to the "
-                    f"'reference' backend for the gradient path (trained "
-                    f"parameters still serve on {self.backend.name!r})",
-                    UserWarning, stacklevel=2)
-            run_graph = self.with_backend("reference")
+        if not self.backend.differentiable:
+            raise ValueError(
+                f"value_and_grad: backend {self.backend.name!r} declares "
+                f"differentiable=False (its kernels define no "
+                f"reverse-mode transpose); refusing to silently change "
+                f"backends for the gradient path. Re-bind explicitly — "
+                f"e.g. compiled.with_backend('reference') or "
+                f"with_backend('pallas') — to pick the training backend.")
+        run_graph = self
 
         def split(params):
             params = dict(params) if isinstance(params, dict) else \

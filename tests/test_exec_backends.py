@@ -341,11 +341,15 @@ def test_classify_rejects_partial_out_rank():
     assert classify_einsum(dc.replace(step, out_rank=1)) is None
 
 
-def test_value_and_grad_rebinds_reference():
+def test_value_and_grad_runs_on_pallas_no_rebind():
+    """pallas differentiates in place (custom shuffle-GEMM VJPs): the
+    gradient fn runs on the pallas binding itself — no reference rebind
+    — and its grads match the reference backend to fp32 tolerance (the
+    fused kernels may re-associate multiplies)."""
     length = 512
     g = _fig9(length, taps=np.hanning(5) / 2.0)
     pal = g.compile(length, backend="pallas")
-    assert not pal.backend.differentiable
+    assert pal.backend.differentiable
     vag = pal.value_and_grad(
         lambda outs, t: jnp.mean((outs["out"] - t) ** 2), wrt=("front",))
     x = _x(length, seed=5)
@@ -353,9 +357,11 @@ def test_value_and_grad_rebinds_reference():
     ref_vag = g.compile(length).value_and_grad(
         lambda outs, t: jnp.mean((outs["out"] - t) ** 2), wrt=("front",))
     ref_loss, ref_grads = ref_vag(pal.init_params(), x, jnp.zeros_like(x))
-    np.testing.assert_array_equal(np.asarray(loss), np.asarray(ref_loss))
-    np.testing.assert_array_equal(np.asarray(grads["front"]["taps"]),
-                                  np.asarray(ref_grads["front"]["taps"]))
+    np.testing.assert_allclose(np.asarray(loss), np.asarray(ref_loss),
+                               rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(np.asarray(grads["front"]["taps"]),
+                               np.asarray(ref_grads["front"]["taps"]),
+                               rtol=1e-5, atol=1e-6)
 
 
 # --------------------------------------------------------------------------

@@ -1,16 +1,34 @@
-"""Pallas kernel sweeps (interpret mode) vs pure-jnp oracles."""
+"""Pallas kernel sweeps vs pure-jnp oracles.
+
+The kernels resolve interpret-vs-compiled via
+``repro.kernels.interpret_default`` (``REPRO_PALLAS_INTERPRET``
+overrides), so the ``compiled-kernels`` CI lane reruns this whole sweep
+with real Pallas lowering where the host supports it; on interpret-only
+jax backends (plain CPU wheels) the module skips with that reason.
+"""
+
+import os
 
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
 from repro.core import signal_mapping as sm
-from repro.kernels import bitserial_matmul, fft_stage, fir_conv, shuffle_gemm
+from repro.kernels import (bitserial_matmul, compiled_supported, fft_stage,
+                           fir_conv, shuffle_gemm)
 from repro.kernels.bitserial_mm.ref import ref_bitserial_matmul
 from repro.kernels.fft_stage.ops import fft_pallas
 from repro.kernels.fft_stage.ref import ref_fft_stage
 from repro.kernels.fir_conv.ref import ref_fir
 from repro.kernels.shuffle_gemm.ref import ref_shuffle_gemm
+
+_FORCED_COMPILED = os.environ.get(
+    "REPRO_PALLAS_INTERPRET", "").strip().lower() in ("0", "false", "no",
+                                                      "off")
+pytestmark = pytest.mark.skipif(
+    _FORCED_COMPILED and not compiled_supported(),
+    reason="REPRO_PALLAS_INTERPRET=0 forces compiled Pallas kernels, but "
+           "this host's jax backend is interpret-only (CPU)")
 
 
 @pytest.mark.parametrize("aw,ww", [(4, 4), (8, 4), (8, 8), (16, 8),

@@ -12,8 +12,8 @@ Covers the PR-6 acceptance invariants:
     core-call / DecodeWave spans and the occupancy + plan-cache counter
     tracks, and the rendered report's percentiles match the histograms
     they came from;
-  * ``value_and_grad`` on a non-differentiable backend warns once and
-    bumps the ``graph.backend_rebind`` counter.
+  * ``value_and_grad`` on a non-differentiable backend is a hard error
+    (no silent or warned rebind, no counter).
 """
 
 import json
@@ -299,31 +299,43 @@ def test_report_backend_routes_and_counters():
 
 
 # --------------------------------------------------------------------------
-# value_and_grad rebind warning
+# value_and_grad on a non-differentiable backend: hard error, no counter
 # --------------------------------------------------------------------------
 
-def test_value_and_grad_rebind_warns_once_and_counts():
-    import repro.signal.graph as graph_mod
+def test_value_and_grad_non_differentiable_hard_errors():
+    """Since the pallas kernels gained custom VJPs, no shipped backend
+    re-binds under ``value_and_grad`` — and a future backend declaring
+    ``differentiable = False`` must be a hard error, never a silent (or
+    warned) backend change.  The old ``graph.backend_rebind`` counter is
+    gone with the rebind path."""
     from repro.signal import SignalGraph
+    from repro.signal.backends import ReferenceBackend
 
-    graph_mod._REBIND_WARNED.clear()
-    g = SignalGraph("rebind")
+    class FrozenBackend(ReferenceBackend):
+        name = "frozen"
+        differentiable = False
+
+    g = SignalGraph("nodiff")
     g.fir("front", "input", taps=np.array([1.0, 0.0], np.float32))
     g.outputs("front")
-    c = g.compile(64, backend="pallas")
-    assert not c.backend.differentiable
+    c = g.compile(64, backend=FrozenBackend())
 
     def loss(outs, target):
         return jnp.mean((outs["front"] - target) ** 2)
 
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")       # no warning path anymore
+        with pytest.raises(ValueError, match="frozen.*differentiable"):
+            c.value_and_grad(loss, wrt=("front",))
+    counters = obs.get_registry().snapshot()["counters"]
+    assert "graph.backend_rebind" not in counters
+
+    # pallas itself differentiates — building and running the gradient
+    # fn on the pallas binding is warning-free and rebind-free.
+    cp = g.compile(64, backend="pallas")
+    assert cp.backend.differentiable
     x = jnp.zeros((1, 64), jnp.float32)
-    params = c.init_params()
-    with pytest.warns(UserWarning, match="pallas.*reference"):
-        vag = c.value_and_grad(loss, wrt=("front",))
-        vag(params, x, jnp.zeros_like(x))
-    # one-time: a second build must not warn again
     with warnings.catch_warnings():
         warnings.simplefilter("error")
-        c.value_and_grad(loss, wrt=("front",))
-    assert obs.get_registry().snapshot()[
-        "counters"]["graph.backend_rebind"] >= 1
+        vag = cp.value_and_grad(loss, wrt=("front",))
+        vag(cp.init_params(), x, jnp.zeros_like(x))
