@@ -21,11 +21,17 @@ binding: the learned Fig-9 forward pass and ``value_and_grad`` step on
 ``reference``, ``pallas-interpret`` and ``pallas-compiled`` (the Pallas
 kernels carry custom VJPs, so the whole step runs on the bound backend;
 interpret-only hosts record the compiled rows as ``unsupported``).
-``--json PATH`` writes the full table set as JSON (the CI smoke step
-uploads it); ``--smoke`` shrinks sizes/iters for CI.
+``--precision`` adds the SigQuant sweep: the Fig-9 pipeline with a
+block-circulant mask layer run fp32, under a uniform 8x8 hand policy,
+and under the calibrated auto policy (``repro.precision.auto_policy``) —
+reporting int-routed pass counts, end-to-end relative error, and the
+width-aware array-cycle estimate.  ``--json PATH`` writes the full table
+set as JSON (the CI smoke step uploads it); ``--smoke`` shrinks
+sizes/iters for CI.
 
     PYTHONPATH=src python -m benchmarks.signal_graph_bench [--smoke]
-        [--compiled] [--json artifacts/signal_graph_bench.json]
+        [--compiled] [--precision]
+        [--json artifacts/signal_graph_bench.json]
 """
 
 from __future__ import annotations
@@ -231,6 +237,77 @@ def grad_rows(length: int = 4096, batch: int = 4) -> List[Tuple]:
             ("fig9_learned", "value_and_grad", us_vag)]
 
 
+# -- precision sweep: fp32 vs hand policy vs calibrated (SigQuant) --------
+
+PRECISION_HEADER = ("graph,variant,int_routed,max_rel_err,est_cycles,"
+                    "us_per_call")
+
+
+def _fig9_quant(length):
+    from repro.signal import SignalGraph
+
+    g = SignalGraph("fig9_quant")
+    g.fir("front", "input", taps=np.hanning(9) / np.hanning(9).sum())
+    g.stft("spec", "front", frame=64, hop=32)
+    g.magnitude("mag", "spec", onesided=False)
+    g.dnn_circulant("mask", "mag", 64, block=4,
+                    activation=lambda v: jax.nn.sigmoid(v - 1.0))
+    g.mul("enh", "spec", "mask")
+    g.istft("out", "enh", hop=32, length=length)
+    g.outputs("out")
+    return g
+
+
+def _policy_cycles(compiled, policy) -> int:
+    """Perf-model estimate of the array-pass cycles under a policy:
+    rows x cin x cout MACs per GEMM step over the width-dependent
+    ``macs_per_cycle`` throughput ((16, 16) for the float route)."""
+    from repro.core import bitwidth as bw
+
+    total = 0
+    for e in compiled.einsum_steps():
+        widths = policy.widths.get(e.name) if policy is not None else None
+        aw, ww = widths if widths is not None else (16, 16)
+        macs = e.rows * e.cin * e.cout
+        total += int(-(-macs // bw.macs_per_cycle(aw, ww)))
+    return total
+
+
+def precision_rows(length: int = 4096, batch: int = 4,
+                   iters: int = 10, budget: float = 1e-2) -> List[Tuple]:
+    """(graph, variant, int_routed, max_rel_err, est_cycles, us_per_call)
+    for the Fig-9 enhancement pipeline with its mask as a block-circulant
+    layer: ``fp32`` (no policy), ``hand`` (uniform 8x8 on every GEMM
+    step), and ``calibrated`` (the SigQuant auto policy at ``budget``)."""
+    from repro import precision as pz
+    from repro.signal.backends import PallasBackend
+
+    g = _fig9_quant(length)
+    c = g.compile(length, backend="pallas")
+    rng = np.random.default_rng(0)
+    cal = [rng.standard_normal((batch, length)).astype(np.float32)
+           for _ in range(4)]
+    policy, record = pz.auto_policy(c, cal, budget=budget)
+    from repro.signal.backends import PrecisionPolicy
+    hand = PrecisionPolicy(widths={s: (8, 8) for s in policy.widths})
+
+    x = jnp.asarray(rng.standard_normal((batch, length)), jnp.float32)
+    fref = np.asarray(g.compile(length)(x)["out"])
+    out = []
+    for variant, pol in (("fp32", None), ("hand", hand),
+                         ("calibrated", policy)):
+        be = PallasBackend() if pol is None else PallasBackend(precision=pol)
+        cq = c.with_backend(be)
+        got = np.asarray(cq(x)["out"])
+        err = float(np.linalg.norm(got - fref) /
+                    max(np.linalg.norm(fref), 1e-12))
+        us = _bench(cq.jit(), x, None, iters=iters)
+        out.append((g.name, variant,
+                    cq.lowering_report()["array_passes"]["int_routed"],
+                    err, _policy_cycles(cq, pol), us))
+    return out
+
+
 # -- compiled-mode sweep: the training step per backend binding -----------
 
 COMPILED_HEADER = "graph,backend_mode,direction,us,note"
@@ -286,6 +363,10 @@ def main(argv=None) -> None:
                     help="add the per-backend-binding training-step "
                          "sweep (reference / pallas-interpret / "
                          "pallas-compiled, forward + value_and_grad)")
+    ap.add_argument("--precision", action="store_true",
+                    help="add the SigQuant sweep: fp32 vs uniform hand "
+                         "policy vs calibrated auto policy (error + "
+                         "estimated array cycles per variant)")
     ap.add_argument("--json", type=str, default=None,
                     help="write all tables as JSON to this path")
     args = ap.parse_args(argv)
@@ -323,6 +404,23 @@ def main(argv=None) -> None:
     for name, variant, us in grad:
         print(f"{name},{variant},{us:.1f}")
 
+    precision = []
+    if args.precision:
+        print()
+        precision = precision_rows(length, batch, iters)
+        print(PRECISION_HEADER)
+        for name, variant, n_int, err, cycles, us in precision:
+            print(f"{name},{variant},{n_int},{err:.2e},{cycles},{us:.1f}")
+        if args.smoke:
+            by = {r[1]: r for r in precision}
+            # the auto policy must cover every GEMM step and hold the
+            # budget — a solver or observer regression fails CI here.
+            assert by["fp32"][2] == 0
+            assert by["calibrated"][2] == by["hand"][2] > 0
+            assert by["calibrated"][3] <= 1e-2
+            # narrowing must pay: fewer estimated array cycles than fp32
+            assert by["calibrated"][4] < by["fp32"][4]
+
     compiled = []
     if args.compiled:
         print()
@@ -350,6 +448,8 @@ def main(argv=None) -> None:
             "multi_output": [dict(zip(MULTI_HEADER.split(","), r))
                              for r in multi],
             "grad": [dict(zip(GRAD_HEADER.split(","), r)) for r in grad],
+            "precision": [dict(zip(PRECISION_HEADER.split(","), r))
+                          for r in precision],
             "compiled": [dict(zip(COMPILED_HEADER.split(","),
                                   (*r[:3], None if np.isnan(r[3]) else r[3],
                                    r[4])))

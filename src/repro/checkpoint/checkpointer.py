@@ -51,16 +51,24 @@ class Checkpointer:
         os.makedirs(directory, exist_ok=True)
 
     # -- save ---------------------------------------------------------------
-    def save(self, step: int, tree: Any, blocking: bool = False) -> None:
+    def save(self, step: int, tree: Any, blocking: bool = False,
+             meta: Any = None) -> None:
+        """``meta`` optionally attaches a JSON-serializable sidecar to
+        the manifest (e.g. the structure encoding of a snapshot whose
+        tree mixes arrays with scalars/strings) — read back via
+        ``restore(..., with_meta=True)``."""
         self.wait()                       # one in-flight save at a time
         flat, treedef = _tree_paths(tree)
         host = [np.asarray(jax.device_get(x)) for x in flat]
+        user_meta = meta
         meta = {
             "step": step,
             "n_leaves": len(host),
             "leaves": [{"shape": list(a.shape), "dtype": str(a.dtype)}
                        for a in host],
         }
+        if user_meta is not None:
+            meta["meta"] = user_meta
 
         def write():
             final = os.path.join(self.directory, f"step_{step:06d}")
@@ -97,19 +105,29 @@ class Checkpointer:
                           ignore_errors=True)
 
     # -- restore ------------------------------------------------------------
-    def restore(self, like: Any, step: Optional[int] = None,
-                shardings: Any = None) -> Any:
+    def restore(self, like: Any = None, step: Optional[int] = None,
+                shardings: Any = None, with_meta: bool = False) -> Any:
         """Load step (default: latest) into the structure of ``like`` (a
         template pytree — shapes/dtypes validated against the manifest).
         ``shardings``: optional sharding pytree — the elastic-rescale path
-        (restore under any mesh shape)."""
+        (restore under any mesh shape).
+
+        ``like=None`` restores template-free: leaves come back as a flat
+        list in manifest order — the process-death path, where no live
+        object survives to serve as a template (the saver's ``meta``
+        sidecar typically carries the structure; ``with_meta=True``
+        returns ``(step, tree, meta)``)."""
         step = step if step is not None else latest_step(self.directory)
         if step is None:
             raise FileNotFoundError(f"no checkpoint in {self.directory}")
         d = os.path.join(self.directory, f"step_{step:06d}")
         with open(os.path.join(d, "manifest.json")) as f:
             meta = json.load(f)
-        treedef = jax.tree_util.tree_structure(like)
+        if like is None:
+            treedef = jax.tree_util.tree_structure(
+                [0] * meta["n_leaves"])
+        else:
+            treedef = jax.tree_util.tree_structure(like)
         if treedef.num_leaves != meta["n_leaves"]:
             raise ValueError(
                 f"checkpoint has {meta['n_leaves']} leaves, template "
@@ -128,4 +146,7 @@ class Checkpointer:
                       for a, s in zip(leaves, flat_sh)]
         else:
             leaves = [jax.numpy.asarray(a) for a in leaves]
-        return step, jax.tree_util.tree_unflatten(treedef, leaves)
+        tree = jax.tree_util.tree_unflatten(treedef, leaves)
+        if with_meta:
+            return step, tree, meta.get("meta")
+        return step, tree

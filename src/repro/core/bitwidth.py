@@ -19,6 +19,7 @@ paper mapped onto LLM weight quantization.
 
 from __future__ import annotations
 
+import math
 from typing import List, Tuple
 
 import jax
@@ -27,11 +28,33 @@ import numpy as np
 
 VALID_WIDTHS = (4, 8, 16)
 
+ACC_BITS = 31          # magnitude bits of the array's int32 accumulator
+
 
 def n_planes(width: int) -> int:
     if width not in VALID_WIDTHS:
         raise ValueError(f"width must be one of {VALID_WIDTHS}")
     return width // 4
+
+
+def int_headroom_bits(a_width: int, w_width: int, k: int) -> int:
+    """Accumulator magnitude bits a worst-case ``k``-term integer dot
+    product needs at ``(a_width, w_width)``: each quantized product is
+    ``< 2^(aw+ww-2)`` (symmetric quantization, ``|q| <= 2^(w-1)-1``) and
+    ``k`` of them sum per output, so the accumulation fits the int32
+    array accumulator iff this is ``<= ACC_BITS`` (31).  Shared by the
+    bind-time guard in :mod:`repro.signal.backends` and the SigQuant
+    width solver (:mod:`repro.precision`)."""
+    return a_width + w_width - 2 + math.ceil(math.log2(max(k, 1)))
+
+
+def max_contraction(a_width: int, w_width: int,
+                    acc_bits: int = ACC_BITS) -> int:
+    """Largest contraction size ``K`` the accumulator provably holds at
+    ``(a_width, w_width)`` — the worst-case inverse of
+    :func:`int_headroom_bits`.  The 4-bit activation edge: ``(4, 4)``
+    admits ``K = 2^25`` exactly; one more term can wrap."""
+    return 2 ** (acc_bits - (a_width + w_width - 2))
 
 
 def split_planes(x: jax.Array, width: int) -> List[jax.Array]:

@@ -77,6 +77,69 @@ def _to_host(out):
     return jax.tree_util.tree_map(np.asarray, out)
 
 
+def _ckpt_encode(obj, _leaves=None):
+    """Split a :meth:`SignalService.checkpoint` tree into a JSON-able
+    structure encoding plus a flat list of array leaves (what
+    :class:`~repro.checkpoint.Checkpointer` stores as ``leaf_*.npy``).
+    Handles the snapshot vocabulary: dicts (string-or-None keys), lists,
+    tuples, :class:`StreamState` pytrees, arrays, and JSON scalars.
+    Returns ``(encoding, leaves)``; inverse is :func:`_ckpt_decode`."""
+    top = _leaves is None
+    leaves = [] if top else _leaves
+    if isinstance(obj, StreamState):
+        enc = {"__k__": "state",
+               "pre": _ckpt_encode(list(obj.pre), leaves),
+               "post": _ckpt_encode(list(obj.post), leaves),
+               "buf": _ckpt_encode(obj.buf, leaves),
+               "tail": _ckpt_encode(obj.tail, leaves),
+               "counters": [int(obj.buf_start), int(obj.total),
+                            int(obj.f_next), int(obj.emitted),
+                            [int(d) for d in obj.batch_shape]]}
+    elif isinstance(obj, (np.ndarray, jax.Array)):
+        leaves.append(np.asarray(obj))
+        enc = {"__k__": "leaf", "i": len(leaves) - 1}
+    elif isinstance(obj, dict):
+        enc = {"__k__": "dict",
+               "items": [[k, _ckpt_encode(v, leaves)]
+                         for k, v in obj.items()]}
+    elif isinstance(obj, (list, tuple)):
+        enc = {"__k__": "list" if isinstance(obj, list) else "tuple",
+               "items": [_ckpt_encode(v, leaves) for v in obj]}
+    elif isinstance(obj, np.integer):
+        enc = int(obj)
+    elif isinstance(obj, np.floating):
+        enc = float(obj)
+    else:
+        enc = obj                       # int / float / str / bool / None
+    return (enc, leaves) if top else enc
+
+
+def _ckpt_decode(enc, leaves):
+    """Inverse of :func:`_ckpt_encode`."""
+    if isinstance(enc, dict) and "__k__" in enc:
+        k = enc["__k__"]
+        if k == "leaf":
+            return np.asarray(leaves[enc["i"]])
+        if k == "dict":
+            return {kk: _ckpt_decode(v, leaves)
+                    for kk, v in enc["items"]}
+        if k == "list":
+            return [_ckpt_decode(v, leaves) for v in enc["items"]]
+        if k == "tuple":
+            return tuple(_ckpt_decode(v, leaves) for v in enc["items"])
+        if k == "state":
+            c = enc["counters"]
+            return StreamState(
+                pre=tuple(_ckpt_decode(enc["pre"], leaves)),
+                post=tuple(_ckpt_decode(enc["post"], leaves)),
+                buf=_ckpt_decode(enc["buf"], leaves),
+                tail=_ckpt_decode(enc["tail"], leaves),
+                buf_start=c[0], total=c[1], f_next=c[2], emitted=c[3],
+                batch_shape=tuple(c[4]))
+        raise ValueError(f"unknown checkpoint node kind {k!r}")
+    return enc
+
+
 @dataclasses.dataclass
 class SignalRequest:
     rid: int
@@ -144,14 +207,29 @@ class SignalService:
                  bucketing: bool = True,
                  block_frames: int = 8,
                  backend="reference",
-                 mesh: "SignalMesh | int | None" = None):
-        from ..signal.backends import get_backend
+                 mesh: "SignalMesh | int | None" = None,
+                 precision=None):
+        from ..signal.backends import PallasBackend, get_backend
         self.batch_size = batch_size
         self.fuse = FuseLevel.coerce(fuse)
         # one execution backend per service: every bucket compile and
         # every streaming-session core call goes through it (same
         # ``backend=`` switch as SignalGraph.compile / StreamingRunner).
         self.backend = get_backend(backend)
+        if precision is not None:
+            # serve a calibrated program: rebuild the array backend with
+            # the policy.  The policy is part of the backend's
+            # ``cache_key``, so bucket compiles and streaming cores key
+            # on it — calibrated serving is bit-stable with offline and
+            # StreamingRunner execution under the same policy.
+            if not isinstance(self.backend, PallasBackend):
+                raise ValueError(
+                    f"SignalService(precision=...) needs the 'pallas' "
+                    f"backend (got {self.backend.name!r}); only the "
+                    f"array backend int-routes calibrated widths")
+            self.backend = PallasBackend(interpret=self.backend.interpret,
+                                         precision=precision)
+        self.precision = precision
         self.mesh = SignalMesh.coerce(mesh)
         self.router = DeviceRouter(self.mesh.n_shards) \
             if self.mesh is not None else None
@@ -167,6 +245,7 @@ class SignalService:
         self._seq = 0
         self._sessions: Dict[str, List["StreamSession"]] = {}
         self._sid = 0
+        self._ckpt_seq = 0            # next save_checkpoint step number
         # est_cycles accumulates the perf-model cost of every executed
         # batch (one-shot + streaming); the CoScheduler reads deltas for
         # its occupancy accounting.  wall_cycles is the sharded-aware
@@ -740,6 +819,49 @@ class SignalService:
         if self.router is not None and dc is not None \
                 and len(dc) == self.router.n_devices:
             self.router.device_cycles = [int(c) for c in dc]
+
+    def save_checkpoint(self, directory: str, step: Optional[int] = None,
+                        keep: int = 3, blocking: bool = True) -> int:
+        """Persist :meth:`checkpoint` to disk through
+        :class:`repro.checkpoint.Checkpointer` (atomic tmp+rename dirs,
+        COMMIT markers, keep-N retention) so streams survive process
+        death.  Snapshot dicts mix numpy arrays with strings / ints /
+        ``StreamState`` counters, so the arrays are stored as manifest
+        leaves and the surrounding structure rides the manifest's JSON
+        ``meta`` sidecar.  Returns the step number written."""
+        from ..checkpoint.checkpointer import Checkpointer
+        snap = self.checkpoint()
+        if step is None:
+            step = self._ckpt_seq
+        self._ckpt_seq = step + 1
+        enc, leaves = _ckpt_encode(snap)
+        t0 = obs.now() if obs.ENABLED else 0
+        Checkpointer(directory, keep=keep).save(step, leaves,
+                                                blocking=blocking,
+                                                meta=enc)
+        if obs.ENABLED:
+            obs.complete("SignalService", "save_checkpoint", t0,
+                         step=step, leaves=len(leaves),
+                         sessions=len(snap["sessions"]))
+        return step
+
+    def restore_from_disk(self, directory: str,
+                          step: Optional[int] = None) -> int:
+        """Template-free restore of :meth:`save_checkpoint` (default:
+        the latest committed step) — the process-death path: a fresh
+        service with the same graphs registered rebuilds every session
+        from disk, with the same exactly-once delivery merge as
+        :meth:`restore`.  Returns the step restored."""
+        from ..checkpoint.checkpointer import Checkpointer
+        step, leaves, enc = Checkpointer(directory).restore(
+            like=None, step=step, with_meta=True)
+        if enc is None:
+            raise ValueError(
+                f"checkpoint step {step} in {directory!r} has no "
+                f"structure sidecar; was it written by save_checkpoint?")
+        self.restore(_ckpt_decode(enc, [np.asarray(a) for a in leaves]))
+        self._ckpt_seq = max(self._ckpt_seq, step + 1)
+        return step
 
     def drop_device(self, index: int) -> None:
         """Simulated device loss: mark the shard dead in the router and

@@ -79,7 +79,8 @@ from ..core.fabric import (ShufflePlan, apply_plan, compose_into_einsum,
 
 __all__ = ["ExecBackend", "ReferenceBackend", "PallasBackend",
            "PrecisionPolicy", "BoundProgram", "StepRoute",
-           "register_backend", "get_backend", "available_backends"]
+           "register_backend", "get_backend", "available_backends",
+           "group_plan", "iter_step_groups", "classify_einsum"]
 
 
 # --------------------------------------------------------------------------
@@ -168,15 +169,23 @@ class PrecisionPolicy:
     default: Optional[Tuple[int, int]] = None
 
     def __post_init__(self):
-        for key, (aw, ww) in dict(self.widths).items():
-            if aw not in bw.VALID_WIDTHS or ww not in bw.VALID_WIDTHS:
-                raise ValueError(
-                    f"PrecisionPolicy widths for {key!r} must be from "
-                    f"{bw.VALID_WIDTHS}; got {(aw, ww)}")
+        # Collect every invalid entry before raising: a calibration- or
+        # hand-built table with several bad rows reports them all in one
+        # error instead of one per edit-rerun cycle.
+        problems = []
+        bad = [(key, (aw, ww)) for key, (aw, ww) in dict(self.widths).items()
+               if aw not in bw.VALID_WIDTHS or ww not in bw.VALID_WIDTHS]
+        if bad:
+            listing = "; ".join(f"{key!r}: {w}" for key, w in bad)
+            problems.append(
+                f"PrecisionPolicy widths for {listing} must be from "
+                f"{bw.VALID_WIDTHS}")
         if self.default is not None and (
                 self.default[0] not in bw.VALID_WIDTHS
                 or self.default[1] not in bw.VALID_WIDTHS):
-            raise ValueError(f"invalid default widths {self.default}")
+            problems.append(f"invalid default widths {self.default}")
+        if problems:
+            raise ValueError("; ".join(problems))
 
     def widths_for(self, stage: str,
                    step: str) -> Optional[Tuple[int, int]]:
@@ -281,6 +290,64 @@ def _operand_to_canonical(op_arr, shape: _EinsumShape, dtype):
     w = jnp.asarray(op_arr, dtype=dtype)
     w = jnp.transpose(w, shape.op_perm)
     return w.reshape(shape.op_shape)
+
+
+def group_plan(e: EinsumStep, gather: Optional[GatherStep]
+               ) -> Optional[Tuple[_EinsumShape, ShufflePlan, object]]:
+    """Classify a ``(gather?) ∘ einsum`` pair as one fused kernel group.
+
+    Returns ``(shape, plan, diag)`` — the canonical GEMM shape and the
+    single composed fabric plan the kernel gathers in VMEM — or ``None``
+    when the spec is outside the kernel family or the plan's output
+    length disagrees with the einsum's flat input.  This is the single
+    source of truth for *which* step groups lower onto the array: the
+    pallas backend's :meth:`PallasBackend._lower_group` and the SigQuant
+    calibration observer (:mod:`repro.precision`) both route through it,
+    so recorded ranges map one-to-one onto int-routable kernel calls."""
+    shape = classify_einsum(e)
+    if shape is None:
+        return None
+    n_in_flat = _prod(e.reshape_in)
+    # compose the standalone gather and the v2-folded stream-in shuffle
+    # into ONE plan the kernel gathers in VMEM.
+    if gather is not None:
+        plan, diag = compose_into_einsum(gather.plan, gather.diag,
+                                         e.pre, e.pre_diag)
+    elif e.pre is not None:
+        plan, diag = e.pre, e.pre_diag
+    else:
+        plan, diag = identity_plan(n_in_flat), e.pre_diag
+    if plan.n_out != n_in_flat:
+        return None
+    return shape, plan, diag
+
+
+def iter_step_groups(program: ExecProgram):
+    """Yield ``(stage_name, gather, einsum, shape, plan, diag)`` for
+    every step group the pallas backend would lower as one kernel call,
+    walking stages with exactly the pairing rule of
+    :meth:`PallasBackend.lower_stage`: an adjacent gather∘einsum pair
+    groups when :func:`group_plan` accepts it, otherwise the einsum is
+    tried alone.  The calibration observer iterates this to attach
+    range statistics to precisely the steps a :class:`PrecisionPolicy`
+    can name."""
+    for st in program.stages:
+        steps = st.steps
+        i = 0
+        while i < len(steps):
+            s = steps[i]
+            nxt = steps[i + 1] if i + 1 < len(steps) else None
+            if isinstance(s, GatherStep) and isinstance(nxt, EinsumStep):
+                g = group_plan(nxt, s)
+                if g is not None:
+                    yield (st.name, s, nxt, *g)
+                    i += 2
+                    continue
+            if isinstance(s, EinsumStep):
+                g = group_plan(s, None)
+                if g is not None:
+                    yield (st.name, None, s, *g)
+            i += 1
 
 
 # --------------------------------------------------------------------------
@@ -419,21 +486,10 @@ class PallasBackend(ExecBackend):
         """One fused kernel call for (gather?) ∘ einsum ∘ (post?), or
         None when the einsum spec is outside the kernel family (the
         caller then falls back to the reference path step by step)."""
-        shape = classify_einsum(e)
-        if shape is None:
+        g = group_plan(e, gather)
+        if g is None:
             return None
-        n_in_flat = _prod(e.reshape_in)
-        # compose the standalone gather and the v2-folded stream-in
-        # shuffle into ONE plan the kernel gathers in VMEM.
-        if gather is not None:
-            plan, diag = compose_into_einsum(gather.plan, gather.diag,
-                                             e.pre, e.pre_diag)
-        elif e.pre is not None:
-            plan, diag = e.pre, e.pre_diag
-        else:
-            plan, diag = identity_plan(n_in_flat), e.pre_diag
-        if plan.n_out != n_in_flat:
-            return None
+        shape, plan, diag = g
         widths = self.precision.widths_for(stage_name, e.name)
         if widths is not None and not shape.grouped:
             _check_int_headroom(e.name, widths, shape.t)
@@ -549,8 +605,8 @@ def _check_int_headroom(step_name: str, widths: Tuple[int, int],
     ``aw + ww - 2 + ceil(log2 k) <= 31``.  Failing loudly at bind time
     beats silently wrapped (sign-flipped) outputs."""
     aw, ww = widths
-    need = aw + ww - 2 + math.ceil(math.log2(max(k, 1)))
-    if need > 31:
+    need = bw.int_headroom_bits(aw, ww, k)
+    if need > bw.ACC_BITS:
         raise ValueError(
             f"PrecisionPolicy({aw}, {ww}) on step {step_name!r} with "
             f"contraction size {k} needs {need} accumulator bits and "

@@ -563,6 +563,7 @@ class SignalGraph:
         self._outputs: Optional[List[str]] = None
         self._plural = False          # True once outputs() was used
         self._taps: List[str] = []
+        self._deadlines: Dict[str, float] = {}
 
     @property
     def _output(self) -> Optional[str]:
@@ -679,12 +680,35 @@ class SignalGraph:
                         frame_context=frame_context, layers=tuple(layers),
                         init=init)
 
+    def dnn_circulant(self, name, inp, d_out, block=4, taps=None,
+                      activation=None):
+        """Block-circulant dense layer on the shared fabric + array path
+        (PAPERS.md "FFT-Based Deep Learning Deployment in Embedded
+        Systems"): the ``(d_out, d_in)`` weight matrix is constrained to
+        b×b circulant blocks — ``taps (d_out/b, d_in/b, b)`` parameters,
+        a b× reduction — and lowers as a duplicating im2col fabric plan
+        plus ONE row-uniform GEMM, so the DL matmul runs through the
+        same ``shuffle_gemm`` / ``bitserial_mm`` kernels as the DSP
+        stages (see :mod:`repro.precision.circulant` for the math and
+        why the time-domain form beats the FFT-domain one here).
+
+        Applies per frame along the last axis (framewise: streams with
+        zero frame context).  ``taps=None`` seeds deterministic
+        near-identity taps; the canonical GEMM operand is a learnable
+        params entry (``{name: {"weights": ...}}`` — learning it *is*
+        learning the taps).  ``activation`` optionally applies an
+        elementwise nonlinearity after the layer."""
+        return self.add("dnn_circulant", name, inp, d_out=int(d_out),
+                        block=int(block),
+                        taps=None if taps is None else np.asarray(taps),
+                        activation=activation)
+
     def overlap_add(self, name, inp, hop=128, length=None):
         """Overlap-add real frames ``(..., F, frame)`` back to samples at
         ``hop`` (the iSTFT tail without the inverse FFT)."""
         return self.add("overlap_add", name, inp, hop=hop, length=length)
 
-    def outputs(self, *names: str) -> None:
+    def outputs(self, *names: str, deadline=None) -> None:
         """Declare the graph outputs: plural, ordered, named.  The
         compiled graph returns an ordered ``dict`` mapping each name to
         its value (the SigProgram contract shared by offline execution,
@@ -692,7 +716,19 @@ class SignalGraph:
         :class:`~repro.serving.signal_service.SignalService` results).
         Stages feeding no declared output (or tap) are pruned from the
         compiled program; stages shared by several outputs are lowered
-        once."""
+        once.
+
+        ``deadline`` optionally attaches a latency hint in seconds —
+        either one float (applies to the first output) or a mapping
+        ``{output_name: seconds}``.  A deadline on a *deframed* (sample
+        -domain) output makes the streaming runtime emit a cheap early
+        tap: the framer stage joins the per-block frame taps, whose
+        rows finalize ``context`` frames in — far ahead of the
+        overlap-add stream's ``frame - hop + context*hop`` sample
+        latency (see
+        :meth:`~repro.signal.streaming.StreamStructure.output_latencies`).
+        Offline results are unchanged: the hint only shapes streaming
+        emission."""
         if not names:
             raise ValueError("outputs() needs at least one stage name")
         for n in names:
@@ -702,6 +738,15 @@ class SignalGraph:
             raise ValueError(f"duplicate output names in {names!r}")
         self._outputs = list(names)
         self._plural = True
+        self._deadlines = {}
+        if deadline is not None:
+            if isinstance(deadline, (int, float)):
+                deadline = {names[0]: float(deadline)}
+            for k, v in dict(deadline).items():
+                if k not in names:
+                    raise ValueError(
+                        f"deadline hint for non-output stage {k!r}")
+                self._deadlines[k] = float(v)
 
     def tap(self, stage: str) -> str:
         """Mark ``stage`` as a diagnostic tap: its value is appended to
@@ -1116,6 +1161,59 @@ def _lower_stage(st: Stage, in_types: List[SigType], fuse: bool,
         return None, [LambdaStep(f"{st.name}.model", fn,
                                  takes_params=True,
                                  param_init=p.get("init"))], t
+
+    if kind == "dnn_circulant":
+        # Block-circulant dense layer as a duplicating im2col gather +
+        # ONE row-uniform GEMM + a pure output permutation (folds into
+        # the einsum's post shuffle at fuse=2) — the DL matmul on the
+        # same kernels as every DSP stage.  Plan/operand math lives in
+        # repro.precision.circulant (imported lazily: precision sits
+        # above the signal package).
+        from ..precision.circulant import (circulant_gather_plan,
+                                           circulant_init,
+                                           circulant_operand,
+                                           circulant_post_plan)
+        _require_real(st, t)
+        rows, d_in = _rows_last(t)
+        b, d_out = p["block"], p["d_out"]
+        if b < 1 or d_in % b or d_out % b:
+            raise ValueError(
+                f"dnn_circulant {st.name!r} needs block | d_in and "
+                f"block | d_out; got block={b}, d_in={d_in}, "
+                f"d_out={d_out}")
+        nb_out = d_out // b
+        taps = p.get("taps")
+        if taps is None:
+            taps = circulant_init(d_in, d_out, b)
+        else:
+            taps = np.asarray(taps, np.float64)
+            if taps.shape != (nb_out, d_in // b, b):
+                raise ValueError(
+                    f"dnn_circulant {st.name!r} taps must have shape "
+                    f"{(nb_out, d_in // b, b)}; got {taps.shape}")
+        C = circulant_operand(taps)
+        g_plan = _cached_plan(
+            "circulant_im2col", (rows, d_in, b, width),
+            lambda: circulant_gather_plan(rows, d_in, b, width))
+        p_plan = _cached_plan(
+            "circulant_post", (rows, b, nb_out, width),
+            lambda: circulant_post_plan(rows, b, nb_out, width))
+        out_suffix = (*t.suffix[:-1], d_out)
+        steps = [
+            LambdaStep(f"{st.name}.flatten",
+                       lambda x: x.reshape(*x.shape[:-len(t.suffix)], -1)),
+            GatherStep(f"{st.name}.im2col", g_plan),
+            EinsumStep(f"{st.name}.gemm", "...rt,tj->...rj", C,
+                       reshape_in=(rows * b, d_in), out_rank=2,
+                       rows=rows * b, cin=d_in, cout=nb_out,
+                       param_key="weights"),
+            GatherStep(f"{st.name}.blockperm", p_plan),
+            LambdaStep(f"{st.name}.pack",
+                       lambda x: x.reshape(*x.shape[:-1], *out_suffix))]
+        act = p.get("activation")
+        if act is not None:
+            steps.append(LambdaStep(f"{st.name}.act", act))
+        return None, steps, dataclasses.replace(t, suffix=out_suffix)
 
     raise ValueError(f"unknown stage kind {kind!r}")
 

@@ -81,8 +81,8 @@ __all__ = ["StreamingRunner", "StreamState", "StreamStructure", "BlockSpec",
            "snapshot_state", "restore_state"]
 
 _SAMPLE_KINDS = ("fir", "iir_biquad")
-_FRAMEWISE_KINDS = ("dnn", "magnitude", "mel_filterbank", "mul", "dct",
-                    "fft", "ifft")
+_FRAMEWISE_KINDS = ("dnn", "dnn_circulant", "magnitude", "mel_filterbank",
+                    "mul", "dct", "fft", "ifft")
 
 
 # --------------------------------------------------------------------------
@@ -305,6 +305,11 @@ class StreamStructure:
     frame_outputs: List[str] = dataclasses.field(default_factory=list)
     chain_outputs: List[str] = dataclasses.field(default_factory=list)
     single: bool = True
+    # per-output deadline hints (seconds) from outputs(deadline=...),
+    # and the cheap early taps they induce: non-output stages added to
+    # frame_outputs so sessions emit them ahead of the deframed stream.
+    deadlines: Dict[str, float] = dataclasses.field(default_factory=dict)
+    early_taps: List[str] = dataclasses.field(default_factory=list)
 
     def __post_init__(self):
         if not self.outputs:
@@ -363,7 +368,8 @@ class StreamStructure:
                        framer=None, deframer=None, frame=0, hop=0,
                        context=0, out_length=None, output=cur,
                        outputs=out_names, frame_outputs=[],
-                       chain_outputs=list(out_names), single=single)
+                       chain_outputs=list(out_names), single=single,
+                       deadlines=dict(getattr(graph, "_deadlines", {})))
 
         framer = framers[0]
         deframer = deframers[0] if deframers else None
@@ -447,12 +453,25 @@ class StreamStructure:
                          if o in pre_names
                          or (o in post and o != primary)
                          or (o == deframer and post)]
+        deadlines = dict(getattr(graph, "_deadlines", {}))
+        early_taps: List[str] = []
+        if deadlines and deframer is not None and framer not in frame_outputs:
+            # a deadline on the deframed stream earns a cheap early tap:
+            # the framer joins the per-block frame taps (shared-prefix
+            # lowering — zero extra array work), whose rows finalize
+            # `context` frames in, far ahead of OLA sample finality.
+            deframed = [o for o in deadlines
+                        if o not in frame_outputs and o not in pre_names]
+            if deframed:
+                frame_outputs = frame_outputs + [framer]
+                early_taps.append(framer)
         return cls(graph, pre_names=pre_names, core_names=core_names,
                    post_names=post, framer=framer, deframer=deframer,
                    frame=frame, hop=hop, context=context,
                    out_length=out_length, output=primary,
                    outputs=out_names, frame_outputs=frame_outputs,
-                   chain_outputs=chain_outputs, single=single)
+                   chain_outputs=chain_outputs, single=single,
+                   deadlines=deadlines, early_taps=early_taps)
 
     # -- length bookkeeping (used by bucketed serving) ----------------------
     @property
@@ -507,6 +526,11 @@ class StreamStructure:
                 out[name] = {"domain": "samples",
                              "latency": (self.frame - self.hop
                                          + self.context * self.hop)}
+            if name in self.deadlines:
+                out[name]["deadline"] = self.deadlines[name]
+        for name in self.early_taps:
+            out[name] = {"domain": "frames", "latency": self.context,
+                         "early_tap": True}
         return out
 
     # -- per-block core graph (shared compile/jit cache) --------------------

@@ -65,3 +65,30 @@ def test_quantized_matmul_close():
     got = np.asarray(bw.quantized_matmul(x, wq, ws, a_width=8, w_width=8))
     rel = np.abs(got - np.asarray(x @ w)) / (np.abs(np.asarray(x @ w)) + 1.0)
     assert rel.mean() < 0.02
+
+
+def test_int_headroom_4bit_edge():
+    """4x4 products are 7-bit (two int4 extremes multiply to 2^6), so
+    the int32 accumulator admits exactly 2^25 MACs — one more overflows.
+    The headroom proof must be exact at that edge, not off by one."""
+    assert bw.max_contraction(4, 4) == 2 ** 25
+    assert bw.int_headroom_bits(4, 4, 2 ** 25) == bw.ACC_BITS
+    assert bw.int_headroom_bits(4, 4, 2 ** 25 + 1) == bw.ACC_BITS + 1
+    # the edge actually holds numerically: K extreme products sum exactly
+    # to the largest magnitude the proof admits, below int32 wrap
+    assert (2 ** 3) * (2 ** 3 - 1) * bw.max_contraction(4, 4) < 2 ** 31
+    # wider operands shrink the admissible contraction by the extra bits
+    assert bw.max_contraction(8, 8) == 2 ** 17
+    assert bw.max_contraction(16, 16) == 2 ** 1
+
+
+def test_policy_bind_rejects_4bit_overflow():
+    """Binding a (4, 4) policy to a GEMM whose contraction exceeds the
+    4-bit headroom is refused at lowering time with the overflow
+    message, before any kernel runs."""
+    from repro.signal.backends import _check_int_headroom
+
+    with pytest.raises(ValueError, match="overflow the int32"):
+        _check_int_headroom("front.taps", (4, 4), 2 ** 25 + 1)
+    # the exact edge passes
+    _check_int_headroom("front.taps", (4, 4), 2 ** 25)

@@ -1,0 +1,356 @@
+"""SigQuant end-to-end: the observer pass records exact-int range proofs
+for every GEMM-shaped step, the width solver auto-produces an
+overflow-guarded PrecisionPolicy meeting a per-output error budget, and
+calibrated graphs hold that budget offline, chunked through
+StreamingRunner, and served through SignalService — with the dnn stage
+riding the same shuffle-GEMM path via its block-circulant form."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from _hypothesis_compat import given, settings, st
+from repro import precision as pz
+from repro.signal import (PallasBackend, PrecisionPolicy, SignalGraph,
+                          StreamingRunner, clear_plan_caches,
+                          plan_cache_info)
+
+FRAME, HOP, LEN = 64, 32, 512
+BUDGET = 1e-2
+
+
+def _fig9q(length, fir=True, mel=False):
+    """Fig-9-class enhancement graph with the DL mask as a
+    block-circulant layer (all matmuls GEMM-shaped, none opaque)."""
+    g = SignalGraph("fig9q")
+    src = "input"
+    if fir:
+        g.fir("front", src, taps=np.hanning(9) / np.hanning(9).sum())
+        src = "front"
+    g.stft("spec", src, frame=FRAME, hop=HOP)
+    g.magnitude("mag", "spec", onesided=False)
+    g.dnn_circulant("mask", "mag", FRAME, block=4,
+                    activation=lambda v: jax.nn.sigmoid(v - 1.0))
+    g.mul("enh", "spec", "mask")
+    g.istft("out", "enh", hop=HOP, length=length)
+    outs = ["out"]
+    if mel:
+        g.magnitude("m2", "enh", onesided=True)
+        g.mel_filterbank("mel", "m2", sr=16_000, n_mels=12)
+        outs.append("mel")
+    g.outputs(*outs)
+    return g
+
+
+def _batches(n, length, batch=2, seed=0):
+    rng = np.random.default_rng(seed)
+    return [rng.standard_normal((batch, length)).astype(np.float32)
+            for _ in range(n)]
+
+
+def _int_steps(compiled):
+    return {r.step for r in compiled._exec.routes
+            if r.route == "int_bitserial"}
+
+
+def _rel_err(got, ref):
+    got, ref = np.asarray(got), np.asarray(ref)
+    return (np.linalg.norm(np.abs(got - ref)) /
+            max(np.linalg.norm(np.abs(ref)), 1e-12))
+
+
+@pytest.fixture(scope="module")
+def calibrated():
+    """One shared calibration of the Fig-9 graph (module-scoped: the
+    solver evaluates real pallas binds, so reuse it across tests)."""
+    c = _fig9q(LEN).compile(LEN, backend="pallas")
+    policy, record = pz.auto_policy(c, _batches(6, LEN), budget=BUDGET)
+    return c, policy, record
+
+
+# --------------------------------------------------------------------------
+# Observer pass
+# --------------------------------------------------------------------------
+
+def test_calibrate_records_every_gemm_step(calibrated):
+    c, _, record = calibrated
+    gemms = set(record.gemm_steps())
+    # every GEMM-shaped array pass, including the circulant dnn matmul
+    assert {"front.taps", "mask.gemm"} <= gemms
+    for name in gemms:
+        st_ = record.steps[name]
+        assert st_.batches == len(record.batches)
+        assert st_.a_max > 0 and st_.w_max > 0
+        assert st_.k >= 1 and st_.acc_norm > 0
+        assert st_.local_err            # per-ladder-pair fake-quant error
+    # complex / grouped steps are observed (ranges) but never solved
+    for name, st_ in record.steps.items():
+        if st_.is_complex or st_.grouped:
+            assert name not in gemms
+
+
+def test_calibrate_is_bit_transparent():
+    """The observer backend returns the reference result bit-for-bit —
+    calibration never perturbs the traffic it measures."""
+    c = _fig9q(LEN).compile(LEN)                  # reference backend
+    x = _batches(1, LEN, seed=5)[0]
+    ref = c(jnp.asarray(x))
+    record = pz.calibrate(c.with_backend("pallas"), [x], holdout=[x])
+    obs_out = record.compiled.with_backend(
+        pz.calibration._ObserverBackend(record, pz.LADDER))(jnp.asarray(x))
+    for name in c.outputs:
+        np.testing.assert_array_equal(np.asarray(obs_out[name]),
+                                      np.asarray(ref[name]))
+
+
+def test_calibrate_leaves_plan_cache_clean():
+    """Observer lowering must not pollute the kernel plan caches with an
+    'observe' backend label (the cache-label contract other tests pin)."""
+    clear_plan_caches()
+    c = _fig9q(LEN).compile(LEN, backend="pallas")
+    pz.calibrate(c, _batches(2, LEN))
+    assert set(plan_cache_info()["by_backend"]) <= {"pallas", "functional"}
+
+
+def test_calibrate_validates_batches():
+    c = _fig9q(LEN).compile(LEN, backend="pallas")
+    with pytest.raises(ValueError):
+        pz.calibrate(c, [])
+
+
+# --------------------------------------------------------------------------
+# Width solver
+# --------------------------------------------------------------------------
+
+def test_auto_policy_covers_all_gemms_and_meets_budget(calibrated):
+    c, policy, record = calibrated
+    # full coverage: every GEMM-shaped step got widths from the ladder
+    assert set(policy.widths) == set(record.gemm_steps())
+    for w in policy.widths.values():
+        assert w in pz.LADDER
+    # overflow proof from the recorded ranges (raises on violation)
+    record.assert_no_overflow(policy)
+    # held-out error budget
+    errs = pz.policy_errors(record, policy)
+    assert max(errs.values()) <= BUDGET
+    # and the bound program actually int-routes them all
+    cq = c.with_backend(PallasBackend(precision=policy))
+    assert _int_steps(cq) == set(policy.widths)
+    rep = cq.lowering_report()
+    assert rep["array_passes"]["int_routed"] == len(policy.widths)
+
+
+def test_solver_policy_matches_hand_policy_routes(calibrated):
+    """The solved per-step policy int-routes exactly the steps a
+    maximal hand policy (widest admissible widths per step) reaches —
+    the solver narrows widths, never the route coverage."""
+    c, policy, record = calibrated
+    hand = PrecisionPolicy(widths={
+        s: [w for w in pz.LADDER if record.steps[s].fits(w)][-1]
+        for s in policy.widths})
+    assert _int_steps(c.with_backend(PallasBackend(precision=hand))) \
+        == _int_steps(c.with_backend(PallasBackend(precision=policy)))
+
+
+def test_solver_prefers_narrow_widths(calibrated):
+    """Greedy narrow-then-repair starts at the cheap end of the ladder:
+    at a 1e-2 budget the Fig-9 steps settle below 16x16."""
+    _, policy, _ = calibrated
+    from repro.core import bitwidth as bw
+    assert any(bw.macs_per_cycle(*w) > bw.macs_per_cycle(16, 16)
+               for w in policy.widths.values())
+
+
+def test_solver_unmeetable_budget_raises(calibrated):
+    c, _, record = calibrated
+    with pytest.raises(ValueError, match="cannot meet"):
+        pz.solve_widths(record, budget=1e-9)
+
+
+def test_overflow_guard_rejects_bad_policy(calibrated):
+    """assert_no_overflow is computed from the *recorded ranges*, so a
+    hand policy too narrow for the observed traffic is refused even
+    when the static bit-count proof alone would pass."""
+    _, _, record = calibrated
+    name = sorted(record.gemm_steps())[0]
+    st_ = record.steps[name]
+    wide_k = pz.calibration.StepStats(
+        stage=st_.stage, step="fake.step", k=2 ** 26, rows=st_.rows,
+        grouped=False, reaches=st_.reaches)
+    wide_k.a_max = wide_k.w_max = 1.0
+    wide_k.h_l1 = wide_k.w_l1 = wide_k.acc_norm = float(2 ** 26)
+    wide_k.batches = 1
+    assert not wide_k.fits((4, 4))
+    assert not wide_k.fits((16, 16))
+    record.steps["fake.step"] = wide_k
+    try:
+        with pytest.raises(ValueError, match="overflow"):
+            record.assert_no_overflow(
+                PrecisionPolicy(widths={"fake.step": (16, 16)}))
+    finally:
+        del record.steps["fake.step"]
+
+
+# --------------------------------------------------------------------------
+# PrecisionPolicy validation reports every bad entry at once
+# --------------------------------------------------------------------------
+
+def test_policy_validation_reports_all_invalid_entries():
+    with pytest.raises(ValueError) as ei:
+        PrecisionPolicy(widths={"a.gemm": (3, 8), "b.gemm": (8, 7)},
+                        default=(5, 5))
+    msg = str(ei.value)
+    assert "a.gemm" in msg and "b.gemm" in msg
+    assert "must be from" in msg and "invalid default" in msg
+
+
+# --------------------------------------------------------------------------
+# Budget holds offline / streamed / served
+# --------------------------------------------------------------------------
+
+def test_budget_holds_streamed_and_served(calibrated):
+    from repro.serving import SignalService
+
+    c, policy, record = calibrated
+    x = _batches(1, LEN, batch=1, seed=9)[0][0]
+    fref = np.asarray(_fig9q(LEN).compile(LEN)(jnp.asarray(x))["out"])
+    cq = c.with_backend(PallasBackend(precision=policy))
+    assert _rel_err(cq(jnp.asarray(x))["out"], fref) <= BUDGET
+
+    r = StreamingRunner(_fig9q(None), backend=cq.backend)
+    acc = []
+    for lo in range(0, LEN, 128):
+        out = r.process(jnp.asarray(x[lo:lo + 128]))
+        if "out" in out:
+            acc.append(np.asarray(out["out"]))
+    out = r.flush()
+    if "out" in out:
+        acc.append(np.asarray(out["out"]))
+    streamed = np.concatenate(acc, axis=-1)
+    n = streamed.shape[-1]
+    assert _rel_err(streamed, fref[..., :n]) <= BUDGET
+
+    svc = SignalService(batch_size=4, backend="pallas", precision=policy)
+    svc.register("g", _fig9q(None))
+    sess = svc.open_stream("g")
+    outs = []
+    for lo in range(0, LEN, 192):
+        sess.feed(jnp.asarray(x[lo:lo + 192]))
+        svc.stream_step()
+        rd = sess.read()
+        if "out" in rd:
+            outs.append(np.asarray(rd["out"]))
+    fin = sess.close()
+    if "out" in fin:
+        outs.append(np.asarray(fin["out"]))
+    served = np.concatenate(outs, axis=-1)
+    m = served.shape[-1]
+    assert _rel_err(served, fref[..., :m]) <= BUDGET
+    # streamed and served share one compiled core (the policy is part
+    # of the backend cache key) — identical results, not just close
+    k = min(n, m)
+    np.testing.assert_array_equal(streamed[..., :k], served[..., :k])
+
+
+def test_service_precision_requires_pallas():
+    from repro.serving import SignalService
+
+    with pytest.raises(ValueError, match="pallas"):
+        SignalService(backend="reference",
+                      precision=PrecisionPolicy(default=(8, 8)))
+
+
+# --------------------------------------------------------------------------
+# Block-circulant dnn lowering
+# --------------------------------------------------------------------------
+
+def test_circulant_lowering_matches_dense_oracle():
+    rng = np.random.default_rng(3)
+    taps = rng.standard_normal((4, 2, 4)).astype(np.float32) * 0.3
+    W = pz.circulant_matrix(taps)                 # dense (16, 8) oracle
+    x = rng.standard_normal((5, 8)).astype(np.float32)
+
+    g = SignalGraph("circ")
+    g.dnn_circulant("y", "input", 16, block=4, taps=taps)
+    g.outputs("y")
+    for backend in ("reference", "pallas"):
+        got = np.asarray(g.compile(8, backend=backend)(jnp.asarray(x))["y"])
+        np.testing.assert_allclose(got, x @ W.T, rtol=1e-4, atol=1e-5)
+
+
+def test_circulant_helpers_roundtrip():
+    rng = np.random.default_rng(4)
+    taps = rng.standard_normal((3, 2, 4)).astype(np.float32)
+    C = pz.circulant_operand(taps)
+    assert C.shape == (8, 3)
+    np.testing.assert_array_equal(pz.circulant_taps(C, 4), taps)
+    # spectra: the FFT-domain view of the same parameters (PAPERS.md
+    # CirCNN lineage) — b spectra per block, no extra information
+    np.testing.assert_allclose(pz.circulant_spectra(taps),
+                               np.fft.fft(taps, axis=-1))
+    # projecting the dense oracle back recovers the taps exactly
+    np.testing.assert_allclose(
+        pz.circulant_project(pz.circulant_matrix(taps), 4), taps,
+        rtol=1e-6, atol=1e-6)
+
+
+def test_circulant_rejects_bad_block():
+    g = SignalGraph("bad")
+    g.dnn_circulant("y", "input", 16, block=5)
+    g.outputs("y")
+    with pytest.raises(ValueError, match="block"):
+        g.compile(8)
+
+
+def test_circulant_streams_framewise():
+    """dnn_circulant is framewise: it streams with zero frame context,
+    like the opaque dnn hook it replaces."""
+    from repro.signal import StreamStructure
+
+    g = _fig9q(None, fir=False)
+    s = StreamStructure.analyze(g)
+    assert s.context == 0
+
+
+# --------------------------------------------------------------------------
+# Property: random streamable graphs
+# --------------------------------------------------------------------------
+
+@settings(max_examples=3, deadline=None)
+@given(st.data())
+def test_auto_policy_random_streamable_graphs(data):
+    """Random Fig-9 variants: the solved policy always covers every
+    GEMM-shaped step, never overflows, and holds the budget offline and
+    chunked through StreamingRunner."""
+    fir = data.draw(st.sampled_from([True, False]), label="fir")
+    mel = data.draw(st.sampled_from([True, False]), label="mel")
+    seed = data.draw(st.integers(min_value=0, max_value=99), label="seed")
+    g = _fig9q(LEN, fir=fir, mel=mel)
+    c = g.compile(LEN, backend="pallas")
+    policy, record = pz.auto_policy(c, _batches(4, LEN, seed=seed),
+                                    budget=BUDGET)
+    assert set(policy.widths) == set(record.gemm_steps())
+    record.assert_no_overflow(policy)
+    assert max(pz.policy_errors(record, policy).values()) <= BUDGET
+
+    x = _batches(1, LEN, batch=1, seed=seed + 1)[0][0]
+    fref = _fig9q(LEN, fir=fir, mel=mel).compile(LEN)(jnp.asarray(x))
+    cq = c.with_backend(PallasBackend(precision=policy))
+    for name in c.outputs:
+        assert _rel_err(cq(jnp.asarray(x))[name],
+                        np.asarray(fref[name])) <= BUDGET
+
+    r = StreamingRunner(_fig9q(None, fir=fir, mel=mel),
+                        backend=cq.backend)
+    acc = []
+    for lo in range(0, LEN, 160):
+        out = r.process(jnp.asarray(x[lo:lo + 160]))
+        if "out" in out:
+            acc.append(np.asarray(out["out"]))
+    out = r.flush()
+    if "out" in out:
+        acc.append(np.asarray(out["out"]))
+    streamed = np.concatenate(acc, axis=-1)
+    n = streamed.shape[-1]
+    assert _rel_err(streamed, np.asarray(fref["out"])[..., :n]) <= BUDGET

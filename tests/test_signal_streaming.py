@@ -291,3 +291,62 @@ def test_shared_structure_core_cache_across_runners():
     r2.process(jnp.asarray(w))
     assert len(struct._core_cache) >= 1
     assert r1.struct is r2.struct
+
+
+# --------------------------------------------------------------------------
+# Per-output deadlines: early tap ahead of the deframed stream
+# --------------------------------------------------------------------------
+
+def _deadline_graph(deadline=None):
+    g = SignalGraph("dl")
+    g.stft("spec", frame=FRAME, hop=HOP)
+    g.dnn("mask", "spec", fn=lambda p, z: jax.nn.sigmoid(jnp.abs(z) - 1.0))
+    g.mul("enh", "spec", "mask")
+    g.istft("out", "enh", hop=HOP)
+    if deadline is None:
+        g.outputs("out")
+    else:
+        g.outputs("out", deadline=deadline)
+    return g
+
+
+def test_deadline_hint_adds_framer_tap():
+    """outputs(deadline=...) on a deframed output makes the analysis
+    surface the framer as a cheap frames-domain tap: frames flow with
+    zero frame latency while the overlap-add output trails by
+    frame - hop samples — the early signal a deadline consumer needs."""
+    from repro.signal import StreamStructure
+
+    s = StreamStructure.analyze(_deadline_graph(deadline=5e-3))
+    assert s.deadlines == {"out": 5e-3}
+    assert s.early_taps == ["spec"]
+    assert "spec" in s.frame_outputs
+    lat = s.output_latencies()
+    assert lat["out"]["deadline"] == 5e-3
+    assert lat["spec"] == {"domain": "frames", "latency": 0,
+                           "early_tap": True}
+
+    # a chunk emits tap frames ahead of the deframed samples
+    r = StreamingRunner(_deadline_graph(deadline=5e-3))
+    rng = np.random.default_rng(11)
+    got = r.process(jnp.asarray(
+        rng.standard_normal(4 * FRAME).astype(np.float32)))
+    n_frames = 1 + (4 * FRAME - FRAME) // HOP
+    assert got["spec"].shape == (n_frames, FRAME)
+    assert got["out"].shape[-1] < 4 * FRAME      # samples still trailing
+
+
+def test_deadline_free_graph_has_no_tap():
+    """No deadline -> no hidden extra outputs (regression guard: the
+    tap must never change deadline-free graph results)."""
+    from repro.signal import StreamStructure
+
+    s = StreamStructure.analyze(_deadline_graph())
+    assert s.deadlines == {} and s.early_taps == []
+    assert s.frame_outputs == []
+
+
+def test_deadline_validates_output_names():
+    g = _deadline_graph()
+    with pytest.raises(ValueError, match="non-output stage"):
+        g.outputs("out", deadline={"mask": 1e-3})
