@@ -13,6 +13,12 @@ requests against one :class:`CoScheduler` per policy, measuring
   * streaming sessions: N concurrent connections fed in lock-step, with
     the jitted-core-calls-per-tick ratio (<= 1 for same-graph sessions —
     the batched-chunk-step acceptance number);
+  * with ``--sched`` (implied by ``--smoke``): the SigSched sweep — an
+    identical mixed-deadline offered load driven through the bare
+    SignalService tick with the scheduler on vs off, reporting p50/p95
+    admission->emit latency (perf-model cycles) for the
+    deadline-bearing requests; ``--smoke`` asserts the scheduled p95
+    improves by >= 25% at equal throughput;
   * with ``--mesh 1,8``: the SigMesh sweep — the same drain through an
     unsharded and an N-sharded service, each shard count in its own
     subprocess with that many forced host devices, reporting p50/p95
@@ -47,7 +53,7 @@ import numpy as np
 FRAME, HOP, MAXLEN = 64, 32, 512
 POLICIES = ("round_robin", "latency_aware", "cost_balanced")
 DSP_TARGET = 0.5
-BENCH_SCHEMA_VERSION = 2       # v2: optional "mesh_sweep" section
+BENCH_SCHEMA_VERSION = 3       # v3: "sched_sweep" section (SigSched)
 
 
 def _graph():
@@ -181,6 +187,102 @@ def simulate_sessions(n_sessions: int, n_ticks: int,
         else 0.0,
         "samples_emitted": emitted,
     }
+
+
+def simulate_sched(sched_on: bool, windows: int, seed: int = 3) -> Dict:
+    """Mixed-deadline DSP offered load through the bare SignalService
+    tick, SigSched on vs off on the IDENTICAL request sequence.
+
+    Each window submits a burst of 8 loose (``deadline=inf``) requests
+    near the top bucket, split across two fingerprint-equal graphs, then
+    trickles 6 deadline-critical small requests while ticking — the
+    scheduler-off FIFO head-of-line blocks every tight request behind
+    the whole accumulated burst backlog; SigSched preempts with them
+    (EDF), batches the twin graphs' bursts into one wave (cross-graph),
+    and splits the bursts across ticks (``row_budget``) so tight
+    newcomers interleave.  The latency clock is ``est_cycles``
+    (perf-model cycles of executed work).  Total offered work is
+    identical by construction, so throughput (requests per est-cycle)
+    is equal on/off — only WHO waits changes, which is the point."""
+    import math
+    from repro.serving import SignalRequest, SignalService
+
+    svc = SignalService(
+        batch_size=8,
+        scheduler={"row_budget": 2} if sched_on else False)
+    svc.register("fig9a", _graph())
+    svc.register("fig9b", _graph())
+    rng = np.random.default_rng(seed)
+    arrive: Dict[int, int] = {}
+    done: Dict[int, int] = {}
+    tight: set = set()
+    rid = 0
+
+    def submit(length: int, deadline: float, graph: str) -> None:
+        nonlocal rid
+        now = svc.est_cycles
+        svc.submit(SignalRequest(
+            rid=rid, graph=graph, deadline=deadline,
+            samples=rng.standard_normal(length).astype(np.float32)))
+        arrive[rid] = now
+        if deadline < math.inf:
+            tight.add(rid)
+        rid += 1
+
+    def tick() -> None:
+        res = svc.step()
+        now = svc.est_cycles
+        for r in res:
+            done.setdefault(r, now)
+
+    for _ in range(windows):
+        for j in range(8):
+            submit(int(rng.integers(400, MAXLEN + 1)), math.inf,
+                   "fig9a" if j % 2 else "fig9b")
+        for j in range(6):
+            submit(int(rng.integers(FRAME, 200)),
+                   float(svc.est_cycles) + 1.0,
+                   "fig9a" if j % 2 else "fig9b")
+            tick()
+    while svc.pending():
+        tick()
+
+    lat_t = sorted(done[r] - arrive[r] for r in done if r in tight)
+    lat_all = sorted(done[r] - arrive[r] for r in done)
+
+    def pct(xs, p):
+        return float(xs[min(len(xs) - 1, int(p * len(xs)))]) if xs else 0.0
+
+    rec = {
+        "sched": "on" if sched_on else "off",
+        "windows": windows,
+        "completed": len(done),
+        "deadline_bearing": len(lat_t),
+        "p50_deadline_cycles": pct(lat_t, 0.50),
+        "p95_deadline_cycles": pct(lat_t, 0.95),
+        "p50_all_cycles": pct(lat_all, 0.50),
+        "p95_all_cycles": pct(lat_all, 0.95),
+        "est_cycles": svc.est_cycles,
+        "batches": svc.stats["batches"],
+    }
+    if svc.scheduler is not None:
+        s = svc.scheduler.stats
+        rec.update(cross_graph_batches=s["cross_graph_batches"],
+                   wave_splits=s["wave_splits"],
+                   deferrals=s["deferrals"],
+                   starvation_picks=s["starvation_picks"])
+    return rec
+
+
+SCHED_HEADER = ("sched,completed,deadline_bearing,p50_deadline,"
+                "p95_deadline,p50_all,p95_all,batches,est_cycles")
+
+
+def format_sched_row(r: Dict) -> str:
+    return (f"{r['sched']},{r['completed']},{r['deadline_bearing']},"
+            f"{r['p50_deadline_cycles']:.0f},{r['p95_deadline_cycles']:.0f},"
+            f"{r['p50_all_cycles']:.0f},{r['p95_all_cycles']:.0f},"
+            f"{r['batches']},{r['est_cycles']}")
 
 
 def simulate_mesh(n_shards: int, n_requests: int = 24,
@@ -321,6 +423,9 @@ def main(argv=None) -> None:
                     help="comma-separated shard counts to sweep in "
                          "forced-device subprocesses, e.g. --mesh 1,8 "
                          "(--smoke defaults to 1,8)")
+    ap.add_argument("--sched", action="store_true",
+                    help="mixed-deadline offered-load sweep, SigSched on "
+                         "vs off (implied by --smoke)")
     ap.add_argument("--mesh-inner", type=int, default=None,
                     help=argparse.SUPPRESS)   # subprocess entry point
     args = ap.parse_args(argv)
@@ -383,6 +488,32 @@ def main(argv=None) -> None:
             raise SystemExit("FAIL: sharded drain is not bit-identical "
                              "to the unsharded service")
 
+    sched_rows: List[Dict] = []
+    if args.sched or args.smoke:
+        print("\n" + SCHED_HEADER)
+        for on in (False, True):
+            r = simulate_sched(on, windows=8 if args.smoke else 30)
+            sched_rows.append(r)
+            print(format_sched_row(r))
+        off_r, on_r = sched_rows
+        p_off, p_on = (off_r["p95_deadline_cycles"],
+                       on_r["p95_deadline_cycles"])
+        imp = 1.0 - p_on / p_off if p_off else 0.0
+        print(f"\nsched p95 deadline latency improvement vs off: "
+              f"{imp:.1%} (throughput {on_r['completed']}/{off_r['completed']}"
+              f" requests in {on_r['est_cycles']}/{off_r['est_cycles']} "
+              f"cycles)")
+        if on_r["completed"] != off_r["completed"]:
+            raise SystemExit("FAIL: sched on/off completed different "
+                             "request counts")
+        if abs(on_r["est_cycles"] - off_r["est_cycles"]) > \
+                0.01 * off_r["est_cycles"]:
+            raise SystemExit("FAIL: sched on/off throughput mismatch "
+                             "(executed cycles diverged >1%)")
+        if args.smoke and imp < 0.25:
+            raise SystemExit("FAIL: SigSched improved deadline p95 by "
+                             f"{imp:.1%} < 25% vs scheduler-off")
+
     report = None
     if obs.ENABLED:
         # post-run observability artifacts: the latency/occupancy report
@@ -401,6 +532,8 @@ def main(argv=None) -> None:
                    "dsp_target": DSP_TARGET}
         if mesh_rows:
             payload["mesh_sweep"] = mesh_rows
+        if sched_rows:
+            payload["sched_sweep"] = sched_rows
         if report is not None:
             payload["report"] = report
         d = os.path.dirname(args.json)

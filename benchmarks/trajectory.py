@@ -18,6 +18,12 @@ CLI — used by CI and by hand after running the benches with ``--json``::
         --pr 6 --out BENCH_PR6.json \
         signal_graph_bench=artifacts/signal_graph_bench.json \
         signal_service_bench=artifacts/signal_service_bench.json
+
+and the cross-PR time-series view (:func:`timeseries`), one row per
+checked-in ``BENCH_PR*.json`` entry for a bench::
+
+    PYTHONPATH=src python -m benchmarks.trajectory timeseries \
+        signal_service_bench sched_sweep.1.p95_deadline_cycles
 """
 
 from __future__ import annotations
@@ -125,7 +131,67 @@ def compare(old: dict, new: dict, keys: List[str],
     return out
 
 
+def timeseries(entries: List[dict], bench: str,
+               keys: List[str]) -> List[dict]:
+    """Cross-PR time series of dotted metric paths for one bench: one
+    row per PR that checked in an entry, in PR order.  Missing keys
+    (schema drift across PRs) render as ``None``, never raise."""
+    rows = []
+    for e in entries:
+        if e["bench"] != bench:
+            continue
+        row: Dict = {"pr": e["pr"]}
+        for key in keys:
+            try:
+                row[key] = float(_lookup(e["metrics"], key))
+            except (KeyError, IndexError, TypeError, ValueError):
+                row[key] = None
+        rows.append(row)
+    return rows
+
+
+def format_timeseries(rows: List[dict], keys: List[str]) -> str:
+    """Fixed-width table of :func:`timeseries` rows."""
+    cols = ["pr"] + list(keys)
+    widths = {c: max(len(c), 12) for c in cols}
+    widths["pr"] = max(len("pr"), 4)
+
+    def cell(v):
+        if v is None:
+            return "-"
+        return f"{v:g}" if isinstance(v, float) else str(v)
+
+    lines = ["  ".join(c.rjust(widths[c]) for c in cols)]
+    for row in rows:
+        lines.append("  ".join(cell(row[c]).rjust(widths[c])
+                               for c in cols))
+    return "\n".join(lines)
+
+
+def _main_timeseries(argv) -> None:
+    ap = argparse.ArgumentParser(
+        prog="trajectory timeseries",
+        description="cross-PR time-series table for one bench's metrics")
+    ap.add_argument("bench", help="bench name, e.g. signal_service_bench")
+    ap.add_argument("keys", nargs="+",
+                    help="dotted metric paths, e.g. "
+                         "sched_sweep.1.p95_deadline_cycles")
+    ap.add_argument("--root", type=str, default=".",
+                    help="directory holding BENCH_PR*.json")
+    args = ap.parse_args(argv)
+    rows = timeseries(load_trajectory(args.root), args.bench, args.keys)
+    if not rows:
+        raise SystemExit(f"no trajectory entries for bench "
+                         f"{args.bench!r} under {args.root}")
+    print(format_timeseries(rows, args.keys))
+
+
 def main(argv=None) -> None:
+    import sys
+    argv = list(sys.argv[1:] if argv is None else argv)
+    if argv and argv[0] == "timeseries":
+        _main_timeseries(argv[1:])
+        return
     ap = argparse.ArgumentParser(description=__doc__.split("\n")[0])
     ap.add_argument("--pr", type=int, required=True)
     ap.add_argument("--out", type=str, required=True,

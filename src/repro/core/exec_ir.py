@@ -34,6 +34,9 @@ backend agrees on graph-level semantics by construction.
 from __future__ import annotations
 
 import dataclasses
+import functools
+import hashlib
+import types
 from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 import jax
@@ -46,7 +49,7 @@ from .fabric import ShufflePlan, apply_plan
 __all__ = ["GatherStep", "EinsumStep", "LambdaStep", "Step",
            "StageProgram", "ExecProgram", "run_steps_reference",
            "execute_program", "mask_frames", "adjoint_gather_steps",
-           "INPUT"]
+           "callable_token", "INPUT"]
 
 INPUT = "input"     # the reserved graph-input name (SignalGraph.INPUT)
 
@@ -189,6 +192,160 @@ def resolve_operand(step: EinsumStep, params):
 
 
 # --------------------------------------------------------------------------
+# Structural fingerprinting (cross-graph batching / compile-cache sharing)
+# --------------------------------------------------------------------------
+#
+# Two *registered* graphs frequently lower to the same core program —
+# same builder called twice, the same pipeline registered under two
+# serving names, A/B copies of one front-end.  Their compiled programs
+# are then interchangeable: identical step sequences, identical
+# operands, identical stage/output names.  ``ExecProgram.fingerprint``
+# digests exactly that content (everything execution depends on; the
+# program's *display name* is excluded) so schedulers and compile
+# caches can key on "same lowered program" instead of "same registry
+# name".  The hard part is lambdas: a LambdaStep's ``fn`` is hashed by
+# code-object content (filename, line, bytecode) plus the *values* of
+# its closure cells and defaults — ints, tuples, arrays, dataclasses
+# (SigType, ShufflePlan) and nested callables all tokenize.  Anything
+# opaque (an unhashable closure, a C extension object) makes the whole
+# fingerprint ``None``: the program is then simply never shared, which
+# is always safe.
+
+def _array_token(arr) -> Tuple:
+    a = np.ascontiguousarray(np.asarray(arr))
+    return ("arr", str(a.dtype), a.shape,
+            hashlib.sha1(a.tobytes()).hexdigest())
+
+
+def _plan_token(plan: Optional[ShufflePlan]):
+    if plan is None:
+        return ("c", "None")
+    return ("plan", _array_token(plan.gather_idx),
+            _array_token(plan.pad_values), int(plan.width))
+
+
+def _const_token(v):
+    """Content token of one closure-cell / default / const value, or
+    ``None`` when the value is opaque (disables fingerprint sharing)."""
+    if v is None or isinstance(v, (bool, int, float, complex, str,
+                                   bytes)):
+        return ("c", repr(v))
+    if isinstance(v, np.generic):
+        return ("c", repr(v))
+    if isinstance(v, ShufflePlan):
+        return _plan_token(v)
+    if isinstance(v, (np.ndarray, jax.Array)):
+        return _array_token(v)
+    if isinstance(v, (tuple, list)):
+        toks = tuple(_const_token(x) for x in v)
+        if any(t is None for t in toks):
+            return None
+        return ("seq", type(v).__name__, toks)
+    if isinstance(v, dict):
+        try:
+            items = sorted(v.items())
+        except TypeError:
+            return None
+        toks = tuple((repr(k), _const_token(x)) for k, x in items)
+        if any(t is None for _, t in toks):
+            return None
+        return ("map", toks)
+    if dataclasses.is_dataclass(v) and not isinstance(v, type):
+        toks = []
+        for f in dataclasses.fields(v):
+            t = _const_token(getattr(v, f.name))
+            if t is None:
+                return None
+            toks.append((f.name, t))
+        return ("dc", type(v).__name__, tuple(toks))
+    if callable(v):
+        return callable_token(v)
+    return None
+
+
+def _code_token(code) -> Tuple:
+    consts = []
+    for c in code.co_consts:
+        if isinstance(c, types.CodeType):
+            consts.append(_code_token(c))
+        else:
+            consts.append(repr(c))
+    return ("code", code.co_filename, code.co_firstlineno, code.co_name,
+            hashlib.sha1(code.co_code).hexdigest(), tuple(consts),
+            code.co_names)
+
+
+def callable_token(fn) -> Optional[Tuple]:
+    """A content-based identity token for a callable, or ``None`` when
+    one cannot be computed safely.
+
+    Plain Python functions token as (code location + bytecode digest,
+    closure-cell values, default values) — so two function objects from
+    the same ``def``/``lambda`` with equal captured values compare
+    equal, while same-source closures over *different* values do not.
+    ``functools.partial`` recurses; builtins / ufuncs token by
+    module-qualified name.  No ``id()`` is ever used: tokens stay valid
+    across garbage collection."""
+    if isinstance(fn, functools.partial):
+        ft = callable_token(fn.func)
+        at = _const_token(tuple(fn.args))
+        kt = _const_token(dict(fn.keywords))
+        if ft is None or at is None or kt is None:
+            return None
+        return ("partial", ft, at, kt)
+    code = getattr(fn, "__code__", None)
+    if code is None:
+        mod = getattr(fn, "__module__", None)
+        qn = getattr(fn, "__qualname__", None)
+        if mod and qn and "<locals>" not in qn:
+            return ("builtin", mod, qn)
+        return None
+    cell_toks = []
+    for cell in getattr(fn, "__closure__", None) or ():
+        try:
+            v = cell.cell_contents
+        except ValueError:            # empty cell (recursive def)
+            return None
+        t = _const_token(v)
+        if t is None:
+            return None
+        cell_toks.append(t)
+    dflt_toks = []
+    for v in getattr(fn, "__defaults__", None) or ():
+        t = _const_token(v)
+        if t is None:
+            return None
+        dflt_toks.append(t)
+    return ("fn", _code_token(code), tuple(cell_toks), tuple(dflt_toks))
+
+
+def _type_token(t) -> Tuple:
+    suffix = getattr(t, "suffix", ()) or ()
+    return ("type", getattr(t, "domain", None), tuple(suffix),
+            bool(getattr(t, "is_complex", False)),
+            getattr(t, "frame", None), getattr(t, "hop", None))
+
+
+def _step_token(s):
+    if isinstance(s, GatherStep):
+        return ("gather", s.name, _plan_token(s.plan),
+                _const_token(s.diag))
+    if isinstance(s, EinsumStep):
+        return ("einsum", s.name, s.spec, tuple(s.reshape_in),
+                s.out_rank, s.rows, s.cin, s.cout, s.param_key,
+                _array_token(s.operand), _plan_token(s.pre),
+                _const_token(s.pre_diag), _plan_token(s.post),
+                tuple(s.folded))
+    ft = callable_token(s.fn)
+    if ft is None:
+        return None
+    pi = _const_token(s.param_init)
+    if pi is None:
+        return None
+    return ("lambda", s.name, ft, bool(s.takes_params), pi)
+
+
+# --------------------------------------------------------------------------
 # Program containers
 # --------------------------------------------------------------------------
 
@@ -248,6 +405,56 @@ class ExecProgram:
             if keys:
                 slots[st.name] = tuple(keys)
         return slots
+
+    # -- structural identity (cross-graph batching / compile sharing) -------
+    def fingerprint(self) -> Optional[str]:
+        """Canonical structural digest of the program, or ``None`` when
+        one cannot be computed (an opaque lambda closure).
+
+        Covers everything execution depends on: stage names and DAG
+        wiring, every step's plans / operands / shapes / param slots,
+        combine and lambda callables by code + captured-value content,
+        output names and input/output types, and the fuse level.  The
+        program's display ``name`` is deliberately excluded — two
+        graphs registered under different serving names but lowering
+        to this same content are interchangeable: same results, same
+        params schema (params are keyed by stage name, which the
+        digest pins), same output dict keys.  That is the contract the
+        serving scheduler's cross-graph batching and the backends'
+        fingerprint-keyed bind cache rely on.
+
+        Computed once and cached on the instance (programs are frozen
+        after compile)."""
+        cached = getattr(self, "_fingerprint", False)
+        if cached is not False:
+            return cached
+        fp: Optional[str] = None
+        toks = self._fingerprint_tokens()
+        if toks is not None:
+            fp = hashlib.sha1(repr(toks).encode()).hexdigest()
+        self._fingerprint = fp
+        return fp
+
+    def _fingerprint_tokens(self) -> Optional[Tuple]:
+        stage_toks = []
+        for st in self.stages:
+            step_toks = []
+            for s in st.steps:
+                t = _step_token(s)
+                if t is None:
+                    return None
+                step_toks.append(t)
+            comb = ("c", "None") if st.combine is None \
+                else callable_token(st.combine)
+            if comb is None:
+                return None
+            stage_toks.append((st.name, tuple(st.inputs), comb,
+                               tuple(step_toks), _type_token(st.out_type)))
+        return (tuple(stage_toks), tuple(self.outputs),
+                _type_token(self.in_type),
+                tuple(sorted((k, _type_token(v))
+                             for k, v in self.out_types.items())),
+                bool(self.single), int(self.fuse_level))
 
 
 # --------------------------------------------------------------------------

@@ -336,6 +336,27 @@ def sharded_step_cost(per_item_cycles: int, batch: int,
     return max(device_step_costs(per_item_cycles, batch, n_devices))
 
 
+def wave_chunk_costs(per_item_cycles: int, rows: int,
+                     row_budget) -> List[int]:
+    """Per-tick cycle costs of one wave under a preemptible row budget:
+    a ``rows``-row wave above the budget splits into ``ceil(rows /
+    budget)`` chunks executed on successive scheduler ticks, each
+    costing its own row count (the last chunk is the remainder).
+    ``row_budget=None`` (or a budget covering the wave) is the
+    unsplit single-tick execution.  This is what the serving
+    scheduler's deferral threshold and the split-wave trace spans
+    report — total cycles are invariant under splitting; only the
+    per-tick granularity changes."""
+    rows = int(rows)
+    if rows <= 0:
+        return []
+    if row_budget is None or int(row_budget) >= rows:
+        return [int(per_item_cycles) * rows]
+    b = max(1, int(row_budget))
+    return [int(per_item_cycles) * min(b, rows - lo)
+            for lo in range(0, rows, b)]
+
+
 def step_cost_estimate_per_device(compiled, batch: int = 1,
                                   n_devices: int = 1, aw: int = 16,
                                   ww: int = 16,

@@ -28,13 +28,17 @@ _LAT_PREFIX = "service.latency_us."
 
 
 def build_report(scheduler=None, registry: Optional[MetricsRegistry] = None,
-                 dsp_target: Optional[float] = None) -> dict:
+                 dsp_target: Optional[float] = None,
+                 signals=None) -> dict:
     """Summarize a serving run.
 
     ``scheduler`` (a :class:`~repro.serving.CoScheduler`, optional)
     contributes the DSP/LLM occupancy split; ``dsp_target`` records the
-    cost_balanced target next to it.  Everything else comes from the
-    metrics registry snapshot and the signal plan cache.
+    cost_balanced target next to it.  ``signals`` (a
+    :class:`~repro.serving.SignalService`, optional) contributes its
+    SigSched dispatch counters — cross-graph hit rate, wave splits,
+    deferrals, promotions.  Everything else comes from the metrics
+    registry snapshot and the signal plan cache.
     """
     reg = registry or get_registry()
     snap = reg.snapshot()
@@ -80,6 +84,18 @@ def build_report(scheduler=None, registry: Optional[MetricsRegistry] = None,
             rep["occupancy"]["dsp_target"] = float(dsp_target)
             rep["occupancy"]["dsp_error"] = abs(occ["dsp_share"]
                                                 - float(dsp_target))
+    if signals is None and scheduler is not None:
+        signals = getattr(scheduler, "signals", None)
+    sig = getattr(signals, "scheduler", None) if signals is not None \
+        else None
+    if sig is not None:
+        sched = dict(sig.stats)
+        d = sched.get("dispatches", 0)
+        sched["cross_graph_hit_rate"] = \
+            sched.get("cross_graph_batches", 0) / d if d else 0.0
+        sched["row_budget"] = sig.row_budget
+        sched["backlog_rows"] = sig.backlog_rows()
+        rep["scheduler"] = sched
     return rep
 
 
@@ -107,6 +123,19 @@ def render_report(rep: dict) -> str:
                      + (f" target={occ['dsp_target']:.3f} "
                         f"error={occ['dsp_error']:.3f}"
                         if "dsp_target" in occ else ""))
+    sched = rep.get("scheduler")
+    if sched:
+        lines.append("-- SigSched dispatch --")
+        lines.append(
+            f"  dispatches={sched['dispatches']} "
+            f"cross_graph={sched['cross_graph_batches']} "
+            f"(hit_rate={sched['cross_graph_hit_rate']:.3f}) "
+            f"wave_splits={sched['wave_splits']}")
+        lines.append(
+            f"  deferrals={sched['deferrals']} "
+            f"promotions={sched['bucket_promotions']} "
+            f"starvation_picks={sched['starvation_picks']} "
+            f"backlog_rows={sched['backlog_rows']}")
     lines.append("-- plan cache (per backend) --")
     for be, b in sorted(rep.get("plan_cache", {}).items()):
         lines.append(f"  {be:<12} entries={b['entries']:<5} "

@@ -198,6 +198,7 @@ class _ObserverBackend(ExecBackend):
 
     name = "observe"
     differentiable = False
+    bind_cacheable = False      # stats land in THIS instance's record
 
     def __init__(self, record: CalibrationRecord,
                  ladder: Sequence[Tuple[int, int]] = LADDER):

@@ -1,5 +1,6 @@
 from .engine import DecodeWave, Request, ServingEngine
 from .quantized import dequantize_tree, quantize_tree
+from .scheduler import ExecGroup, SigSched, WaveState
 from .signal_mesh import DeviceRouter, SignalMesh
 from .signal_service import (CoScheduler, CostBalancedPolicy,
                              LatencyAwarePolicy, RoundRobinPolicy,
@@ -10,5 +11,6 @@ __all__ = ["ServingEngine", "Request", "DecodeWave",
            "quantize_tree", "dequantize_tree",
            "SignalService", "SignalRequest", "StreamSession", "CoScheduler",
            "SignalMesh", "DeviceRouter",
+           "SigSched", "WaveState", "ExecGroup",
            "SchedulePolicy", "RoundRobinPolicy", "LatencyAwarePolicy",
            "CostBalancedPolicy", "get_policy"]

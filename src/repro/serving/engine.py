@@ -40,6 +40,14 @@ class Request:
     done: bool = False
     deadline: float = math.inf     # scheduler hint (latency_aware policy)
 
+    def slack(self, now: float) -> float:
+        """Cycles of headroom before this request's deadline at virtual
+        time ``now`` (``inf`` for deadline-less requests) — the quantity
+        slack-aware scheduling compares against perf-model step costs
+        (:mod:`repro.serving.scheduler` uses the same convention for
+        DSP requests)."""
+        return self.deadline - now
+
 
 class ServingEngine:
     def __init__(self, bundle: ModelBundle, batch_size: int = 4,

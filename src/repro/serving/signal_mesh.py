@@ -83,6 +83,18 @@ class SignalMesh:
         even split NamedSharding row-partitioning needs)."""
         return max(1, math.ceil(rows / self.n_shards)) * self.n_shards
 
+    def align_row_budget(self, budget: Optional[int]) -> Optional[int]:
+        """A scheduler row budget rounded UP to a shard multiple (and
+        never below one full shard round).  Splitting a wave at a
+        non-multiple chunk size would add zero pad rows to EVERY chunk
+        — each shard would spend cycles computing padding on every
+        tick — so the preemptible scheduler aligns its chunks to the
+        shard width and pays the row padding at most once, on the
+        remainder chunk."""
+        if budget is None:
+            return None
+        return self.padded_rows(max(1, int(budget)))
+
     def row_sharding(self, shape) -> jax.sharding.NamedSharding:
         """NamedSharding splitting the leading (batch) axis over the
         mesh's data axes; replicates if the row count does not divide

@@ -48,6 +48,7 @@ tests/test_signal_bucketing.py).
 
 from __future__ import annotations
 
+import bisect
 import dataclasses
 import math
 from typing import Any, Callable, Dict, List, Optional, Tuple, Union
@@ -63,12 +64,33 @@ from ..signal.streaming import (StreamState, StreamStructure, commit_frames,
                                 ready_spec, restore_state, snapshot_state,
                                 take_block, tap_rows)
 from .engine import DecodeWave, Request, ServingEngine
+from .scheduler import SigSched
 from .signal_mesh import DeviceRouter, SignalMesh
 
 __all__ = ["SignalRequest", "SignalService", "StreamSession", "CoScheduler",
            "SchedulePolicy", "RoundRobinPolicy", "LatencyAwarePolicy",
            "CostBalancedPolicy", "get_policy", "TickPlan",
-           "SignalMesh", "DeviceRouter"]
+           "SignalMesh", "DeviceRouter", "SigSched"]
+
+
+def _params_equal(a, b) -> bool:
+    """True when two params pytrees are interchangeable for execution:
+    same structure, equal leaves (exact array equality — scheduling must
+    never change results, so 'close enough' is not equal)."""
+    if a is b:
+        return True
+    ta = jax.tree_util.tree_structure(a)
+    tb = jax.tree_util.tree_structure(b)
+    if ta != tb:
+        return False
+    la = jax.tree_util.tree_leaves(a)
+    lb = jax.tree_util.tree_leaves(b)
+    for x, y in zip(la, lb):
+        x, y = np.asarray(x), np.asarray(y)
+        if x.shape != y.shape or x.dtype != y.dtype \
+                or not np.array_equal(x, y):
+            return False
+    return True
 
 
 def _to_host(out):
@@ -208,7 +230,8 @@ class SignalService:
                  block_frames: int = 8,
                  backend="reference",
                  mesh: "SignalMesh | int | None" = None,
-                 precision=None):
+                 precision=None,
+                 scheduler: "SigSched | dict | bool | None" = None):
         from ..signal.backends import PallasBackend, get_backend
         self.batch_size = batch_size
         self.fuse = FuseLevel.coerce(fuse)
@@ -240,7 +263,9 @@ class SignalService:
         self._compiled: Dict[Tuple[str, int], CompiledSignalGraph] = {}
         self._jitted: Dict[Tuple[str, int], object] = {}
         self._masked_jitted: Dict[Tuple[str, int], object] = {}
+        self._vmap_jitted: Dict[Tuple, object] = {}
         self._cost_cache: Dict[Tuple[str, int], int] = {}
+        self._fp_cache: Dict[Tuple[str, int], Optional[Tuple]] = {}
         self._queue: List[SignalRequest] = []
         self._seq = 0
         self._sessions: Dict[str, List["StreamSession"]] = {}
@@ -258,7 +283,23 @@ class SignalService:
         self.stats = {"compiles": 0, "batches": 0, "bucketed": 0,
                       "exact": 0, "dropped": 0, "detached_sessions": 0,
                       "core_calls": 0, "flush_core_calls": 0,
-                      "stream_ticks": 0}
+                      "stream_ticks": 0, "bucket_overflow": 0,
+                      "param_splits": 0}
+        # the dispatch brain: SigSched decides which wave runs each
+        # step() tick (cross-graph batching, deadline-aware EDF,
+        # preemptible row budgets).  Default configuration reduces to
+        # the legacy FIFO pick when nothing carries a finite deadline.
+        # ``scheduler=False`` disables it (the pure pre-SigSched loop);
+        # a dict passes SigSched options; an instance is adopted.
+        if scheduler is False:
+            self.scheduler: Optional[SigSched] = None
+        elif scheduler is None or scheduler is True:
+            self.scheduler = SigSched(self)
+        elif isinstance(scheduler, dict):
+            self.scheduler = SigSched(self, **scheduler)
+        else:
+            scheduler.service = self
+            self.scheduler = scheduler
 
     # -- registry -----------------------------------------------------------
     def register(self, name: str, graph: SignalGraph, params=None) -> None:
@@ -278,15 +319,22 @@ class SignalService:
             del self._compiled[key]
             self._jitted.pop(key, None)
             self._masked_jitted.pop(key, None)
-        for key in [k for k in self._cost_cache
-                    if k[0] in (name, f"{name}//core")]:
-            del self._cost_cache[key]
+        for key in [k for k in self._vmap_jitted if k[0] == name]:
+            del self._vmap_jitted[key]
+        for cache in (self._cost_cache, self._fp_cache):
+            for key in [k for k in cache
+                        if k[0] in (name, f"{name}//core")]:
+                del cache[key]
         if replacing:
             stale = [r for r in self._queue if r.graph == name]
             for r in stale:
+                self._queue.remove(r)
+            if self.scheduler is not None:
+                # claimed split-wave rows live outside the queue
+                stale += self.scheduler.drop_graph(name)
+            for r in stale:
                 r.error = (f"graph {name!r} was re-registered while the "
                            f"request was queued; resubmit")
-                self._queue.remove(r)
             self.stats["dropped"] += len(stale)
             for sess in self._sessions.pop(name, []):
                 sess.closed = True
@@ -334,17 +382,25 @@ class SignalService:
     def bucket_for(self, name: str, length: int) -> Optional[int]:
         """The compile length serving a request of ``length`` samples:
         the smallest admissible bucket >= length (and >= the graph's
-        minimum input).  None => exact-length execution (bucketing off,
-        graph not maskable, or length above the largest pinned bucket)."""
+        minimum input), found by ``bisect`` over the sorted pinned
+        buckets.  None => exact-length execution (bucketing off, graph
+        not maskable, or length above the largest pinned bucket — the
+        overflow case counts in ``stats["bucket_overflow"]`` and the
+        ``service.bucket_overflow`` obs counter, since each one is a
+        separate exact-length compile the bucket config failed to
+        absorb)."""
         reg = self._graphs[name]
         if not self.bucketing or reg.struct is None:
             return None
         lo = max(length, reg.struct.min_length)
         if self.buckets is not None:
-            for b in self.buckets:
-                if b >= lo:
-                    return b
-            return None
+            i = bisect.bisect_left(self.buckets, lo)
+            if i == len(self.buckets):
+                self.stats["bucket_overflow"] += 1
+                if obs.ENABLED:
+                    obs.metrics().counter("service.bucket_overflow").inc()
+                return None
+            return self.buckets[i]
         b = 1
         while b < lo:
             b <<= 1
@@ -354,14 +410,33 @@ class SignalService:
         """The request's (graph, compile-length) batch key — computed
         once at submit and cached on the request (requests are immutable
         after submit, and re-registration drops queued requests rather
-        than re-keying them)."""
+        than re-keying them).  Caches ``req._bucketed`` alongside, so
+        the execution path never re-asks ``bucket_for`` (which would
+        double-count overflow)."""
         key = getattr(req, "_group_key", None)
         if key is None:
             length = int(np.asarray(req.samples).shape[-1])
             bucket = self.bucket_for(req.graph, length)
+            req._bucketed = bucket is not None
             key = (req.graph, bucket if bucket is not None else length)
             req._group_key = key
         return key
+
+    def exec_fingerprint(self, name: str,
+                         length: int) -> Optional[Tuple]:
+        """The structural compile-cache key of ``name``'s program at
+        ``length`` (:func:`repro.signal.backends.program_cache_key`):
+        what the scheduler's cross-graph batching groups by.  ``None``
+        when the program cannot be fingerprinted (opaque lambda closure
+        — such graphs batch per registry name, as before).  Compiles
+        the bucket on first use; cached until re-registration."""
+        key = (name, length)
+        if key not in self._fp_cache:
+            from ..signal.backends import program_cache_key
+            compiled = self.compiled_for(name, length)
+            self._fp_cache[key] = program_cache_key(self.backend,
+                                                    compiled.program)
+        return self._fp_cache[key]
 
     # -- queue --------------------------------------------------------------
     def submit(self, req: SignalRequest) -> None:
@@ -394,6 +469,8 @@ class SignalService:
         req.seq = self._seq
         self._seq += 1
         req._group_key = None          # (re-)keyed by THIS service's buckets
+        req._exec_key = None           # ditto for the scheduler's grouping
+        req._promoted_length = None
         self.group_key(req)
         self._queue.append(req)
         if obs.ENABLED:
@@ -403,7 +480,12 @@ class SignalService:
             m.gauge("service.queue_depth").set(len(self._queue))
 
     def pending(self) -> int:
-        return len(self._queue)
+        """Requests not yet completed: the live queue plus rows claimed
+        into the scheduler's partially-executed split waves."""
+        n = len(self._queue)
+        if self.scheduler is not None:
+            n += self.scheduler.backlog_rows()
+        return n
 
     def pending_groups(self) -> List[GroupInfo]:
         """Summaries of the queued batch groups, in FIFO order of their
@@ -467,28 +549,107 @@ class SignalService:
     def step(self, pick: Optional[Callable] = None) -> Dict[int, np.ndarray]:
         """Execute ONE batched graph call and return ``{rid: output}``.
 
-        ``pick`` selects the wave from the live queue (default: the
+        With no explicit ``pick``, the service's :class:`SigSched`
+        decides the wave (cross-graph batching by program fingerprint,
+        EDF with slack-aware deferral when finite deadlines are queued,
+        preemptible row budgets) — with the default configuration and no
+        deadlines anywhere this reduces exactly to the legacy pick: the
         oldest request's (graph, bucket) group in arrival order, up to
-        ``batch_size``) — admission is continuous, so requests submitted
-        after earlier steps join whichever wave their group forms next.
-        All requests in a wave share one compiled program; shorter
-        requests are zero-padded to the bucket and masked, and their
-        outputs trimmed back, equal to unpadded execution (bitwise
-        except FIR im2col GEMMs — see the module docstring).
+        ``batch_size``.  Passing ``pick`` (or ``scheduler=False`` at
+        construction) bypasses the scheduler entirely.  Admission is
+        continuous — requests submitted after earlier steps join
+        whichever wave their group forms next.  All requests in a wave
+        share one compiled program; shorter requests are zero-padded to
+        the bucket and masked, and their outputs trimmed back, equal to
+        unpadded execution (bitwise except FIR im2col GEMMs — see the
+        module docstring).  Scheduling changes WHEN a request computes,
+        never what it computes.
         """
+        if pick is None and self.scheduler is not None:
+            return self.scheduler.dispatch()
         if not self._queue:
             return {}
-        _t0 = obs.now() if obs.ENABLED else 0
         wave = (pick or self._fifo_pick)(list(self._queue))
         if not wave:
             return {}
+        return self._execute_wave(wave, self.group_key(wave[0])[1])
+
+    # -- wave execution (what SigSched dispatches into) ----------------------
+    def _params_classes(self, wave) -> List[Tuple[object, List[int]]]:
+        """Wave rows grouped by their graph's registered params —
+        identity first, then exact pytree equality.  One class ==
+        every row can share a single params argument."""
+        classes: List[Tuple[object, List[int]]] = []
+        for i, r in enumerate(wave):
+            p = self._graphs[r.graph].params
+            for cp, idxs in classes:
+                if _params_equal(cp, p):
+                    idxs.append(i)
+                    break
+            else:
+                classes.append((p, [i]))
+        return classes
+
+    @staticmethod
+    def _stackable(classes) -> bool:
+        """True when every params class shares one treedef with matching
+        leaf shapes/dtypes — the per-row ``vmap`` batching precondition."""
+        rep = classes[0][0]
+        td = jax.tree_util.tree_structure(rep)
+        sig = [(np.asarray(l).shape, np.asarray(l).dtype)
+               for l in jax.tree_util.tree_leaves(rep)]
+        for p, _ in classes[1:]:
+            if jax.tree_util.tree_structure(p) != td:
+                return False
+            if [(np.asarray(l).shape, np.asarray(l).dtype)
+                    for l in jax.tree_util.tree_leaves(p)] != sig:
+                return False
+        return True
+
+    def _execute_wave(self, wave: List[SignalRequest],
+                      length: int) -> Dict[int, np.ndarray]:
+        """Pad, stack, execute and trim one wave at compile ``length``.
+
+        This is the half of the old ``step`` below the pick — the
+        scheduler dispatches into it (possibly with a wave mixing
+        requests from different fingerprint-equal graphs, or a chunk of
+        a split wave whose siblings already ran).  Requests still in
+        the queue are claimed here; rows keep their own true lengths,
+        so masks and trims are identical however the wave was formed.
+        Waves mixing rows whose registered params differ execute
+        per-row-batched (one jitted ``vmap`` over a stacked params
+        pytree) when the pytrees stack, else split into one sub-call
+        per params class (``stats["param_splits"]``)."""
+        _t0 = obs.now() if obs.ENABLED else 0
         for r in wave:
-            self._queue.remove(r)
-        name, length = self.group_key(wave[0])
+            try:
+                self._queue.remove(r)
+            except ValueError:
+                pass                   # claimed earlier into a split wave
+        name = wave[0].graph
         reg = self._graphs[name]
         compiled = self.compiled_for(name, length)
+        key = (name, length)
         lens = [int(r.samples.shape[-1]) for r in wave]
         padded = any(t != length for t in lens)
+        bucketed = any(getattr(r, "_bucketed", False) for r in wave)
+        masked = padded or (reg.struct is not None
+                            and reg.struct.framer is not None
+                            and bucketed)
+        classes = self._params_classes(wave)
+        if len(classes) > 1 and (self.mesh is not None
+                                 or not self._stackable(classes)):
+            # mismatched params pytrees (or a mesh, whose row sharding
+            # the per-row vmap path does not thread): one sub-call per
+            # params class — the same batched lowering as per-graph
+            # dispatch, so trivially exact.
+            self.stats["param_splits"] += len(classes) - 1
+            results: Dict[int, np.ndarray] = {}
+            for _, idxs in classes:
+                results.update(
+                    self._execute_wave([wave[i] for i in idxs], length))
+            return results
+
         # on a mesh the row count pads to a shard multiple so the
         # NamedSharding row partition is even; pad rows are zeros (a
         # valid, row-independent input) and nothing reads their output.
@@ -499,7 +660,6 @@ class SignalService:
             stack[i, : lens[i]] = r.samples
         batch = self.mesh.shard(stack) if self.mesh is not None \
             else jnp.asarray(stack)
-        key = (name, length)
         if obs.ENABLED:
             # pad waste: the fraction of the stacked (batch, bucket)
             # array that is zero padding past each row's true length.
@@ -512,40 +672,72 @@ class SignalService:
         else:
             _t1 = _t0
 
-        if padded or (reg.struct is not None
-                      and reg.struct.framer is not None
-                      and self.bucket_for(name, length) is not None):
-            out = self._run_masked(key, compiled, reg, batch, lens)
-            self.stats["bucketed"] += 1
-            masked = True
+        if len(classes) > 1:
+            out = self._run_per_row_params(key, compiled, reg, batch,
+                                           lens, wave, masked)
+        elif masked:
+            out = self._run_masked(key, compiled, reg, batch, lens,
+                                   classes[0][0])
         else:
             if key not in self._jitted:
                 self._jitted[key] = compiled.jit()
-            out = _to_host(self._jitted[key](batch, reg.params))
-            self.stats["exact"] += 1
-            masked = False
+            out = _to_host(self._jitted[key](batch, classes[0][0]))
+        self.stats["bucketed" if masked else "exact"] += 1
 
         self.stats["batches"] += 1
         self.est_cycles += self.group_cost(key, batch=len(wave))
         self.wall_cycles += self._charge_devices(self.group_cost(key),
                                                  len(wave))
-        results: Dict[int, np.ndarray] = {}
+        results = {}
         for i, r in enumerate(wave):
             r.done = True
-            results[r.rid] = self._request_result(compiled, reg, out, i,
-                                                  lens[i])
+            results[r.rid] = self._request_result(
+                compiled, self._graphs[r.graph], out, i, lens[i])
         if obs.ENABLED:
             obs.complete(f"graph/{name}", "core_call", _t1,
-                         bucket=length, batch=len(wave), masked=masked)
-            self._record_emits(name, compiled, wave)
+                         bucket=length, batch=len(wave), masked=masked,
+                         graphs=sorted({r.graph for r in wave}))
+            self._record_emits(compiled, wave)
         return results
 
-    def _record_emits(self, name: str, compiled, wave) -> None:
+    def _run_per_row_params(self, key, compiled, reg, batch, lens, wave,
+                            masked):
+        """Cross-graph wave whose member graphs registered DIFFERENT
+        params: one jitted ``vmap`` over (row, valid_frames, per-row
+        params) — each row computes with its own graph's params, in one
+        launch.  ``vmap`` of the row program over the batch axis lowers
+        to the same batched einsums as the shared-params call, so
+        results stay within the bucketing exactness contract (asserted
+        bit-exact for the streamable graph class in
+        tests/test_scheduler.py)."""
+        row_params = [self._graphs[r.graph].params for r in wave]
+        pstack = jax.tree_util.tree_map(
+            lambda *xs: jnp.stack([jnp.asarray(x) for x in xs]),
+            *row_params)
+        struct = reg.struct
+        mask = masked and struct is not None and struct.framer is not None
+        vkey = (*key, mask)
+        if vkey not in self._vmap_jitted:
+            if mask:
+                def call(x, vf, p):
+                    return compiled(x, p, valid_frames=vf)
+            else:
+                def call(x, p):
+                    return compiled(x, p)
+            self._vmap_jitted[vkey] = jax.jit(jax.vmap(call))
+        if mask:
+            vf = jnp.asarray([struct.valid_frames(t) for t in lens],
+                             jnp.int32)
+            return _to_host(self._vmap_jitted[vkey](batch, vf, pstack))
+        return _to_host(self._vmap_jitted[vkey](batch, pstack))
+
+    def _record_emits(self, compiled, wave) -> None:
         """Admission->emit latency per request, attributed per graph and
         (for multi-output SigPrograms) per output — all of a request's
         outputs emit on the same step, so the per-output series differ
         only once per-output deadlines/taps emit at different times
-        (the streaming path)."""
+        (the streaming path).  Cross-graph waves attribute each row to
+        its own registered graph name."""
         m = obs.metrics()
         m.gauge("service.queue_depth").set(len(self._queue))
         t_now = obs.now()
@@ -556,11 +748,11 @@ class SignalService:
             if t_adm is None:
                 continue
             lat_us = (t_now - t_adm) / 1e3
-            m.histogram(f"service.latency_us.{name}").record(lat_us)
+            m.histogram(f"service.latency_us.{r.graph}").record(lat_us)
             if len(outs) > 1:
                 for o in outs:
                     m.histogram(
-                        f"service.latency_us.{name}/{o}").record(lat_us)
+                        f"service.latency_us.{r.graph}/{o}").record(lat_us)
 
     def _request_result(self, compiled, reg, out, i, true_len):
         """Row ``i``'s result, trimmed back to the request's true
@@ -581,7 +773,8 @@ class SignalService:
         return {name: trim(np.asarray(out[name])[i], name)
                 for name in compiled.outputs}
 
-    def _run_masked(self, key, compiled, reg, batch, lens) -> np.ndarray:
+    def _run_masked(self, key, compiled, reg, batch, lens,
+                    params) -> np.ndarray:
         """Masked/padded execution: valid-frame counts per row are traced
         so one compile serves every length mix in the bucket."""
         struct = reg.struct
@@ -590,7 +783,7 @@ class SignalService:
             # valid prefix, so padding needs no masking — only trimming.
             if key not in self._jitted:
                 self._jitted[key] = compiled.jit()
-            return _to_host(self._jitted[key](batch, reg.params))
+            return _to_host(self._jitted[key](batch, params))
         if key not in self._masked_jitted:
             self._masked_jitted[key] = compiled.masked_jit()
         # sharded batches carry zero pad rows past the wave: 0 valid
@@ -599,7 +792,7 @@ class SignalService:
         counts = [struct.valid_frames(t) for t in lens]
         counts += [0] * (batch.shape[0] - len(counts))
         vf = jnp.asarray(counts, jnp.int32)
-        return _to_host(self._masked_jitted[key](batch, vf, reg.params))
+        return _to_host(self._masked_jitted[key](batch, vf, params))
 
     def serve(self, requests: List[SignalRequest]) -> Dict[int, np.ndarray]:
         """Drain a request list without an LLM co-tenant."""
@@ -651,69 +844,98 @@ class SignalService:
 
     def stream_step(self) -> int:
         """Advance all streaming sessions by at most one block each.
-        Ready blocks of same-graph sessions with matching shapes stack
-        into ONE jitted core call; each session then overlap-adds its own
-        slice back into its carried state.  Returns the number of jitted
-        core calls issued (the bench asserts <= 1 per tick per graph for
+        Ready blocks of sessions with matching shapes stack into ONE
+        jitted core call — same-graph always, and ACROSS graphs when the
+        scheduler's cross-graph batching is on and the graphs' streamed
+        core programs fingerprint identically AND their registered
+        params compare equal (the core call threads one shared params
+        pytree); each session then overlap-adds its own slice back into
+        its carried state.  Returns the number of jitted core calls
+        issued (the bench asserts <= 1 per tick per graph for
         lock-stepped sessions)."""
         calls = 0
         _t0 = obs.now() if obs.ENABLED else 0
         # per-shard cost of THIS tick: shards run concurrently, so the
         # tick's wall-clock contribution is the max over shards.
         tick_costs: Dict[Optional[int], int] = {}
+        cross = (self.scheduler is not None and self.scheduler.cross_graph
+                 and len(self._sessions) > 1)
+        groups: Dict[Tuple, List[Tuple[str, "StreamSession", object,
+                                       jax.Array]]] = {}
         for name, sessions in self._sessions.items():
-            reg = self._graphs[name]
-            struct = reg.struct
-            groups: Dict[Tuple,
-                         List[Tuple["StreamSession", object,
-                                    jax.Array]]] = {}
+            struct = self._graphs[name].struct
             for sess in sessions:
                 spec = ready_spec(struct, sess.state, sess.block_frames,
                                   final=False)
                 if spec is None:
                     continue
                 block = take_block(sess.state, spec)
+                ident: Tuple = ("graph", name)
+                if cross:
+                    fp = self._stream_fp(name, spec.n_frames)
+                    if fp is not None:
+                        ident = ("fp", fp)
                 # device affinity is part of the stacking key: a stacked
                 # call only ever mixes sessions homed on the same shard,
                 # so no carried state migrates to serve a batch.
-                gkey = (spec.n_frames, block.shape, block.dtype.name,
-                        sess.device_index)
-                groups.setdefault(gkey, []).append((sess, spec, block))
-            for (n_frames, _, _, dev), members in groups.items():
+                gkey = (ident, spec.n_frames, block.shape,
+                        block.dtype.name, sess.device_index)
+                groups.setdefault(gkey, []).append((name, sess, spec,
+                                                    block))
+        for (ident, n_frames, _, _, dev), members in groups.items():
+            # params ride the stacked core call as ONE shared pytree, so
+            # a fingerprint group sub-partitions by params equality —
+            # fp-equal graphs with different weights never mix.
+            for sub in self._stream_params_split(members):
+                rep_name = sub[0][0]
+                reg = self._graphs[rep_name]
+                struct = reg.struct
+                gnames = sorted({n for n, *_ in sub})
                 _tc = obs.now() if obs.ENABLED else 0
-                stacked = jnp.stack([b for _, _, b in members])
+                stacked = jnp.stack([b for *_, b in sub])
                 if self.mesh is not None and dev is not None:
                     stacked = jax.device_put(stacked,
                                              self.mesh.device_for(dev))
                 res = struct.core_jit(n_frames, self.fuse, self.backend)(
                     stacked, reg.params)
                 calls += 1
+                if len(gnames) > 1:
+                    self.scheduler.stats["cross_graph_batches"] += 1
+                    if obs.ENABLED:
+                        obs.metrics().counter(
+                            "sched.cross_graph_batches").inc()
                 if obs.ENABLED:
-                    obs.complete(f"graph/{name}", "stream_core", _tc,
-                                 n_frames=n_frames, width=len(members),
-                                 device=dev)
+                    obs.complete(f"graph/{rep_name}", "stream_core", _tc,
+                                 n_frames=n_frames, width=len(sub),
+                                 device=dev, graphs=gnames)
                     obs.metrics().histogram(
-                        "service.stream_stack_width").record(len(members))
-                cost = self._stream_cost(name, n_frames) * len(members)
+                        "service.stream_stack_width").record(len(sub))
+                cost = sum(self._stream_cost(n, n_frames)
+                           for n, *_ in sub)
                 self.est_cycles += cost
                 tick_costs[dev] = tick_costs.get(dev, 0) + cost
                 if self.router is not None and dev is not None:
                     self.router.charge(dev, cost)
-                for i, (sess, spec, block) in enumerate(members):
+                for i, (name, sess, spec, block) in enumerate(sub):
+                    sreg = self._graphs[name]
+                    sstruct = sreg.struct
+                    # fp-equal programs share stage/output names (the
+                    # digest pins them), so rep's result dict keys are
+                    # valid for every member's own struct.
                     if isinstance(res, dict):
-                        frames = res[struct.deframer][i]
+                        frames = res[sstruct.deframer][i]
                         taps = {t: tap_rows(res[t][i], spec,
                                             block.ndim - 1)
-                                for t in struct.frame_outputs}
+                                for t in sstruct.frame_outputs}
                     else:
                         frames, taps = res[i], {}
-                    st, piece = commit_frames(struct, sess.state, spec,
+                    st, piece = commit_frames(sstruct, sess.state, spec,
                                               frames, final=False)
-                    st, out = finalize_piece(struct, st, piece,
+                    st, out = finalize_piece(sstruct, st, piece,
                                              final=False,
-                                             params=reg.params)
+                                             params=sreg.params)
                     sess.state = st
-                    if struct.single:
+                    if sstruct.single:
                         sess._push_out(out)
                     else:
                         merged = dict(out) if isinstance(out, dict) else {}
@@ -734,6 +956,38 @@ class SignalService:
                          core_calls=calls,
                          sessions=self.stream_sessions())
         return calls
+
+    def _stream_fp(self, name: str, n_frames: int) -> Optional[Tuple]:
+        """Fingerprint-keyed cache key of ``name``'s streamed CORE
+        program at ``n_frames`` — the stream-side analog of
+        :meth:`exec_fingerprint` (``None`` when the core cannot be
+        fingerprinted: such sessions stack per graph name, as before).
+        Cached until re-registration (the ``//core`` rows purge with
+        the cost cache)."""
+        key = (f"{name}//core", n_frames)
+        if key not in self._fp_cache:
+            from ..signal.backends import program_cache_key
+            struct = self._graphs[name].struct
+            compiled = struct.core_graph(n_frames, self.fuse,
+                                         self.backend)
+            self._fp_cache[key] = program_cache_key(self.backend,
+                                                    compiled.program)
+        return self._fp_cache[key]
+
+    def _stream_params_split(self, members):
+        """Partition one stream stacking group by registered-params
+        equality (identity fast-path first) — each partition shares one
+        params pytree, preserving per-member order."""
+        parts: List[Tuple[object, List]] = []
+        for m in members:
+            p = self._graphs[m[0]].params
+            for cp, sub in parts:
+                if _params_equal(cp, p):
+                    sub.append(m)
+                    break
+            else:
+                parts.append((p, [m]))
+        return [sub for _, sub in parts]
 
     def _stream_cost(self, name: str, n_frames: int) -> int:
         """Perf-model cycles for one session's core block (cached)."""
@@ -1136,6 +1390,11 @@ class TickPlan:
     admit: bool = False                        # mid-flight LLM admission
     dsp_key: Optional[Tuple[str, int]] = None  # group to run (None: FIFO)
     dsp_order: str = "fifo"                    # "fifo" | "deadline"
+    dsp_sched: bool = False                    # prefer SigSched dispatch
+    # dsp_sched=True: when the service carries a SigSched, let IT pick
+    # the wave (cross-graph batching, bounded deferral, row budgets) —
+    # dsp_key/dsp_order stay filled as the fallback for services built
+    # with scheduler=False (and for tests driving make_pick directly).
 
     def __post_init__(self):
         if self.run_streams is None:           # default: ride with DSP
@@ -1198,7 +1457,8 @@ class LatencyAwarePolicy(SchedulePolicy):
             # DSP-only tick must not perform (tick() honors admit only
             # when run_llm is set, for the same reason).
             return TickPlan(run_llm=False, run_dsp=True, admit=False,
-                            dsp_key=best.key, dsp_order="deadline")
+                            dsp_key=best.key, dsp_order="deadline",
+                            dsp_sched=True)
         if llm_dl < dsp_dl:
             # streaming blocks still ride along: real-time connections
             # can never starve behind deadline-bearing token traffic.
@@ -1206,7 +1466,8 @@ class LatencyAwarePolicy(SchedulePolicy):
                             admit=True)
         # deadline tie: round-robin the tick so neither class starves.
         return TickPlan(run_llm=True, run_dsp=True, admit=True,
-                        dsp_key=best.key, dsp_order="deadline")
+                        dsp_key=best.key, dsp_order="deadline",
+                        dsp_sched=True)
 
 
 class CostBalancedPolicy(SchedulePolicy):
@@ -1367,7 +1628,8 @@ class CoScheduler:
         before = self.signals.est_cycles
         if plan.run_dsp:
             pick = None
-            if plan.dsp_key is not None:
+            if plan.dsp_key is not None and not (
+                    plan.dsp_sched and self.signals.scheduler is not None):
                 pick = self.signals.make_pick(plan.dsp_key, plan.dsp_order)
             self.dsp_results.update(self.signals.step(pick=pick))
         if plan.run_streams:

@@ -80,7 +80,8 @@ from ..core.fabric import (ShufflePlan, apply_plan, compose_into_einsum,
 __all__ = ["ExecBackend", "ReferenceBackend", "PallasBackend",
            "PrecisionPolicy", "BoundProgram", "StepRoute",
            "register_backend", "get_backend", "available_backends",
-           "group_plan", "iter_step_groups", "classify_einsum"]
+           "group_plan", "iter_step_groups", "classify_einsum",
+           "bind_cached", "program_cache_key"]
 
 
 # --------------------------------------------------------------------------
@@ -362,6 +363,12 @@ class ExecBackend:
 
     name = "base"
     differentiable = False
+    # bindings are shared through the fingerprint-keyed compile cache
+    # (bind_cached) unless a backend opts out — backends carrying
+    # per-instance mutable state (the calibration observer writes into
+    # its own CalibrationRecord) must bind privately or a second
+    # instance would execute through the first's closures.
+    bind_cacheable = True
 
     @property
     def cache_key(self) -> Tuple:
@@ -378,6 +385,45 @@ class ExecBackend:
             stage_fns[st.name] = fn
             routes.extend(rs)
         return BoundProgram(self, program, stage_fns, routes)
+
+
+def program_cache_key(backend: ExecBackend,
+                      program: ExecProgram) -> Optional[Tuple]:
+    """The fingerprint-keyed compile-cache key for one (backend,
+    program) pair, or ``None`` when the program has no fingerprint
+    (opaque lambda closure — never shared).  Combines the program's
+    structural digest with the backend's ``cache_key`` (name,
+    interpret mode, precision-policy token), so two structurally
+    identical programs share a slot only under the same lowering
+    configuration."""
+    fp = program.fingerprint()
+    if fp is None:
+        return None
+    return (backend.cache_key, fp)
+
+
+def bind_cached(backend: ExecBackend,
+                program: ExecProgram) -> BoundProgram:
+    """Bind through the fingerprint-keyed compile cache.
+
+    Two compiles whose programs carry the same structural fingerprint
+    under the same backend configuration share ONE :class:`BoundProgram`
+    — one stage-lowering pass, one set of kernel closures — instead of
+    re-lowering per registered graph name.  The shared bound program is
+    a pure function of the fingerprint (lambda content included), so
+    executing graph B through graph A's binding is exact.  Programs
+    without a fingerprint bind privately, as before.  Hits/misses count
+    in the plan-cache stats under the backend's name
+    (:func:`repro.signal.plan_cache_info`)."""
+    if not backend.bind_cacheable:
+        return backend.bind(program)
+    key = program_cache_key(backend, program)
+    if key is None:
+        return backend.bind(program)
+    from . import plan_cache_get
+    return plan_cache_get("bound_program", key,
+                          lambda: backend.bind(program),
+                          backend=backend.name)
 
 
 class ReferenceBackend(ExecBackend):

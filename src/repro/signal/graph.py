@@ -1270,7 +1270,13 @@ class CompiledSignalGraph:
                                    self.out_types, self.single,
                                    self.fuse_level)
         self.backend = get_backend(backend)
-        self._exec = self.backend.bind(self.program)
+        # fingerprint-keyed bind: structurally identical programs under
+        # one backend configuration share a single lowering
+        # (backends.bind_cached) — repeated compiles of the same
+        # pipeline shape, and different registered graphs that lower to
+        # the same core program, reuse one BoundProgram.
+        from .backends import bind_cached
+        self._exec = bind_cached(self.backend, self.program)
 
     def with_backend(self, backend) -> "CompiledSignalGraph":
         """The same lowered program bound to another execution backend

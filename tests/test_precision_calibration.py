@@ -106,11 +106,17 @@ def test_calibrate_is_bit_transparent():
 
 def test_calibrate_leaves_plan_cache_clean():
     """Observer lowering must not pollute the kernel plan caches with an
-    'observe' backend label (the cache-label contract other tests pin)."""
+    'observe' backend label (the cache-label contract other tests pin).
+    The observer binds privately (``bind_cacheable=False`` — its
+    closures write into one calibration's record); the fp32 baseline
+    rebind may warm the SHARED fingerprint-keyed reference bind cache —
+    that binding is pure and exact, so a 'reference' entry is fine."""
     clear_plan_caches()
     c = _fig9q(LEN).compile(LEN, backend="pallas")
     pz.calibrate(c, _batches(2, LEN))
-    assert set(plan_cache_info()["by_backend"]) <= {"pallas", "functional"}
+    labels = set(plan_cache_info()["by_backend"])
+    assert "observe" not in labels
+    assert labels <= {"pallas", "functional", "reference"}
 
 
 def test_calibrate_validates_batches():

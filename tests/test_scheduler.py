@@ -1,0 +1,364 @@
+"""SigSched dispatch: bit-identity under every scheduling transform
+(split waves, cross-graph batching, per-row params), deadline-aware
+picking (EDF preemption, slack deferral, anti-starvation), and a random
+request-mix sweep against unscheduled execution.
+
+The invariant under test everywhere: scheduling changes WHEN a request
+executes, never WHAT it computes — every scheduled result must equal
+the request's own graph compiled offline at its exact length (the stft
+stage class here is bit-identical under padding/masking; see
+tests/test_signal_bucketing.py for the FIR im2col caveat)."""
+
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from _hypothesis_compat import given, settings, st
+from repro.serving import SignalRequest, SignalService, SigSched
+
+FRAME, HOP = 64, 32
+
+
+def _mask(p, z):
+    return jax.nn.sigmoid(jnp.abs(z) - 1.0)
+
+
+def _wmask(p, z):
+    return jax.nn.sigmoid(jnp.abs(z) - p["w"])
+
+
+def _stft_graph(name, fn=_mask, init=None):
+    from repro.signal import SignalGraph
+    g = SignalGraph(name)
+    g.stft("spec", frame=FRAME, hop=HOP)
+    g.dnn("mask", "spec", fn=fn, **({"init": init} if init else {}))
+    g.mul("enh", "spec", "mask")
+    g.istft("out", "enh", hop=HOP)
+    g.outputs("out")
+    return g
+
+
+_REF_CACHE = {}
+
+
+def _val(res):
+    """Unwrap the single-output SigProgram dict the service returns."""
+    return res["out"] if isinstance(res, dict) else res
+
+
+def _offline(graph, samples, params=None, tag=None):
+    """The request's own graph at its exact length — the ground truth
+    every scheduled path must reproduce."""
+    key = (tag or graph.name, int(samples.shape[-1]))
+    if key not in _REF_CACHE:
+        _REF_CACHE[key] = graph.compile(int(samples.shape[-1])).jit()
+    out = _REF_CACHE[key](jnp.asarray(samples), params)
+    return np.asarray(out["out"] if isinstance(out, dict) else out)
+
+
+def _signals(rng, n, lengths=(192, 256, 320)):
+    return [rng.standard_normal(
+        lengths[i % len(lengths)]).astype(np.float32) for i in range(n)]
+
+
+# --------------------------------------------------------------------------
+# Legacy equivalence: the default scheduler with no deadlines is the
+# byte-for-byte FIFO tick.
+# --------------------------------------------------------------------------
+
+def test_default_scheduler_matches_legacy_fifo_stats():
+    rng = np.random.default_rng(0)
+    sigs = _signals(rng, 5)
+    reqs = lambda: [SignalRequest(rid=i, graph="g", samples=s)
+                    for i, s in enumerate(sigs)]
+    on = SignalService(batch_size=3)
+    on.register("g", _stft_graph("g"))
+    off = SignalService(batch_size=3, scheduler=False)
+    off.register("g", _stft_graph("g"))
+    res_on, res_off = on.serve(reqs()), off.serve(reqs())
+    for k in ("batches", "bucketed", "exact", "compiles"):
+        assert on.stats[k] == off.stats[k], k
+    for i in res_off:
+        np.testing.assert_array_equal(_val(res_on[i]), _val(res_off[i]))
+
+
+# --------------------------------------------------------------------------
+# Preemptible waves: split execution is bit-identical to unsplit.
+# --------------------------------------------------------------------------
+
+def test_split_waves_bit_identical_to_unsplit():
+    rng = np.random.default_rng(1)
+    sigs = _signals(rng, 6)
+    svc = SignalService(batch_size=8, scheduler={"row_budget": 2})
+    svc.register("g", _stft_graph("g"))
+    res = svc.serve([SignalRequest(rid=i, graph="g", samples=s)
+                     for i, s in enumerate(sigs)])
+    assert svc.scheduler.stats["wave_splits"] >= 1
+    assert svc.scheduler.backlog_rows() == 0
+    g = _stft_graph("g")
+    for i, s in enumerate(sigs):
+        np.testing.assert_array_equal(_val(res[i]), _offline(g, s))
+
+
+def test_split_wave_counts_pending_until_drained():
+    rng = np.random.default_rng(2)
+    sigs = [rng.standard_normal(256).astype(np.float32) for _ in range(5)]
+    svc = SignalService(batch_size=8, scheduler={"row_budget": 2})
+    svc.register("g", _stft_graph("g"))
+    for i, s in enumerate(sigs):
+        svc.submit(SignalRequest(rid=i, graph="g", samples=s))
+    first = svc.step()
+    # the whole wave is claimed; two rows ran, three are backlog
+    assert len(first) == 2
+    assert svc.scheduler.backlog_rows() == 3
+    assert svc.pending() == 3
+
+
+# --------------------------------------------------------------------------
+# Cross-graph batching: fingerprint-equal graphs share one wave.
+# --------------------------------------------------------------------------
+
+def test_cross_graph_batching_bit_identical():
+    rng = np.random.default_rng(3)
+    sigs = _signals(rng, 6, lengths=(256,))
+    def reqs():
+        return [SignalRequest(rid=i, graph=("a" if i % 2 else "b"),
+                              samples=s) for i, s in enumerate(sigs)]
+    on = SignalService(batch_size=8)
+    on.register("a", _stft_graph("a"))
+    on.register("b", _stft_graph("b"))
+    res = on.serve(reqs())
+    assert on.scheduler.stats["cross_graph_batches"] >= 1
+    assert on.stats["batches"] == 1          # ONE call for both graphs
+    off = SignalService(batch_size=8, scheduler=False)
+    off.register("a", _stft_graph("a"))
+    off.register("b", _stft_graph("b"))
+    ref = off.serve(reqs())
+    assert off.stats["batches"] == 2         # legacy: one call per graph
+    for i in ref:
+        np.testing.assert_array_equal(_val(res[i]), _val(ref[i]))
+
+
+def test_cross_graph_disabled_keeps_per_graph_waves():
+    rng = np.random.default_rng(4)
+    sigs = _signals(rng, 4, lengths=(256,))
+    svc = SignalService(batch_size=8, scheduler={"cross_graph": False})
+    svc.register("a", _stft_graph("a"))
+    svc.register("b", _stft_graph("b"))
+    svc.serve([SignalRequest(rid=i, graph=("a" if i % 2 else "b"),
+                             samples=s) for i, s in enumerate(sigs)])
+    assert svc.scheduler.stats["cross_graph_batches"] == 0
+    assert svc.stats["batches"] == 2
+
+
+def test_cross_graph_different_params_per_row_bit_identical():
+    """fp-equal graphs whose registered params DIFFER still share one
+    wave: the per-row vmap path threads each row its own params."""
+    rng = np.random.default_rng(5)
+    pa = {"mask": {"w": np.float32(0.5)}}
+    pb = {"mask": {"w": np.float32(2.0)}}
+    sigs = _signals(rng, 4, lengths=(256,))
+    svc = SignalService(batch_size=8)
+    svc.register("a", _stft_graph("a", fn=_wmask,
+                                  init={"w": np.float32(1.0)}), params=pa)
+    svc.register("b", _stft_graph("b", fn=_wmask,
+                                  init={"w": np.float32(1.0)}), params=pb)
+    res = svc.serve([SignalRequest(rid=i, graph=("a" if i % 2 else "b"),
+                                   samples=s) for i, s in enumerate(sigs)])
+    assert (svc.scheduler.stats["cross_graph_batches"] >= 1
+            or svc.stats["param_splits"] >= 1)
+    ga = _stft_graph("a", fn=_wmask, init={"w": np.float32(1.0)})
+    gb = _stft_graph("b", fn=_wmask, init={"w": np.float32(1.0)})
+    for i, s in enumerate(sigs):
+        ref = _offline(ga if i % 2 else gb, s,
+                       params=(pa if i % 2 else pb),
+                       tag=f"w{'a' if i % 2 else 'b'}")
+        np.testing.assert_array_equal(_val(res[i]), ref)
+
+
+def test_structurally_different_graphs_never_mix():
+    rng = np.random.default_rng(6)
+    from repro.signal import SignalGraph
+    g2 = SignalGraph("other")
+    g2.stft("spec", frame=FRAME, hop=HOP)
+    g2.magnitude("out", "spec", onesided=True)
+    g2.outputs("out")
+    svc = SignalService(batch_size=8)
+    svc.register("a", _stft_graph("a"))
+    svc.register("other", g2)
+    sigs = _signals(rng, 4, lengths=(256,))
+    svc.serve([SignalRequest(rid=i, graph=("a" if i % 2 else "other"),
+                             samples=s) for i, s in enumerate(sigs)])
+    assert svc.scheduler.stats["cross_graph_batches"] == 0
+    assert svc.stats["batches"] == 2
+
+
+# --------------------------------------------------------------------------
+# Deadline-aware picking
+# --------------------------------------------------------------------------
+
+def test_tight_deadline_preempts_older_bulk_group():
+    """EDF: a deadline-critical newcomer runs before an older, larger
+    inf-deadline group (the legacy FIFO tick would head-of-line block)."""
+    rng = np.random.default_rng(7)
+    svc = SignalService(batch_size=8)
+    svc.register("g", _stft_graph("g"))
+    for i in range(4):
+        svc.submit(SignalRequest(
+            rid=i, graph="g",
+            samples=rng.standard_normal(512).astype(np.float32)))
+    svc.submit(SignalRequest(
+        rid=99, graph="g", deadline=1.0,
+        samples=rng.standard_normal(256).astype(np.float32)))
+    first = svc.step()
+    assert list(first) == [99]
+    assert svc.pending() == 4
+
+
+def test_slack_rich_group_defers_one_tick_to_fill():
+    """An under-full group whose every member has slack far beyond its
+    wave cost waits a tick; a newcomer then joins the SAME wave."""
+    rng = np.random.default_rng(8)
+    svc = SignalService(batch_size=8)
+    svc.register("g", _stft_graph("g"))
+    svc.submit(SignalRequest(
+        rid=0, graph="g", deadline=1e15,
+        samples=rng.standard_normal(256).astype(np.float32)))
+    assert svc.step() == {}                       # deferred
+    assert svc.scheduler.stats["deferrals"] == 1
+    svc.submit(SignalRequest(
+        rid=1, graph="g", deadline=1e15,
+        samples=rng.standard_normal(256).astype(np.float32)))
+    res = svc.step()                              # max_defers=1: runs now
+    assert sorted(res) == [0, 1]
+    assert svc.stats["batches"] == 1              # one fuller wave
+
+
+def test_inf_deadline_group_drains_under_sustained_finite_load():
+    """Anti-starvation regression (the latency_aware EDF tie-break bug):
+    a deadline-less group must still run while finite-deadline traffic
+    arrives every tick."""
+    rng = np.random.default_rng(9)
+    svc = SignalService(batch_size=1)
+    svc.register("g", _stft_graph("g"))
+    svc.submit(SignalRequest(
+        rid=1000, graph="g",
+        samples=rng.standard_normal(512).astype(np.float32)))
+    served_inf_after = None
+    results = {}
+    for tick in range(60):
+        svc.submit(SignalRequest(
+            rid=tick, graph="g", deadline=float(svc.est_cycles),
+            samples=rng.standard_normal(256).astype(np.float32)))
+        results.update(svc.step())
+        if 1000 in results:
+            served_inf_after = tick
+            break
+    assert served_inf_after is not None, "deadline=inf group starved"
+    sched = svc.scheduler
+    assert served_inf_after <= 6 * sched.starvation_ticks
+    assert sched.stats["starvation_picks"] >= 1
+
+
+# --------------------------------------------------------------------------
+# Random request-mix sweep: every mix, scheduled == offline
+# --------------------------------------------------------------------------
+
+@settings(max_examples=8, deadline=None)
+@given(st.data())
+def test_random_mix_matches_offline(data):
+    n = data.draw(st.integers(2, 7), label="n")
+    seed = data.draw(st.integers(0, 2 ** 16), label="seed")
+    budget = data.draw(st.sampled_from([None, 1, 2, 3]), label="budget")
+    rng = np.random.default_rng(seed)
+    svc = SignalService(batch_size=4, scheduler={"row_budget": budget})
+    svc.register("a", _stft_graph("a"))
+    svc.register("b", _stft_graph("b"))
+    reqs = []
+    for i in range(n):
+        length = int(rng.choice([192, 256, 320]))
+        deadline = math.inf if rng.random() < 0.5 \
+            else float(rng.integers(0, 10_000_000))
+        reqs.append(SignalRequest(
+            rid=i, graph=("a" if rng.random() < 0.5 else "b"),
+            deadline=deadline,
+            samples=rng.standard_normal(length).astype(np.float32)))
+    res = svc.serve(reqs)
+    assert sorted(res) == list(range(n))
+    assert svc.scheduler.backlog_rows() == 0
+    g = _stft_graph("ref")
+    for r in reqs:
+        np.testing.assert_array_equal(_val(res[r.rid]),
+                                      _offline(g, r.samples, tag="ref"))
+
+
+# --------------------------------------------------------------------------
+# Streaming: cross-graph session stacking
+# --------------------------------------------------------------------------
+
+def test_stream_cross_graph_sessions_stack_into_one_core_call():
+    rng = np.random.default_rng(10)
+    svc = SignalService(batch_size=4, block_frames=4)
+    svc.register("a", _stft_graph("a"))
+    svc.register("b", _stft_graph("b"))
+    sa, sb = svc.open_stream("a"), svc.open_stream("b")
+    x = rng.standard_normal(512).astype(np.float32)
+    y = rng.standard_normal(512).astype(np.float32)
+    sa.feed(jnp.asarray(x))
+    sb.feed(jnp.asarray(y))
+    calls = svc.stream_step()
+    assert calls == 1                    # ONE core call for both graphs
+    assert svc.scheduler.stats["cross_graph_batches"] >= 1
+    outa = np.concatenate([_val(sa.read()), _val(sa.close())])
+    outb = np.concatenate([_val(sb.read()), _val(sb.close())])
+    np.testing.assert_array_equal(outa, _offline(_stft_graph("a"), x))
+    np.testing.assert_array_equal(outb, _offline(_stft_graph("b"), y))
+
+
+def test_reregister_purges_claimed_wave_rows():
+    rng = np.random.default_rng(11)
+    svc = SignalService(batch_size=8, scheduler={"row_budget": 1})
+    svc.register("g", _stft_graph("g"))
+    for i in range(3):
+        svc.submit(SignalRequest(
+            rid=i, graph="g",
+            samples=rng.standard_normal(256).astype(np.float32)))
+    svc.step()                              # claims the wave, runs 1 row
+    assert svc.scheduler.backlog_rows() == 2
+    svc.register("g", _stft_graph("g"))     # replacement drops backlog
+    assert svc.scheduler.backlog_rows() == 0
+    assert svc.pending() == 0
+    assert svc.stats["dropped"] == 2
+
+
+def test_promotion_moves_each_row_at_most_once_per_tick():
+    """Regression: a slack-rich mover offered to TWO viable larger
+    target groups in the same tick must move exactly once — the second
+    target used to re-remove it from its (already emptied) source group
+    and crash the dispatch with ValueError."""
+    rng = np.random.default_rng(12)
+    svc = SignalService(batch_size=8, scheduler=True)
+    svc.register("a", _stft_graph("a"))
+    sigs, deadlines = [], []
+    for i, (n, dl) in enumerate([(500, math.inf), (500, math.inf),
+                                 (500, math.inf), (200, math.inf),
+                                 (200, math.inf), (80, 1e12)]):
+        x = rng.standard_normal(n).astype(np.float32)
+        sigs.append(x)
+        deadlines.append(dl)
+        svc.submit(SignalRequest(rid=i, graph="a", samples=x, deadline=dl))
+    # tick until drained: the 80-sample finite-deadline request sits
+    # alone in bucket 128 with both the 256 and 512 groups fuller.
+    done = {}
+    for _ in range(20):
+        done.update(svc.step())
+        if len(done) == len(sigs):
+            break
+    assert sorted(done) == list(range(len(sigs)))
+    g = _stft_graph("a")
+    for i, x in enumerate(sigs):
+        np.testing.assert_array_equal(_val(done[i]), _offline(g, x))
+    assert svc.scheduler.stats["bucket_promotions"] >= 1

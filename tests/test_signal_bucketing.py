@@ -77,6 +77,44 @@ def test_bucket_respects_graph_min_length():
     assert svc2.bucket_for("g", FRAME) == FRAME  # pow2 path, == frame
 
 
+def test_bucket_overflow_is_counted_and_still_exact():
+    """A request longer than the largest pinned bucket falls through to
+    exact-length execution — no longer silently: it counts once per
+    request in stats["bucket_overflow"] (group_key caches the verdict,
+    so the execution path never re-asks and double-counts) and emits the
+    service.bucket_overflow obs counter.  The overflow request still
+    computes the right result."""
+    from repro import obs
+    svc = _svc(_stft_istft, buckets=[128, 256])
+    rng = np.random.default_rng(0)
+    long = rng.standard_normal(700).astype(np.float32)
+    short = rng.standard_normal(200).astype(np.float32)
+    obs.reset()
+    obs.enable()
+    try:
+        res = svc.serve([
+            SignalRequest(rid=0, graph="g", samples=long),
+            SignalRequest(rid=1, graph="g", samples=short)])
+        counters = obs.metrics().snapshot()["counters"]
+    finally:
+        obs.reset()
+    assert svc.stats["bucket_overflow"] == 1
+    assert svc.stats["exact"] == 1 and svc.stats["bucketed"] == 1
+    assert counters.get("service.bucket_overflow") == 1
+    ref = _stft_istft().compile(700).jit()
+    out = res[0]["out"] if isinstance(res[0], dict) else res[0]
+    refv = ref(jnp.asarray(long), None)
+    np.testing.assert_array_equal(
+        out, np.asarray(refv["out"] if isinstance(refv, dict) else refv))
+
+
+def test_bucket_overflow_not_counted_when_admissible():
+    svc = _svc(_stft_istft, buckets=[128, 256, 512])
+    for length in (100, 128, 200, 512):
+        svc.bucket_for("g", length)
+    assert svc.stats["bucket_overflow"] == 0
+
+
 # --------------------------------------------------------------------------
 # Masked execution == unpadded execution, per supported stage class
 # --------------------------------------------------------------------------

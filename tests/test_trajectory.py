@@ -1,0 +1,64 @@
+"""benchmarks/trajectory.py: append/compare plus the cross-PR
+time-series table (`timeseries` subcommand) added for the SigSched
+sweep."""
+
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+from benchmarks.trajectory import (append_entry, compare, format_timeseries,
+                                   load_trajectory, make_entry, timeseries)
+
+
+def _write(root, pr, bench, metrics):
+    append_entry(os.path.join(root, f"BENCH_PR{pr}.json"),
+                 make_entry(pr, bench, metrics))
+
+
+def test_timeseries_rows_in_pr_order_with_schema_drift(tmp_path):
+    root = str(tmp_path)
+    _write(root, 8, "svc", {"sched_sweep": [
+        {"p95_deadline_cycles": 100.0}, {"p95_deadline_cycles": 40.0}]})
+    _write(root, 6, "svc", {})                      # pre-sched schema
+    _write(root, 7, "other", {"x": 1})
+    rows = timeseries(load_trajectory(root), "svc",
+                      ["sched_sweep.1.p95_deadline_cycles"])
+    assert [r["pr"] for r in rows] == [6, 8]
+    assert rows[0]["sched_sweep.1.p95_deadline_cycles"] is None
+    assert rows[1]["sched_sweep.1.p95_deadline_cycles"] == 40.0
+    table = format_timeseries(rows, ["sched_sweep.1.p95_deadline_cycles"])
+    lines = table.splitlines()
+    assert lines[0].split() == ["pr", "sched_sweep.1.p95_deadline_cycles"]
+    assert lines[1].split() == ["6", "-"]
+    assert lines[2].split() == ["8", "40"]
+
+
+def test_timeseries_cli(tmp_path, capsys):
+    from benchmarks.trajectory import main
+    _write(str(tmp_path), 9, "svc", {"a": {"b": 3.5}})
+    main(["timeseries", "svc", "a.b", "--root", str(tmp_path)])
+    out = capsys.readouterr().out
+    assert "3.5" in out and "a.b" in out
+
+
+def test_append_replaces_same_pr_bench(tmp_path):
+    path = str(tmp_path / "BENCH_PR9.json")
+    append_entry(path, make_entry(9, "svc", {"v": 1}))
+    entries = append_entry(path, make_entry(9, "svc", {"v": 2}))
+    assert len(entries) == 1 and entries[0]["metrics"]["v"] == 2
+    with open(path) as f:
+        assert json.load(f)[0]["metrics"]["v"] == 2
+
+
+def test_compare_flags_regression_direction():
+    old = make_entry(9, "svc", {"p95": 100.0})
+    new = make_entry(10, "svc", {"p95": 150.0, "extra": 1})
+    (rec,) = compare(old, new, ["p95"], tolerance=0.10)
+    assert rec["regressed"] and rec["ratio"] == 1.5
+    (rec,) = compare(old, new, ["p95"], tolerance=0.10,
+                     higher_is_better=True)
+    assert not rec["regressed"]
+    (rec,) = compare(old, new, ["missing.key"])
+    assert rec.get("missing") and not rec["regressed"]
